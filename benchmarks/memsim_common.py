@@ -1,0 +1,46 @@
+"""Shared harness plumbing for the MemorySim paper benchmarks."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import MemSimConfig, SimResult, Trace, simulate, simulate_ideal
+from repro.traces import BENCHMARKS
+
+NUM_CYCLES = 100_000  # the paper's trace horizon
+
+
+@functools.lru_cache(maxsize=None)
+def trace_for(name: str, overload: bool = False) -> Trace:
+    """Default intensity reproduces Table 2 magnitudes; ``overload=True``
+    is the paper's Fig 6-9 regime (sustained arrivals above the ~0.27
+    req/cycle service capacity -> climbing latency, queue-coupled waits,
+    small-queue starvation)."""
+    if overload and name == "conv2d":
+        return BENCHMARKS[name](burst_gap=18)
+    if overload:
+        return BENCHMARKS[name]()
+    return BENCHMARKS[name]()
+
+
+_run_cache: Dict[Tuple[str, int], Tuple[SimResult, np.ndarray, float]] = {}
+
+
+def run_pair(bench: str, queue_size: int, overload: bool = False,
+             num_cycles: int = NUM_CYCLES
+             ) -> Tuple[SimResult, np.ndarray, float]:
+    """(RTL result, ideal completion cycles, wall seconds) — cached."""
+    key = (bench, queue_size, overload, num_cycles)
+    if key not in _run_cache:
+        cfg = MemSimConfig(queue_size=queue_size)
+        tr = trace_for(bench, overload)
+        t0 = time.time()
+        res = simulate(cfg, tr, num_cycles=num_cycles)
+        ideal = simulate_ideal(cfg, tr)
+        wall = time.time() - t0
+        _run_cache[key] = (res, np.asarray(ideal.t_complete), wall)
+    return _run_cache[key]

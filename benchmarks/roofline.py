@@ -1,0 +1,110 @@
+"""Roofline table: three terms per (arch x shape) from dry-run + analytic.
+
+Reads the dry-run JSONL records (collective bytes parsed from compiled
+HLO, memory analysis, raw cost_analysis) and combines them with the
+analytic executed-FLOPs/HBM-bytes model (``repro.perfmodel.analytic``; the
+raw cost_analysis FLOPs undercount scanned bodies — see module docstring).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline --records results/dryrun_single.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, get_config
+from repro.launch.specs import SHAPES, shape_skips
+from repro.perfmodel.analytic import cell_cost, roofline_terms
+
+
+def load_records(paths: List[str]) -> Dict[tuple, dict]:
+    recs: Dict[tuple, dict] = {}
+    for path in paths:
+        try:
+            with open(path) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if r.get("status") == "ok":
+                        recs[(r["arch"], r["shape"], r["mesh"])] = r
+        except FileNotFoundError:
+            pass
+    return recs
+
+
+def build_table(recs: Dict[tuple, dict], mesh: str = "16x16",
+                devices: int = 256) -> List[dict]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            skip = shape_skips(cfg, shape)
+            if skip:
+                rows.append({"arch": arch, "shape": shape, "status": "skip",
+                             "reason": skip})
+                continue
+            rec = recs.get((arch, shape, mesh))
+            if rec is None:
+                rows.append({"arch": arch, "shape": shape, "status": "missing"})
+                continue
+            cost = cell_cost(cfg, shape, devices=devices)
+            coll = rec["collective_bytes"]["total"] / devices  # per device
+            terms = roofline_terms(cost, rec["collective_bytes"]["total"],
+                                   devices)
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "devices": devices,
+                "mem_per_dev_gb": rec["memory"]["per_device_total_gb"],
+                "raw_cost_flops": rec["flops_total"],
+                "raw_cost_bytes": rec["bytes_total"],
+                "collective_gb_total": rec["collective_bytes"]["total"] / 1e9,
+                **{k: v for k, v in terms.items()},
+            })
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def print_table(rows: List[dict]) -> None:
+    print("| arch | shape | compute | memory | collective | dominant "
+          "| useful | roofline-frac | mem/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"{r['status']}: {r.get('reason','')} | | | |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+              f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+              f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+              f"| {r['roofline_fraction']:.2%} | {r['mem_per_dev_gb']:.1f} GiB |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", nargs="+",
+                    default=["results/dryrun_single.jsonl",
+                             "results/dryrun_fix1.jsonl",
+                             "results/dryrun_fix2.jsonl"])
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    devices = 512 if args.mesh == "2x16x16" else 256
+    recs = load_records(args.records)
+    rows = build_table(recs, args.mesh, devices)
+    print_table(rows)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo contract, then
+the detailed tables. The roofline benchmark additionally requires dry-run
+records (results/*.jsonl) — it degrades to 'missing' rows without them.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.0f},{derived}")
+
+
+def bench_table2() -> None:
+    from benchmarks import table2
+
+    t0 = time.time()
+    rows = table2.run()
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    reads = sum(d.read_diff_avg for _, d, _ in rows) / len(rows)
+    writes = sum(d.write_diff_avg for _, d, _ in rows) / len(rows)
+    _row("table2_cycle_diffs", us,
+         f"read_diff={reads:.0f};write_diff={writes:.0f};paper=111/125")
+
+
+def bench_fig6() -> None:
+    from benchmarks import figures
+
+    t0 = time.time()
+    xs, means = figures.fig6_latency_profile()
+    us = (time.time() - t0) * 1e6
+    import numpy as np
+    v = means[~np.isnan(means)]
+    _row("fig6_latency_profile", us,
+         f"first5={v[:5].mean():.0f};last5={v[-5:].mean():.0f}")
+
+
+def bench_fig7() -> None:
+    from benchmarks import figures
+
+    t0 = time.time()
+    rows = figures.fig7_queue_sweep()
+    us = (time.time() - t0) * 1e6 / len(rows)
+    _row("fig7_queue_sweep", us,
+         f"lat(q=2)={rows[0]['mean']:.0f};lat(q=1024)={rows[-1]['mean']:.0f}")
+
+
+def bench_fig8() -> None:
+    from benchmarks import figures
+
+    t0 = time.time()
+    rows = figures.fig8_breakdown()
+    us = (time.time() - t0) * 1e6 / len(rows)
+    _row("fig8_breakdown", us,
+         f"reqqueue_struct_pct(q=2048)={rows[-1]['reqqueue_struct_pct']:.0f}")
+
+
+def bench_fig9() -> None:
+    from benchmarks import figures
+
+    t0 = time.time()
+    rows = figures.fig9_pareto()
+    us = (time.time() - t0) * 1e6 / len(rows)
+    _row("fig9_pareto", us,
+         f"done(q=2)={rows[0]['completed']};done(q=1024)={rows[-1]['completed']}")
+
+
+def bench_open_page() -> None:
+    """Beyond-paper: open-page (row caching) vs closed-page vs ideal."""
+    import numpy as np
+    from benchmarks.memsim_common import NUM_CYCLES, trace_for
+    from repro.core import MemSimConfig, simulate, simulate_ideal, stats
+
+    t0 = time.time()
+    tr = trace_for("conv2d")
+    ideal = simulate_ideal(MemSimConfig(queue_size=128), tr)
+    d_c = stats.cycle_diffs(
+        simulate(MemSimConfig(queue_size=128), tr, num_cycles=NUM_CYCLES),
+        np.asarray(ideal.t_complete))
+    d_o = stats.cycle_diffs(
+        simulate(MemSimConfig(queue_size=128, page_policy="open"), tr,
+                 num_cycles=NUM_CYCLES),
+        np.asarray(ideal.t_complete))
+    us = (time.time() - t0) * 1e6
+    _row("open_page_extension", us,
+         f"closed_read_diff={d_c.read_diff_avg:.0f};"
+         f"open_read_diff={d_o.read_diff_avg:.0f};"
+         f"gap_explained_by_policy={1 - d_o.read_diff_avg / max(d_c.read_diff_avg, 1e-9):.0%}")
+
+
+def bench_effective_bw() -> None:
+    from repro.perfmodel import effective_bw
+
+    t0 = time.time()
+    r = effective_bw.decode_efficiency("qwen3-14b", 1.8e9, 0.5e9)
+    us = (time.time() - t0) * 1e6
+    _row("memsim_effective_bw", us,
+         f"decode_bw_efficiency={r.efficiency:.2f};read_lat={r.read_latency_mean:.0f}")
+
+
+def bench_roofline() -> None:
+    from benchmarks import roofline
+
+    t0 = time.time()
+    recs = roofline.load_records(["results/dryrun_single.jsonl",
+                                  "results/dryrun_fix1.jsonl",
+                                  "results/dryrun_fix2.jsonl"])
+    rows = roofline.build_table(recs)
+    us = (time.time() - t0) * 1e6
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skip")
+    _row("roofline_cells", us, f"ok={ok};skip={skip};total={len(rows)}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_table2()
+    bench_fig6()
+    bench_fig7()
+    bench_fig8()
+    bench_fig9()
+    bench_open_page()
+    bench_effective_bw()
+    bench_roofline()
+    print()
+    from benchmarks import table2, figures
+    table2.main()
+    print()
+    figures.main()
+
+
+if __name__ == "__main__":
+    main()

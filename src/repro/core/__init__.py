@@ -1,0 +1,22 @@
+"""MemorySim core: RTL-level, timing-accurate DRAM simulation in JAX.
+
+The paper's primary contribution — the cycle-accurate memory subsystem
+simulator (controller, bank-scheduler FSMs, DRAM timing model) — plus the
+DRAMSim3-like open-page reference it is evaluated against.
+"""
+
+from repro.core.params import DEFAULT_CONFIG, MemSimConfig
+from repro.core.simulator import SimResult, Trace, simulate
+from repro.core.ideal import simulate_ideal, ideal_latencies
+from repro.core import stats
+
+__all__ = [
+    "DEFAULT_CONFIG",
+    "MemSimConfig",
+    "SimResult",
+    "Trace",
+    "simulate",
+    "simulate_ideal",
+    "ideal_latencies",
+    "stats",
+]

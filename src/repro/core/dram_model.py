@@ -1,0 +1,155 @@
+"""DRAM timing model (paper §5.5).
+
+The paper's timing model is a mirror FSM controlled by the bank scheduler:
+it holds each command in a timing-parameter state (tRCD, tRP, tRFC, ...)
+and acks on expiry, while also enforcing the *rank-level* constraints the
+scheduler cannot see locally (tRRDL, tFAW) plus column-bus turnarounds
+(tCCDL, tWTR, tRTW).
+
+Bank-level sequencing constraints (tRP before ACT, tRCD before RW) are
+enforced structurally by the closed-page FSM: each WAIT state's duration is
+the corresponding timing parameter, and the FSM cannot skip states — the
+same "correct by construction" property the paper claims for RTL.
+
+State layout is vectorized: one entry per flattened rank for rank-scoped
+registers, one per flattened bank for bank-scoped ones.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.params import (
+    CMD_ACT,
+    CMD_RD,
+    CMD_WR,
+    MemSimConfig,
+)
+
+_NEG = jnp.int32(-(1 << 20))  # "long ago" initializer for last-command times
+
+
+class TimingState(NamedTuple):
+    """Rank-scoped DRAM timing registers."""
+
+    last_act: Array    # [R] cycle of most recent ACTIVATE per rank (tRRDL)
+    act_win: Array     # [R, 4] cycles of the last four ACTIVATEs (tFAW)
+    last_rd: Array     # [R] most recent READ column command
+    last_wr: Array     # [R] most recent WRITE column command
+
+    @staticmethod
+    def make(cfg: MemSimConfig) -> "TimingState":
+        r = cfg.num_ranks
+        return TimingState(
+            last_act=jnp.full((r,), _NEG, jnp.int32),
+            act_win=jnp.full((r, 4), _NEG, jnp.int32),
+            last_rd=jnp.full((r,), _NEG, jnp.int32),
+            last_wr=jnp.full((r,), _NEG, jnp.int32),
+        )
+
+
+def bank_to_rank(cfg: MemSimConfig, bank_idx: Array) -> Array:
+    """Map flattened bank index -> flattened rank index.
+
+    Banks are flattened channel-major: ``bank = ((ch * R + rank) * BG + bg) * BA + ba``.
+    """
+    return bank_idx // cfg.banks_per_rank
+
+
+def check_issue(
+    cfg: MemSimConfig,
+    timing: TimingState,
+    cycle: Array,
+    cmd: Array,          # [B] int32 command each bank wants to issue
+    rank_of_bank: Array,  # [B] int32
+) -> Array:
+    """Per-bank legality of the command it is bidding, under rank constraints.
+
+    Returns bool[B]. Non-column, non-ACT commands (PRE/REF/SREF*) have no
+    rank-level constraint here — their bank-level sequencing is structural.
+    """
+    la = timing.last_act[rank_of_bank]           # [B]
+    aw = timing.act_win[rank_of_bank]            # [B, 4]
+    lr = timing.last_rd[rank_of_bank]
+    lw = timing.last_wr[rank_of_bank]
+
+    oldest_act = aw.min(axis=-1)
+    act_ok = ((cycle - la) >= cfg.tRRDL) & ((cycle - oldest_act) >= cfg.tFAW)
+    rd_ok = ((cycle - lr) >= cfg.tCCDL) & ((cycle - lw) >= cfg.tWTR)
+    wr_ok = ((cycle - lw) >= cfg.tCCDL) & ((cycle - lr) >= cfg.tRTW)
+
+    ok = jnp.ones_like(cmd, dtype=bool)
+    ok = jnp.where(cmd == CMD_ACT, act_ok, ok)
+    ok = jnp.where(cmd == CMD_RD, rd_ok, ok)
+    ok = jnp.where(cmd == CMD_WR, wr_ok, ok)
+    return ok
+
+
+def record_issue(
+    cfg: MemSimConfig,
+    timing: TimingState,
+    cycle: Array,
+    cmd: Array,        # scalar int32: the command granted this cycle (per channel
+    rank: Array,       # scalar int32 flattened rank of the granted bank
+    granted: Array,    # scalar bool
+) -> TimingState:
+    """Update rank registers after the arbiter grants one command."""
+    is_act = granted & (cmd == CMD_ACT)
+    is_rd = granted & (cmd == CMD_RD)
+    is_wr = granted & (cmd == CMD_WR)
+
+    last_act = jnp.where(
+        is_act, timing.last_act.at[rank].set(cycle), timing.last_act
+    )
+    # tFAW window: replace the oldest entry with the new ACT time.
+    win = timing.act_win[rank]
+    oldest_slot = jnp.argmin(win)
+    act_win = jnp.where(
+        is_act, timing.act_win.at[rank, oldest_slot].set(cycle), timing.act_win
+    )
+    last_rd = jnp.where(is_rd, timing.last_rd.at[rank].set(cycle), timing.last_rd)
+    last_wr = jnp.where(is_wr, timing.last_wr.at[rank].set(cycle), timing.last_wr)
+    return TimingState(last_act, act_win, last_rd, last_wr)
+
+
+def wait_duration(cfg: MemSimConfig, cmd: Array, is_write: Array) -> Array:
+    """Duration of the WAIT state entered after a command is issued.
+
+    ACT  -> tRCDRD / tRCDWR (activate-to-column delay, paper Table 1)
+    RD/WR-> tCL (data return; documented addition)
+    PRE  -> tRP
+    REF  -> tRFC
+    SREF_EXIT -> tXS
+    """
+    from repro.core.params import CMD_PRE, CMD_REF, CMD_SREF_ENTER, CMD_SREF_EXIT
+
+    dur = jnp.zeros_like(cmd)
+    act_dur = jnp.where(is_write, cfg.tRCDWR, cfg.tRCDRD)
+    dur = jnp.where(cmd == CMD_ACT, act_dur, dur)
+    dur = jnp.where((cmd == CMD_RD) | (cmd == CMD_WR), cfg.tCL, dur)
+    dur = jnp.where(cmd == CMD_PRE, cfg.tRP, dur)
+    dur = jnp.where(cmd == CMD_REF, cfg.tRFC, dur)
+    dur = jnp.where(cmd == CMD_SREF_ENTER, 1, dur)
+    dur = jnp.where(cmd == CMD_SREF_EXIT, cfg.tXS, dur)
+    return dur
+
+
+def decode_address(cfg: MemSimConfig, addr: Array) -> Tuple[Array, Array, Array]:
+    """Address -> (flat_bank, flat_rank, row), paper §5.2 fixed mapping.
+
+    Low bits: {channel? no — paper: remaining|rank|bankgroup|bank}. We extend
+    with channel above rank when channels > 1.
+    """
+    ba = addr & (cfg.banks_per_group - 1)
+    bg = (addr >> cfg.bank_bits) & (cfg.bankgroups - 1)
+    rk = (addr >> (cfg.bank_bits + cfg.bankgroup_bits)) & (cfg.ranks - 1)
+    ch = (addr >> (cfg.bank_bits + cfg.bankgroup_bits + cfg.rank_bits)) & (
+        cfg.channels - 1
+    )
+    flat_bank = ((ch * cfg.ranks + rk) * cfg.bankgroups + bg) * cfg.banks_per_group + ba
+    flat_rank = ch * cfg.ranks + rk
+    row = addr >> (cfg.addr_low_bits + cfg.column_bits)
+    return flat_bank.astype(jnp.int32), flat_rank.astype(jnp.int32), row.astype(jnp.int32)

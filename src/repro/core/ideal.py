@@ -1,0 +1,115 @@
+"""Ideal reference model — a DRAMSim3-like open-page software simulator.
+
+The paper evaluates MemorySim by differencing per-request cycle counts
+against DRAMSim3, and observes that the reference *always* runs an
+open-page policy (its closed-page configuration was inert). We reproduce
+that reference here: an event-driven, per-bank FCFS model with
+
+  * open-page row buffers: a row hit costs ``tCL + tCCDL``; a row miss
+    costs ``tRP + tRCD + tCL`` (precharge the open row, activate, column);
+    a bank with no open row costs ``tRCD + tCL``;
+  * periodic refresh: the bank blocks for ``tRFC`` every ``tREFI``;
+  * infinite queues — no reqQueue/bank-queue backpressure at all, which is
+    exactly the behavioural abstraction the paper critiques;
+  * bit-true data (reads return the latest prior write in trace order).
+
+Implemented as a ``lax.scan`` over time-sorted requests carrying per-bank
+(bank_free, open_row, next_refresh) — the discrete-event recurrence a
+software simulator like DRAMSim3 evaluates.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.dram_model import decode_address
+from repro.core.params import MemSimConfig
+from repro.core.simulator import Trace
+
+
+class IdealResult(NamedTuple):
+    t_complete: Array  # [N] completion cycle per request
+    rdata: Array       # [N] read data (0 for writes)
+
+
+class _Carry(NamedTuple):
+    bank_free: Array     # [B] cycle at which each bank is next available
+    open_row: Array      # [B] currently open row (-1 = closed)
+    next_refresh: Array  # [B] next refresh deadline
+    mem: Array           # [words]
+    t_complete: Array    # [N]
+    rdata: Array         # [N]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run(cfg: MemSimConfig, trace: Trace) -> IdealResult:
+    n = trace.num_requests
+    b = cfg.num_banks
+
+    init = _Carry(
+        bank_free=jnp.zeros((b,), jnp.int32),
+        open_row=jnp.full((b,), -1, jnp.int32),
+        next_refresh=jnp.full((b,), cfg.tREFI, jnp.int32),
+        mem=jnp.zeros((cfg.mem_words,), jnp.int32),
+        t_complete=jnp.full((n,), -1, jnp.int32),
+        rdata=jnp.zeros((n,), jnp.int32),
+    )
+
+    def step(c: _Carry, i: Array) -> tuple[_Carry, None]:
+        addr = trace.addr[i]
+        bank, _, row = decode_address(cfg, addr)
+        arrive = trace.t[i]
+        is_wr = trace.is_write[i] == 1
+
+        ready = jnp.maximum(arrive, c.bank_free[bank])
+        # refresh: catch up any deadlines passed before service begins
+        nref = c.next_refresh[bank]
+        do_ref = ready >= nref
+        ready = jnp.where(do_ref, jnp.maximum(ready, nref + cfg.tRFC), ready)
+        nref = jnp.where(do_ref, nref + cfg.tREFI, nref)
+
+        cur_row = c.open_row[bank]
+        hit = cur_row == row
+        closed = cur_row < 0
+        tRCD = jnp.where(is_wr, cfg.tRCDWR, cfg.tRCDRD)
+        service = jnp.where(
+            hit,
+            cfg.tCL + cfg.tCCDL,
+            jnp.where(closed, tRCD + cfg.tCL, cfg.tRP + tRCD + cfg.tCL),
+        )
+        done = ready + service
+
+        maddr = addr & (cfg.mem_words - 1)
+        rdata_i = c.mem[maddr]
+        mem = jnp.where(is_wr, c.mem.at[maddr].set(trace.wdata[i]), c.mem)
+
+        return (
+            _Carry(
+                bank_free=c.bank_free.at[bank].set(done),
+                open_row=c.open_row.at[bank].set(row),  # open-page: row stays open
+                next_refresh=c.next_refresh.at[bank].set(nref),
+                mem=mem,
+                t_complete=c.t_complete.at[i].set(done),
+                rdata=c.rdata.at[i].set(jnp.where(is_wr, 0, rdata_i)),
+            ),
+            None,
+        )
+
+    final, _ = jax.lax.scan(step, init, jnp.arange(n, dtype=jnp.int32))
+    return IdealResult(t_complete=final.t_complete, rdata=final.rdata)
+
+
+def simulate_ideal(cfg: MemSimConfig, trace: Trace) -> IdealResult:
+    """Run the open-page reference; returns per-request completion cycles."""
+    return _run(cfg, trace)
+
+
+def ideal_latencies(cfg: MemSimConfig, trace: Trace) -> np.ndarray:
+    res = simulate_ideal(cfg, trace)
+    return np.asarray(res.t_complete) - np.asarray(trace.t)

@@ -1,0 +1,173 @@
+"""MemorySim configuration: topology + JEDEC timing parameters (paper Table 1).
+
+The paper's Table 1 gives the timing parameters MemorySim implements; values
+here default to the paper's published numbers. Two parameters the paper's
+table omits but its FSM requires are added and documented:
+
+  * ``tCL``  — READ/WRITE data-return latency (the duration of the RW_WAIT
+    state; the paper's READ-ack delay is unspecified, we use the JEDEC-typical
+    CAS latency equal to tRCD).
+  * ``tXS``  — self-refresh exit latency (the paper has an SREF EXIT command
+    but gives no duration).
+  * ``tRTW`` — read->write turnaround (the table's tCCDL note says the write
+    gap "depends on previous op"; we use a distinct parameter defaulting to
+    tCCDL).
+
+Address mapping (paper §5.2)::
+
+    address <- {remaining_bits, rank_idx, bankgroup_idx, bank_idx}
+
+i.e. bank index occupies the least-significant bits, then bankgroup, then
+rank; everything above is row/column ("remaining").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def _log2(x: int) -> int:
+    assert x > 0 and (x & (x - 1)) == 0, f"{x} must be a power of two"
+    return int(math.log2(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class MemSimConfig:
+    """Static configuration for a MemorySim instance.
+
+    Frozen + hashable so it can be a static argument to ``jax.jit``.
+    """
+
+    # ---- topology -------------------------------------------------------
+    channels: int = 1
+    ranks: int = 2
+    bankgroups: int = 4
+    banks_per_group: int = 4
+    column_bits: int = 6          # low "remaining" bits that index within a row
+
+    # ---- queueing (paper: queueSize controls ALL controller queues) -----
+    queue_size: int = 128         # global reqQueue depth == per-bank queue depth
+    resp_queue_size: int = 64
+
+    # ---- timing parameters (paper Table 1 values) ------------------------
+    tRP: int = 14                 # precharge period
+    tFAW: int = 30                # four-activation window
+    tRRDL: int = 6                # min cycles between two ACTs (same rank)
+    tRCDRD: int = 14              # ACTIVATE -> READ delay
+    tRCDWR: int = 14              # ACTIVATE -> WRITE delay
+    tCCDL: int = 2                # gap between consecutive column commands
+    tWTR: int = 8                 # WRITE -> READ turnaround
+    tRFC: int = 260               # refresh cycle time / "deadline to start"
+    tREFI: int = 3600             # refresh interval
+    # ---- additions documented in the module docstring -------------------
+    tCL: int = 14                 # column command data-return latency
+    tXS: int = 10                 # self-refresh exit latency
+    tRTW: int = 2                 # read -> write turnaround
+
+    # ---- self refresh (paper §5.2.3) -------------------------------------
+    sref_idle_cycles: int = 1000  # idle cycles before SREF entry
+
+    # ---- page policy -------------------------------------------------------
+    # "closed" = the paper's policy (every request ACT->RW->PRE).
+    # "open"   = the paper's stated future work ("per-bank read caching"):
+    # rows stay open, row hits skip ACT+PRE, conflicts precharge first.
+    page_policy: str = "closed"
+
+    # ---- scheduling policy ---------------------------------------------------
+    # "fcfs"   = in-order per-bank queues (the paper's scheduler).
+    # "frfcfs" = first-ready FCFS (the DRAMSim3 feature the paper compares
+    # against): the oldest row-hit is promoted to the head of each bank
+    # queue, with a same-address dependency guard. Meaningful with
+    # page_policy="open".
+    sched_policy: str = "fcfs"
+
+    # ---- data correctness -------------------------------------------------
+    mem_words: int = 1 << 16      # word-addressable backing store size
+
+    # ---- backend ------------------------------------------------------------
+    # "jnp": pure-jnp FSM update (CPU default). "pallas": the TPU kernel in
+    # repro.kernels.bank_fsm (interpret mode on CPU — slow inside long scans,
+    # meant for TPU deployment; equivalence is enforced by the kernel tests).
+    fsm_backend: str = "jnp"
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def banks_per_rank(self) -> int:
+        return self.bankgroups * self.banks_per_group
+
+    @property
+    def banks_per_channel(self) -> int:
+        return self.ranks * self.banks_per_rank
+
+    @property
+    def num_banks(self) -> int:
+        """Total flattened bank count B = C * R * BG * BA."""
+        return self.channels * self.banks_per_channel
+
+    @property
+    def num_ranks(self) -> int:
+        """Total flattened rank count (channels * ranks)."""
+        return self.channels * self.ranks
+
+    @property
+    def bank_bits(self) -> int:
+        return _log2(self.banks_per_group)
+
+    @property
+    def bankgroup_bits(self) -> int:
+        return _log2(self.bankgroups)
+
+    @property
+    def rank_bits(self) -> int:
+        return _log2(self.ranks)
+
+    @property
+    def channel_bits(self) -> int:
+        return _log2(self.channels)
+
+    @property
+    def addr_low_bits(self) -> int:
+        """Bits consumed by {channel, rank, bankgroup, bank}."""
+        return self.bank_bits + self.bankgroup_bits + self.rank_bits + self.channel_bits
+
+    def validate(self) -> "MemSimConfig":
+        for f in ("channels", "ranks", "bankgroups", "banks_per_group"):
+            v = getattr(self, f)
+            assert v > 0 and (v & (v - 1)) == 0, f"{f}={v} must be a power of two"
+        assert self.queue_size >= 1
+        assert self.tREFI > self.tRFC, "refresh interval must exceed refresh time"
+        return self
+
+
+# FSM states of the bank scheduler (paper Fig 2) --------------------------
+# ISSUE states bid on the shared command bus; WAIT states hold a timer that
+# the DRAM timing model counts down.
+S_IDLE = 0
+S_REF_ISSUE = 1
+S_REF_WAIT = 2
+S_SREF_ISSUE = 3
+S_SREF = 4                        # parked in self refresh
+S_SREF_EXIT_ISSUE = 5
+S_SREF_EXIT_WAIT = 6
+S_ACT_ISSUE = 7
+S_ACT_WAIT = 8
+S_RW_ISSUE = 9
+S_RW_WAIT = 10
+S_PRE_ISSUE = 11
+S_PRE_WAIT = 12
+S_RESP_PEND = 13                  # completion token awaiting response arbiter
+NUM_STATES = 14
+
+# DRAM commands on the shared bus ----------------------------------------
+CMD_NOP = 0
+CMD_ACT = 1
+CMD_RD = 2
+CMD_WR = 3
+CMD_PRE = 4
+CMD_REF = 5
+CMD_SREF_ENTER = 6
+CMD_SREF_EXIT = 7
+NUM_CMDS = 8
+
+DEFAULT_CONFIG = MemSimConfig()

@@ -1,0 +1,316 @@
+"""MemorySim top level (paper §5.1): trace front-end -> controller -> banks.
+
+The whole memory subsystem is one synchronous circuit: ``cycle_step`` is the
+combinational logic, the ``SimState`` NamedTuple is the register file, and
+``jax.lax.scan`` is the clock. Request life-cycle (paper's numbered path):
+
+  1. trace lists R = {addr, t}
+  2. at cycle t, R is pushed into the global reqQueue (stall = backpressure)
+  3. the controller classifies R by (rank, bankgroup, bank) and forwards it
+     to that bank scheduler's local queue
+  4. the bank FSM drives ACTIVATE -> READ/WRITE -> PRECHARGE against the
+     DRAM timing model (closed-page policy, refresh deadlines)
+  5. the completion token is round-robin collected into respQueue and acked
+     to the front-end; latency = ack_cycle - t.
+
+Per-request dispatch/start/complete cycles are recorded so the benchmark
+harness can reproduce the paper's Table 2 / Fig 6-9 analyses exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core import power as power_lib
+from repro.core.bank_fsm import BankState, compute_bids, fsm_update
+from repro.core.dram_model import TimingState, check_issue, decode_address, record_issue
+from repro.core.params import CMD_NOP, MemSimConfig, S_RESP_PEND
+from repro.core.queues import BankedFifo, Fifo, rr_arbiter, rr_arbiter_grouped
+
+
+class Trace(NamedTuple):
+    """A standalone memory trace: request i must issue at cycle t[i]."""
+
+    t: Array         # [N] int32, sorted non-decreasing
+    addr: Array      # [N] int32 word address
+    is_write: Array  # [N] int32 {0, 1}
+    wdata: Array     # [N] int32 payload for writes
+
+    @property
+    def num_requests(self) -> int:
+        return self.t.shape[0]
+
+    @staticmethod
+    def from_numpy(t, addr, is_write, wdata=None) -> "Trace":
+        t = np.asarray(t, np.int32)
+        if wdata is None:
+            wdata = np.zeros_like(t)
+        order = np.argsort(t, kind="stable")
+        return Trace(
+            t=jnp.asarray(t[order]),
+            addr=jnp.asarray(np.asarray(addr, np.int32)[order]),
+            is_write=jnp.asarray(np.asarray(is_write, np.int32)[order]),
+            wdata=jnp.asarray(np.asarray(wdata, np.int32)[order]),
+        )
+
+
+class SimState(NamedTuple):
+    next_arrival: Array       # scalar: index of next trace entry to admit
+    req_q: Fifo               # global request queue
+    bank_q: BankedFifo        # per-bank scheduler queues
+    bank: BankState
+    timing: TimingState
+    cmd_rr: Array             # [C] per-channel command arbiter pointers
+    resp_rr: Array            # scalar response arbiter pointer
+    resp_q: Fifo
+    mem: Array                # [mem_words] int32 backing store (bit-true)
+    # per-request records, [N]; -1 = not yet
+    t_admit: Array
+    t_dispatch: Array
+    t_start: Array
+    t_complete: Array
+    rdata: Array
+    # aggregate counters
+    counters: Dict[str, Array]
+    blocked_arrival: Array    # cycles an arrival stalled on full reqQueue
+    blocked_dispatch: Array   # cycles dispatch stalled on a full bank queue
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Host-side result bundle (numpy)."""
+
+    cfg: MemSimConfig
+    num_cycles: int
+    t_intended: np.ndarray
+    is_write: np.ndarray
+    t_admit: np.ndarray
+    t_dispatch: np.ndarray
+    t_start: np.ndarray
+    t_complete: np.ndarray
+    rdata: np.ndarray
+    counters: Dict[str, int]
+    blocked_arrival: int
+    blocked_dispatch: int
+
+    @property
+    def completed(self) -> np.ndarray:
+        return self.t_complete >= 0
+
+    @property
+    def latency(self) -> np.ndarray:
+        """In-system latency (admission -> ack), the paper's accounting:
+        a request blocked outside a full reqQueue is not yet 'in' the
+        system (its wait shows up as lost throughput, Fig 9, not latency).
+        """
+        return np.where(self.completed, self.t_complete - self.t_admit, -1)
+
+    @property
+    def e2e_latency(self) -> np.ndarray:
+        """Intended-issue -> ack (includes pre-admission stall)."""
+        return np.where(self.completed, self.t_complete - self.t_intended, -1)
+
+
+def init_state(cfg: MemSimConfig, num_requests: int) -> SimState:
+    neg = jnp.full((num_requests,), -1, jnp.int32)
+    return SimState(
+        next_arrival=jnp.int32(0),
+        req_q=Fifo.make(cfg.queue_size),
+        bank_q=BankedFifo.make(cfg.num_banks, cfg.queue_size),
+        bank=BankState.make(cfg),
+        timing=TimingState.make(cfg),
+        cmd_rr=jnp.zeros((cfg.channels,), jnp.int32),
+        resp_rr=jnp.int32(0),
+        resp_q=Fifo.make(cfg.resp_queue_size),
+        mem=jnp.zeros((cfg.mem_words,), jnp.int32),
+        t_admit=neg,
+        t_dispatch=neg,
+        t_start=neg,
+        t_complete=neg,
+        rdata=jnp.zeros((num_requests,), jnp.int32),
+        counters=power_lib.make_counters(cfg.num_banks),
+        blocked_arrival=jnp.int32(0),
+        blocked_dispatch=jnp.int32(0),
+    )
+
+
+def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -> SimState:
+    n = trace.num_requests
+    b = cfg.num_banks
+
+    # ---- phase 1: front-end arrival into reqQueue (1 request / cycle) -----
+    idx = jnp.minimum(state.next_arrival, n - 1)
+    due = (state.next_arrival < n) & (trace.t[idx] <= cycle)
+    can_admit = due & ~state.req_q.full()
+    item = jnp.stack(
+        [trace.addr[idx], trace.is_write[idx], trace.wdata[idx], idx.astype(jnp.int32)]
+    )
+    req_q = state.req_q.push(item, can_admit)
+    t_admit = state.t_admit.at[
+        jnp.where(can_admit, idx, n)
+    ].set(cycle.astype(jnp.int32), mode="drop")
+    next_arrival = state.next_arrival + can_admit.astype(jnp.int32)
+    blocked_arrival = state.blocked_arrival + (due & ~can_admit).astype(jnp.int32)
+
+    # ---- phase 2: dispatch reqQueue head -> bank scheduler queue -----------
+    head = req_q.peek()
+    tgt_bank, _, _ = decode_address(cfg, head[0])
+    have_req = ~req_q.empty()
+    tgt_full = state.bank_q.full()[tgt_bank]
+    do_dispatch = have_req & ~tgt_full
+    req_q, ditem = req_q.pop(do_dispatch)
+    bank_q = state.bank_q.push_at(tgt_bank, ditem, do_dispatch)
+    t_dispatch = state.t_dispatch.at[
+        jnp.where(do_dispatch, ditem[3], n)
+    ].set(cycle.astype(jnp.int32), mode="drop")
+    blocked_dispatch = state.blocked_dispatch + (have_req & tgt_full).astype(jnp.int32)
+
+    # ---- phase 3: command bids, timing legality, per-channel RR grant ------
+    bids, cmds = compute_bids(cfg, state.bank.st, state.bank.cur_write)
+    rank_of_bank = (jnp.arange(b, dtype=jnp.int32) // cfg.banks_per_rank)
+    legal = check_issue(cfg, state.timing, cycle, cmds, rank_of_bank)
+    eligible = bids & legal
+    grant_mask, winners, cmd_rr = rr_arbiter_grouped(eligible, state.cmd_rr, cfg.channels)
+
+    timing = state.timing
+    issued_cmds = []
+    for ch in range(cfg.channels):  # static unroll; channels is small
+        flat_w = ch * cfg.banks_per_channel + winners[ch]
+        granted = eligible.reshape(cfg.channels, -1)[ch].any()
+        cmd_w = jnp.where(granted, cmds[flat_w], CMD_NOP)
+        timing = record_issue(cfg, timing, cycle, cmd_w, rank_of_bank[flat_w], granted)
+        issued_cmds.append(cmd_w)
+    issued_cmds = jnp.stack(issued_cmds)
+
+    # ---- phase 4: response arbitration into respQueue ----------------------
+    resp_bids = (state.bank.st == S_RESP_PEND) & ~state.resp_q.full()
+    resp_w, any_resp, resp_rr = rr_arbiter(resp_bids, state.resp_rr)
+    resp_accept = jnp.zeros((b,), bool).at[resp_w].set(any_resp)
+    resp_item = jnp.stack(
+        [
+            state.bank.cur_addr[resp_w],
+            state.bank.cur_write[resp_w],
+            state.bank.cur_data[resp_w],
+            state.bank.cur_id[resp_w],
+        ]
+    )
+    resp_q = state.resp_q.push(resp_item, any_resp)
+
+    # ---- phase 5: synchronous FSM update + bank queue pops -----------------
+    if cfg.sched_policy == "frfcfs":
+        # FR-FCFS: promote the oldest row-hit to each bank queue's head
+        from repro.core.bank_fsm import row_of
+
+        q = bank_q.capacity
+        offs = (bank_q.head[:, None] + jnp.arange(q)[None, :]) % q
+        addrs = jnp.take_along_axis(bank_q.buf[..., 0], offs, axis=1)
+        bank_q = bank_q.promote_rowhit(state.bank.open_row, row_of(cfg, addrs))
+    queue_nonempty = ~bank_q.empty()
+    pop_items = bank_q.peek()
+    if cfg.fsm_backend == "pallas":
+        from repro.kernels.bank_fsm.ops import bank_fsm_step
+        from repro.kernels.bank_fsm.ref import pack_state, unpack_state
+        from repro.core.bank_fsm import FsmOutputs
+
+        packed = pack_state(state.bank)
+        ins = jnp.stack(
+            [grant_mask.astype(jnp.int32), resp_accept.astype(jnp.int32),
+             queue_nonempty.astype(jnp.int32)]
+        )
+        new_packed, flags = bank_fsm_step(
+            cfg, packed, ins, pop_items.T, cycle, True, True
+        )
+        new_bank = unpack_state(new_packed)
+        outs = FsmOutputs(
+            want_pop=flags[0] == 1, rw_done=flags[1] == 1,
+            completed=flags[2] == 1, started=flags[0] == 1,
+        )
+    else:
+        new_bank, outs = fsm_update(
+            cfg, state.bank, grant_mask, resp_accept, queue_nonempty, pop_items, cycle
+        )
+    bank_q, popped = bank_q.pop_mask(outs.want_pop)
+    t_start = state.t_start.at[
+        jnp.where(outs.want_pop, pop_items[:, 3], n)
+    ].set(cycle.astype(jnp.int32), mode="drop")
+
+    # ---- phase 6: bit-true memory access on column completion --------------
+    maddr = state.bank.cur_addr & (cfg.mem_words - 1)
+    is_wr = state.bank.cur_write == 1
+    widx = jnp.where(outs.rw_done & is_wr, maddr, cfg.mem_words)
+    mem = state.mem.at[widx].set(state.bank.cur_data, mode="drop")
+    rvals = state.mem[maddr]  # pre-write image; banks never alias a word in-cycle
+    ridx = jnp.where(outs.rw_done & ~is_wr, state.bank.cur_id, n)
+    rdata = state.rdata.at[ridx].set(rvals, mode="drop")
+
+    # ---- phase 7: respQueue -> front-end ack (stats close out) -------------
+    # The pop reads the post-push queue: a response pushed into an empty
+    # respQueue this cycle is acked this cycle (flow-through queue, standard
+    # RTL Decoupled passthrough). Front-end is always ready (1 ack / cycle).
+    ack_valid = ~resp_q.empty()
+    resp_q, fitem = resp_q.pop(ack_valid)
+    t_complete = state.t_complete.at[
+        jnp.where(ack_valid, fitem[3], n)
+    ].set(cycle.astype(jnp.int32), mode="drop")
+
+    # ---- phase 8: counters ---------------------------------------------------
+    counters = power_lib.update_counters(state.counters, issued_cmds, state.bank.st)
+
+    return SimState(
+        next_arrival=next_arrival,
+        req_q=req_q,
+        bank_q=bank_q,
+        bank=new_bank,
+        timing=timing,
+        cmd_rr=cmd_rr,
+        resp_rr=resp_rr,
+        resp_q=resp_q,
+        mem=mem,
+        t_admit=t_admit,
+        t_dispatch=t_dispatch,
+        t_start=t_start,
+        t_complete=t_complete,
+        rdata=rdata,
+        counters=counters,
+        blocked_arrival=blocked_arrival,
+        blocked_dispatch=blocked_dispatch,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _simulate_jit(cfg: MemSimConfig, trace: Trace, num_cycles: int) -> SimState:
+    state = init_state(cfg, trace.num_requests)
+
+    def step(carry, cycle):
+        return cycle_step(cfg, trace, carry, cycle), None
+
+    final, _ = jax.lax.scan(step, state, jnp.arange(num_cycles, dtype=jnp.int32))
+    return final
+
+
+def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000) -> SimResult:
+    """Run MemorySim for ``num_cycles`` over ``trace``; returns host stats."""
+    cfg.validate()
+    final = _simulate_jit(cfg, trace, num_cycles)
+    counters = {k: np.asarray(v) for k, v in final.counters.items()}
+    return SimResult(
+        cfg=cfg,
+        num_cycles=num_cycles,
+        t_intended=np.asarray(trace.t),
+        is_write=np.asarray(trace.is_write),
+        t_admit=np.asarray(final.t_admit),
+        t_dispatch=np.asarray(final.t_dispatch),
+        t_start=np.asarray(final.t_start),
+        t_complete=np.asarray(final.t_complete),
+        rdata=np.asarray(final.rdata),
+        counters=counters,
+        blocked_arrival=int(final.blocked_arrival),
+        blocked_dispatch=int(final.blocked_dispatch),
+    )

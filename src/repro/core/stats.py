@@ -1,0 +1,123 @@
+"""Post-simulation analytics reproducing the paper's Table 2 and Figs 6-9."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.simulator import SimResult
+
+
+@dataclasses.dataclass
+class DiffSummary:
+    """Paper Table 2 row: MemSimCycles - DRAMSimCycles per request class."""
+
+    read_diff_avg: float
+    read_diff_std: float
+    write_diff_avg: float
+    write_diff_std: float
+    n_read: int
+    n_write: int
+
+
+def cycle_diffs(result: SimResult, ideal_complete: np.ndarray) -> DiffSummary:
+    """Per-request cycle differences vs the ideal model (completed only)."""
+    done = result.completed & (ideal_complete >= 0)
+    mem_lat = result.t_complete - result.t_admit
+    ideal_lat = ideal_complete - result.t_intended
+    diff = mem_lat - ideal_lat
+    rd = done & (result.is_write == 0)
+    wr = done & (result.is_write == 1)
+
+    def _ms(x: np.ndarray) -> Tuple[float, float]:
+        if x.size == 0:
+            return float("nan"), float("nan")
+        return float(np.mean(x)), float(np.std(x))
+
+    r_avg, r_std = _ms(diff[rd])
+    w_avg, w_std = _ms(diff[wr])
+    return DiffSummary(r_avg, r_std, w_avg, w_std, int(rd.sum()), int(wr.sum()))
+
+
+def latency_summary(result: SimResult) -> Dict[str, float]:
+    done = result.completed
+    lat = result.latency[done]
+    rd = result.is_write[done] == 0
+    return {
+        "mean": float(lat.mean()) if lat.size else float("nan"),
+        "std": float(lat.std()) if lat.size else float("nan"),
+        "read_mean": float(lat[rd].mean()) if rd.any() else float("nan"),
+        "write_mean": float(lat[~rd].mean()) if (~rd).any() else float("nan"),
+        "p50": float(np.percentile(lat, 50)) if lat.size else float("nan"),
+        "p99": float(np.percentile(lat, 99)) if lat.size else float("nan"),
+        "completed": int(done.sum()),
+        "total": int(done.size),
+    }
+
+
+def windowed_profile(result: SimResult, window: int = 1000) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper Fig 6: average latency of requests completing in each window.
+
+    Returns (window_start_cycles, mean_latency) with NaN for empty windows.
+    """
+    done = result.completed
+    tc = result.t_complete[done]
+    lat = result.latency[done]
+    nbins = max(1, int(np.ceil(result.num_cycles / window)))
+    bins = np.clip(tc // window, 0, nbins - 1)
+    sums = np.bincount(bins, weights=lat.astype(np.float64), minlength=nbins)
+    cnts = np.bincount(bins, minlength=nbins)
+    with np.errstate(invalid="ignore"):
+        means = np.where(cnts > 0, sums / np.maximum(cnts, 1), np.nan)
+    return np.arange(nbins) * window, means
+
+
+def latency_breakdown(result: SimResult) -> Dict[str, float]:
+    """Paper Fig 8: average latency split into its constituents.
+
+    * ``req_queue``  — admission to dispatch (the global queue stage)
+    * ``bank_queue`` — dispatch to service start (scheduler local queue)
+    * ``service``    — service start to front-end ack (ACT/RW/PRE + response)
+    * ``reqqueue_struct`` / ``_pct`` — req_queue + bank_queue combined: the
+      paper's Fig 3 defines "the reqQueue data structure" as the global
+      queue PLUS the per-scheduler queues, so its "reqQueue backpressure"
+      corresponds to this composite.
+    """
+    done = result.completed & (result.t_dispatch >= 0) & (result.t_start >= 0)
+    if not done.any():
+        return {"req_queue": 0.0, "bank_queue": 0.0, "service": 0.0,
+                "req_queue_pct": 0.0, "bank_queue_pct": 0.0, "service_pct": 0.0}
+    w_req = (result.t_dispatch - result.t_admit)[done].astype(np.float64)
+    w_bank = (result.t_start - result.t_dispatch)[done].astype(np.float64)
+    w_srv = (result.t_complete - result.t_start)[done].astype(np.float64)
+    tot = float((w_req + w_bank + w_srv).mean())
+    parts = {
+        "req_queue": float(w_req.mean()),
+        "bank_queue": float(w_bank.mean()),
+        "service": float(w_srv.mean()),
+    }
+    for k in list(parts):
+        parts[f"{k}_pct"] = 100.0 * parts[k] / tot if tot > 0 else 0.0
+    parts["reqqueue_struct"] = parts["req_queue"] + parts["bank_queue"]
+    parts["reqqueue_struct_pct"] = (parts["req_queue_pct"]
+                                    + parts["bank_queue_pct"])
+    return parts
+
+
+def pareto_point(result: SimResult) -> Tuple[int, float]:
+    """Paper Fig 9: (completed requests, average latency) operating point."""
+    s = latency_summary(result)
+    return s["completed"], s["mean"]
+
+
+def format_table2(rows: List[Tuple[str, DiffSummary]]) -> str:
+    out = ["| Benchmark | Read Diff Avg | Read StdDev | Write Diff Avg | Write StdDev |",
+           "|---|---|---|---|---|"]
+    for name, d in rows:
+        out.append(
+            f"| {name} | {d.read_diff_avg:.0f} | {d.read_diff_std:.0f} "
+            f"| {d.write_diff_avg:.0f} | {d.write_diff_std:.0f} |"
+        )
+    return "\n".join(out)

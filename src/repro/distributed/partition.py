@@ -1,0 +1,125 @@
+"""Parameter partition rules: TP over 'model', FSDP/ZeRO-3 over 'data'.
+
+Every weight matrix is sharded on its contraction-parallel dim over the
+'model' axis (column-parallel in-projections, row-parallel out-projections,
+expert-parallel MoE tensors) and on its other large dim over 'data'
+(FSDP/ZeRO-3 — GSPMD inserts the just-in-time all-gather in fwd/bwd and the
+reduce-scatter for grads). Optimizer moments mirror parameter specs, so
+optimizer state is fully sharded (ZeRO semantics).
+
+Stacked layer tensors (under "body" / "enc" / "dec", and the vmapped
+prefix) carry a leading layer axis that is never sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# name -> spec for the *unstacked* parameter
+_RULES = {
+    # embeddings / head
+    "table": P("model", None),
+    "lm_head": P("data", "model"),
+    # attention
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    "bq": P("model"),
+    "bk": P("model"),
+    "bv": P("model"),
+    # MLA
+    "w_dq": P("data", None),
+    "w_uq": P(None, "model"),
+    "w_dkv": P("data", None),
+    "w_uk": P(None, "model"),
+    "w_uv": P(None, "model"),
+    "w_kr": P("data", None),
+    # dense FFN (SwiGLU)
+    "w_gate": P("data", "model"),
+    "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    # MoE (3D expert tensors override by rank below)
+    "router": P("data", None),
+    # mamba
+    "w_in": P("data", "model"),
+    "conv_w": P(None, "model"),
+    "conv_b": P("model"),
+    "w_x": P("model", None),
+    "w_dt": P(None, "model"),
+    "dt_bias": P("model"),
+    "A_log": P("model", None),
+    "D": P("model"),
+    "w_out": P("model", "data"),
+    # xlstm
+    "w_q": P("data", "model"),
+    "w_k": P("data", "model"),
+    "w_v": P("data", "model"),
+    "w_if": P("data", None),
+    "b_if": P(),
+    "w_gates": P("data", "model"),
+    "b_gates": P("model"),
+    # norms
+    "scale": P(),
+    "bias": P(),
+}
+
+_MOE_3D = {
+    "w_gate": P("model", "data", None),
+    "w_up": P("model", "data", None),
+    "w_down": P("model", None, "data"),
+}
+
+_STACK_MARKERS = ("body", "enc", "dec", "prefix")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def _spec_one(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    stacked = any(m in names for m in _STACK_MARKERS if m != "prefix")
+    base_rank = leaf.ndim - (1 if stacked else 0)
+
+    if name in _MOE_3D and base_rank == 3:
+        spec = _MOE_3D[name]
+    elif name in _RULES:
+        spec = _RULES[name]
+        # rule written for the canonical rank; pad/trim to the actual rank
+        if len(spec) > base_rank:
+            spec = P(*spec[:base_rank])
+        elif len(spec) < base_rank:
+            spec = P(*(spec + (None,) * (base_rank - len(spec))))
+    else:
+        spec = P(*([None] * base_rank))
+
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def param_specs(params: Any) -> Any:
+    """PartitionSpec tree matching ``params`` (works for opt moments too)."""
+    return jax.tree_util.tree_map_with_path(_spec_one, params)
+
+
+def opt_state_specs(opt_state: Any) -> Any:
+    """Specs for the AdamW state {m, v, count}."""
+    return {
+        "m": param_specs(opt_state["m"]),
+        "v": param_specs(opt_state["v"]),
+        "count": P(),
+    }

@@ -1,0 +1,72 @@
+"""Sharding utilities: logical-axis constraints the launcher binds to a mesh.
+
+Model code calls ``constrain(x, "data", None, "model")`` at layer
+boundaries; on CPU smoke tests (no mesh) it is a no-op, under the
+production mesh it becomes ``with_sharding_constraint`` with the mesh bound
+by :func:`use_mesh`. This keeps model definitions mesh-agnostic while
+letting the dry-run pin the exact GSPMD sharding the paper-scale meshes
+need.
+
+Axis conventions (DESIGN.md §6):
+  "data"  — batch / FSDP axis (x pod axis when multi-pod)
+  "model" — tensor/expert/sequence-parallel axis
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax import Array
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def data_axes() -> tuple:
+    """Physical axes backing the logical 'data' axis (('pod','data') multi-pod)."""
+    return getattr(_state, "data_axes", ("data",))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], data: Sequence[str] = ("data",)):
+    prev = getattr(_state, "mesh", None)
+    prev_data = getattr(_state, "data_axes", ("data",))
+    _state.mesh = mesh
+    _state.data_axes = tuple(data)
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.data_axes = prev_data
+
+
+def resolve(*logical: Union[str, None, tuple]) -> P:
+    """Map logical axis names to a PartitionSpec under the active mesh."""
+    out = []
+    for ax in logical:
+        if ax == "data":
+            out.append(data_axes() if len(data_axes()) > 1 else data_axes()[0])
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def constrain(x: Array, *logical: Union[str, None, tuple]) -> Array:
+    """Sharding constraint if a mesh is active; identity otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(mesh: Mesh, *logical: Union[str, None, tuple]) -> NamedSharding:
+    with use_mesh(mesh, data_axes()):
+        return NamedSharding(mesh, resolve(*logical))

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package follows the repo convention: ``<name>.py`` holds the
+``pl.pallas_call`` + BlockSpec tiling, ``ops.py`` the jit'd wrapper with
+backend dispatch (jnp oracle on CPU / kernel on TPU, ``interpret=True`` for
+CPU validation), and ``ref.py`` the pure-jnp oracle the tests sweep against.
+
+  * ``bank_fsm``         — MemorySim's per-cycle bank-FSM update (the paper's
+    hot loop; the FireSim-on-TPU analogue).
+  * ``addr_map``         — trace address decode + per-bank histogram.
+  * ``flash_attention``  — blocked causal GQA attention (train/prefill).
+  * ``decode_attention`` — single-token decode over a KV cache
+    (FlashDecoding-style; the memory-roofline case the paper motivates).
+  * ``selective_scan``   — Mamba SSM recurrence, chunked over time with the
+    state resident in VMEM (the CUDA selective-scan kernel's TPU analogue).
+"""
+
+from repro.kernels.bank_fsm.ops import bank_fsm_step
+from repro.kernels.addr_map.ops import addr_map
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.selective_scan.ops import selective_scan
+
+__all__ = ["bank_fsm_step", "addr_map", "attention", "decode_attention",
+           "selective_scan"]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: address decode (paper §5.2 fixed mapping) + bank histogram.
+
+Used by the trace front-end to pre-classify large traces and by the
+LLM-workload profiler to bin multi-million-request streams by bank — the
+bandwidth-imbalance diagnostic. Bit ops run on the VPU; the per-bank
+histogram is computed as a compare-and-reduce against an iota of bank ids
+(B compares per element block — B is at most a few hundred), accumulated
+across grid steps into the same output block, the standard Pallas
+revisiting-accumulator pattern.
+
+VMEM per step: block_n x 4B input + 3 x block_n x 4B outputs + B x 4B hist
+= ~16 KiB for block_n = 1024, B = 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.params import MemSimConfig
+
+
+def _kernel(cfg: MemSimConfig, addr_ref, bank_ref, rank_ref, row_ref, hist_ref):
+    addr = addr_ref[...]  # (1, block_n) int32
+    ba = addr & (cfg.banks_per_group - 1)
+    bg = (addr >> cfg.bank_bits) & (cfg.bankgroups - 1)
+    rk = (addr >> (cfg.bank_bits + cfg.bankgroup_bits)) & (cfg.ranks - 1)
+    ch = (addr >> (cfg.bank_bits + cfg.bankgroup_bits + cfg.rank_bits)) & (
+        cfg.channels - 1
+    )
+    bank = ((ch * cfg.ranks + rk) * cfg.bankgroups + bg) * cfg.banks_per_group + ba
+    rank = ch * cfg.ranks + rk
+    row = addr >> (cfg.addr_low_bits + cfg.column_bits)
+
+    bank_ref[...] = bank.astype(jnp.int32)
+    rank_ref[...] = rank.astype(jnp.int32)
+    row_ref[...] = row.astype(jnp.int32)
+
+    # histogram: one compare-reduce per bank id, accumulated across grid steps
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    ids = jax.lax.broadcasted_iota(jnp.int32, (1, cfg.num_banks), 1)
+    counts = (bank[:, :, None] == ids[:, None, :]).sum(axis=1).astype(jnp.int32)
+    hist_ref[...] += counts
+
+
+def addr_map_pallas(cfg: MemSimConfig, addr, block_n: int = 1024,
+                    interpret: bool = True):
+    n = addr.shape[0]
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    addr2d = addr.reshape(1, n)
+    grid = (n // block_n,)
+    kernel = functools.partial(_kernel, cfg)
+    bank, rank, row, hist = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, cfg.num_banks), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, cfg.num_banks), jnp.int32),
+        ],
+        interpret=interpret,
+    )(addr2d)
+    return bank[0], rank[0], row[0], hist[0]

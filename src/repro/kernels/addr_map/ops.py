@@ -1,0 +1,36 @@
+"""Jit'd wrapper for address decode + histogram with padding/dispatch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.params import MemSimConfig
+from repro.kernels.addr_map.addr_map import addr_map_pallas
+from repro.kernels.addr_map.ref import addr_map_ref
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def addr_map(
+    cfg: MemSimConfig,
+    addr: Array,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array, Array]:
+    """Decode a batch of addresses -> (bank, rank, row, per-bank histogram)."""
+    if not use_pallas:
+        return addr_map_ref(cfg, addr)
+    n = addr.shape[0]
+    block_n = 1024 if n >= 1024 else 128
+    padded = ((n + block_n - 1) // block_n) * block_n
+    # pad with an address mapping to bank 0; subtract its count afterwards
+    pad = padded - n
+    ap = jnp.concatenate([addr, jnp.zeros((pad,), jnp.int32)])
+    bank, rank, row, hist = addr_map_pallas(cfg, ap, block_n=block_n,
+                                            interpret=interpret)
+    hist = hist.at[0].add(-pad)
+    return bank[:n], rank[:n], row[:n], hist

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for trace address decode + per-bank histogram."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.dram_model import decode_address
+from repro.core.params import MemSimConfig
+
+
+def addr_map_ref(cfg: MemSimConfig, addr: Array) -> Tuple[Array, Array, Array, Array]:
+    """addr int32[N] -> (bank[N], rank[N], row[N], hist[num_banks])."""
+    bank, rank, row = decode_address(cfg, addr)
+    hist = jnp.zeros((cfg.num_banks,), jnp.int32).at[bank].add(1)
+    return bank, rank, row, hist

@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: one synchronous clock edge for a block of bank FSMs.
+
+This is the FireSim-analogue of the paper's design: the per-cycle update of
+every bank scheduler + DRAM timing state is pure data-parallel int32 logic,
+so it runs on the TPU VPU with banks laid out along lanes. One grid step
+processes ``block_b`` banks; the whole update is branchless ``where`` logic
+— exactly the combinational network the Chisel module would synthesize to.
+Supports both page policies (closed = paper; open = future-work extension)
+as compile-time variants.
+
+ABI (see ref.py): state int32[10, B], inputs int32[3, B], pop int32[4, B],
+cycle int32[1, 1] -> new_state int32[10, B], flags int32[3, B].
+
+VMEM footprint per grid step: (10 + 3 + 4 + 10 + 3) rows x block_b x 4B
+= 30 * block_b * 4B  ->  15 KiB at block_b = 128, far under the ~16 MiB
+VMEM budget; block_b can scale to 2048+ lanes for large topologies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bank_fsm import P_NONE, P_REF, P_RW, P_SREF
+from repro.core.params import (
+    MemSimConfig,
+    S_ACT_ISSUE,
+    S_ACT_WAIT,
+    S_IDLE,
+    S_PRE_ISSUE,
+    S_PRE_WAIT,
+    S_REF_ISSUE,
+    S_REF_WAIT,
+    S_RESP_PEND,
+    S_RW_ISSUE,
+    S_RW_WAIT,
+    S_SREF,
+    S_SREF_EXIT_ISSUE,
+    S_SREF_EXIT_WAIT,
+    S_SREF_ISSUE,
+)
+
+
+def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
+            new_state_ref, flags_ref):
+    open_pol = cfg.page_policy == "open"
+    row_shift = cfg.addr_low_bits + cfg.column_bits
+
+    # rows as (1, bb) int32 vectors
+    st = state_ref[0:1, :]
+    timer = state_ref[1:2, :]
+    idle_ctr = state_ref[2:3, :]
+    refresh_due = state_ref[3:4, :]
+    cur_addr = state_ref[4:5, :]
+    cur_write = state_ref[5:6, :]
+    cur_data = state_ref[6:7, :]
+    cur_id = state_ref[7:8, :]
+    open_row = state_ref[8:9, :]
+    pending = state_ref[9:10, :]
+
+    grant = inputs_ref[0:1, :] == 1
+    resp_accept = inputs_ref[1:2, :] == 1
+    queue_nonempty = inputs_ref[2:3, :] == 1
+    cycle = cycle_ref[0, 0]
+
+    refresh_needed = cycle >= (refresh_due - cfg.tRFC)
+
+    # WAIT states: tick, transition on expiry
+    in_wait = (
+        (st == S_ACT_WAIT) | (st == S_RW_WAIT) | (st == S_PRE_WAIT)
+        | (st == S_REF_WAIT) | (st == S_SREF_EXIT_WAIT)
+    )
+    timer2 = jnp.where(in_wait, jnp.maximum(timer - 1, 0), timer)
+    expired = in_wait & (timer2 == 0)
+
+    nxt = st
+    nxt = jnp.where(expired & (st == S_ACT_WAIT), S_RW_ISSUE, nxt)
+    open_row = jnp.where(expired & (st == S_ACT_WAIT), cur_addr >> row_shift,
+                         open_row)
+    if open_pol:
+        nxt = jnp.where(expired & (st == S_RW_WAIT), S_RESP_PEND, nxt)
+        pre_done = expired & (st == S_PRE_WAIT)
+        nxt = jnp.where(pre_done & (pending == P_RW), S_ACT_ISSUE, nxt)
+        nxt = jnp.where(pre_done & (pending == P_REF), S_REF_ISSUE, nxt)
+        nxt = jnp.where(pre_done & (pending == P_SREF), S_SREF_ISSUE, nxt)
+        open_row = jnp.where(pre_done, -1, open_row)
+        pending = jnp.where(pre_done, P_NONE, pending)
+    else:
+        nxt = jnp.where(expired & (st == S_RW_WAIT), S_PRE_ISSUE, nxt)
+        nxt = jnp.where(expired & (st == S_PRE_WAIT), S_RESP_PEND, nxt)
+        open_row = jnp.where(expired & (st == S_PRE_WAIT), -1, open_row)
+    nxt = jnp.where(expired & (st == S_REF_WAIT), S_IDLE, nxt)
+    nxt = jnp.where(expired & (st == S_SREF_EXIT_WAIT), S_IDLE, nxt)
+    rw_done = expired & (st == S_RW_WAIT)
+    ref_done = expired & (st == S_REF_WAIT)
+
+    # ISSUE states: on (timing-checked, arbitrated) grant, enter WAIT
+    is_wr = cur_write == 1
+    act_dur = jnp.where(is_wr, cfg.tRCDWR, cfg.tRCDRD)
+    nxt = jnp.where(grant & (st == S_ACT_ISSUE), S_ACT_WAIT, nxt)
+    timer2 = jnp.where(grant & (st == S_ACT_ISSUE), act_dur, timer2)
+    nxt = jnp.where(grant & (st == S_RW_ISSUE), S_RW_WAIT, nxt)
+    timer2 = jnp.where(grant & (st == S_RW_ISSUE), cfg.tCL, timer2)
+    nxt = jnp.where(grant & (st == S_PRE_ISSUE), S_PRE_WAIT, nxt)
+    timer2 = jnp.where(grant & (st == S_PRE_ISSUE), cfg.tRP, timer2)
+    nxt = jnp.where(grant & (st == S_REF_ISSUE), S_REF_WAIT, nxt)
+    timer2 = jnp.where(grant & (st == S_REF_ISSUE), cfg.tRFC, timer2)
+    nxt = jnp.where(grant & (st == S_SREF_ISSUE), S_SREF, nxt)
+    nxt = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), S_SREF_EXIT_WAIT, nxt)
+    timer2 = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), cfg.tXS, timer2)
+
+    # RESP_PEND drained by the response arbiter
+    completed = resp_accept & (st == S_RESP_PEND)
+    nxt = jnp.where(completed, S_IDLE, nxt)
+
+    # IDLE: refresh > pop > self-refresh countdown
+    idle = st == S_IDLE
+    row_is_open = open_row >= 0
+    go_ref = idle & refresh_needed
+    if open_pol:
+        nxt = jnp.where(go_ref & row_is_open, S_PRE_ISSUE, nxt)
+        pending = jnp.where(go_ref & row_is_open, P_REF, pending)
+        nxt = jnp.where(go_ref & ~row_is_open, S_REF_ISSUE, nxt)
+    else:
+        nxt = jnp.where(go_ref, S_REF_ISSUE, nxt)
+
+    want_pop = idle & ~refresh_needed & queue_nonempty
+    if open_pol:
+        pop_row = pop_ref[0:1, :] >> row_shift
+        hit = want_pop & row_is_open & (open_row == pop_row)
+        conflict = want_pop & row_is_open & (open_row != pop_row)
+        closed_row = want_pop & ~row_is_open
+        nxt = jnp.where(hit, S_RW_ISSUE, nxt)
+        nxt = jnp.where(closed_row, S_ACT_ISSUE, nxt)
+        nxt = jnp.where(conflict, S_PRE_ISSUE, nxt)
+        pending = jnp.where(conflict, P_RW, pending)
+    else:
+        nxt = jnp.where(want_pop, S_ACT_ISSUE, nxt)
+
+    truly_idle = idle & ~refresh_needed & ~queue_nonempty
+    idle_ctr2 = jnp.where(truly_idle, idle_ctr + 1, jnp.zeros_like(idle_ctr))
+    go_sref = truly_idle & (idle_ctr2 >= cfg.sref_idle_cycles)
+    if open_pol:
+        nxt = jnp.where(go_sref & row_is_open, S_PRE_ISSUE, nxt)
+        pending = jnp.where(go_sref & row_is_open, P_SREF, pending)
+        nxt = jnp.where(go_sref & ~row_is_open, S_SREF_ISSUE, nxt)
+    else:
+        nxt = jnp.where(go_sref, S_SREF_ISSUE, nxt)
+
+    # SREF wake
+    wake = (st == S_SREF) & queue_nonempty
+    nxt = jnp.where(wake, S_SREF_EXIT_ISSUE, nxt)
+
+    # refresh bookkeeping
+    refresh_due2 = jnp.where(ref_done, refresh_due + cfg.tREFI, refresh_due)
+    exiting = expired & (st == S_SREF_EXIT_WAIT)
+    refresh_due2 = jnp.where(exiting, cycle + cfg.tREFI, refresh_due2)
+
+    # latch popped request
+    cur_addr2 = jnp.where(want_pop, pop_ref[0:1, :], cur_addr)
+    cur_write2 = jnp.where(want_pop, pop_ref[1:2, :], cur_write)
+    cur_data2 = jnp.where(want_pop, pop_ref[2:3, :], cur_data)
+    cur_id2 = jnp.where(want_pop, pop_ref[3:4, :], cur_id)
+
+    new_state_ref[0:1, :] = nxt.astype(jnp.int32)
+    new_state_ref[1:2, :] = timer2.astype(jnp.int32)
+    new_state_ref[2:3, :] = idle_ctr2.astype(jnp.int32)
+    new_state_ref[3:4, :] = refresh_due2.astype(jnp.int32)
+    new_state_ref[4:5, :] = cur_addr2
+    new_state_ref[5:6, :] = cur_write2
+    new_state_ref[6:7, :] = cur_data2
+    new_state_ref[7:8, :] = cur_id2
+    new_state_ref[8:9, :] = open_row.astype(jnp.int32)
+    new_state_ref[9:10, :] = pending.astype(jnp.int32)
+    flags_ref[0:1, :] = want_pop.astype(jnp.int32)
+    flags_ref[1:2, :] = rw_done.astype(jnp.int32)
+    flags_ref[2:3, :] = completed.astype(jnp.int32)
+
+
+def bank_fsm_step_pallas(cfg: MemSimConfig, state, inputs, pop, cycle,
+                         block_b: int = 128, interpret: bool = True):
+    """Invoke the FSM kernel; B must be a multiple of ``block_b`` (ops.py pads)."""
+    b = state.shape[1]
+    assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    kernel = functools.partial(_kernel, cfg)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((10, block_b), lambda i: (0, i)),
+            pl.BlockSpec((3, block_b), lambda i: (0, i)),
+            pl.BlockSpec((4, block_b), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((10, block_b), lambda i: (0, i)),
+            pl.BlockSpec((3, block_b), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((10, b), jnp.int32),
+            jax.ShapeDtypeStruct((3, b), jnp.int32),
+        ],
+        interpret=interpret,
+    )(state, inputs, pop, cycle)

@@ -1,0 +1,61 @@
+"""Jit'd wrapper for the bank-FSM kernel with padding + backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.params import MemSimConfig, S_IDLE
+from repro.kernels.bank_fsm.bank_fsm import bank_fsm_step_pallas
+from repro.kernels.bank_fsm.ref import bank_fsm_step_ref
+
+_FAR_FUTURE = jnp.int32(0x3FFFFFFF)
+
+
+def _pad_banks(state: Array, inputs: Array, pop: Array, padded_b: int):
+    b = state.shape[1]
+    if b == padded_b:
+        return state, inputs, pop
+    extra = padded_b - b
+    pad_state = jnp.zeros((10, extra), jnp.int32)
+    pad_state = pad_state.at[0].set(S_IDLE)
+    pad_state = pad_state.at[3].set(_FAR_FUTURE)  # never refresh
+    pad_state = pad_state.at[7].set(-1)
+    pad_state = pad_state.at[8].set(-1)           # no open row
+    state = jnp.concatenate([state, pad_state], axis=1)
+    inputs = jnp.concatenate([inputs, jnp.zeros((3, extra), jnp.int32)], axis=1)
+    pop = jnp.concatenate([pop, jnp.zeros((4, extra), jnp.int32)], axis=1)
+    return state, inputs, pop
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def bank_fsm_step(
+    cfg: MemSimConfig,
+    state: Array,    # [10, B] int32
+    inputs: Array,   # [3, B] int32 0/1
+    pop: Array,      # [4, B] int32
+    cycle: Array,    # scalar or [1,1] int32
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> Tuple[Array, Array]:
+    """One FSM clock edge. Returns (new_state [10,B], flags [3,B]).
+
+    ``use_pallas=False`` runs the pure-jnp oracle (the simulator's default on
+    CPU); ``use_pallas=True`` runs the Pallas kernel (``interpret=True`` for
+    CPU validation, ``False`` on real TPUs).
+    """
+    cycle2d = jnp.asarray(cycle, jnp.int32).reshape(1, 1)
+    if not use_pallas:
+        return bank_fsm_step_ref(cfg, state, inputs, pop, cycle2d)
+    b = state.shape[1]
+    block_b = 128
+    padded_b = ((b + block_b - 1) // block_b) * block_b
+    ps, pi, pp = _pad_banks(state, inputs, pop, padded_b)
+    new_state, flags = bank_fsm_step_pallas(
+        cfg, ps, pi, pp, cycle2d, block_b=block_b, interpret=interpret
+    )
+    return new_state[:, :b], flags[:, :b]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the bank-FSM cycle kernel.
+
+Packed layout (kernel ABI):
+
+  state  : int32[NS=10, B] rows = (st, timer, idle_ctr, refresh_due,
+                                   cur_addr, cur_write, cur_data, cur_id,
+                                   open_row, pending)
+  inputs : int32[NI=3, B]  rows = (grant, resp_accept, queue_nonempty) as 0/1
+  pop    : int32[4,  B]    head items (addr, is_write, data, id)
+  cycle  : int32[1, 1]
+
+  -> new_state int32[10, B], flags int32[3, B] rows = (want_pop, rw_done,
+     completed)
+
+The oracle simply adapts :func:`repro.core.bank_fsm.fsm_update` — the
+simulator's production implementation — to this packed ABI, so kernel tests
+assert TPU-kernel ≡ simulator semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.bank_fsm import BankState, fsm_update
+from repro.core.params import MemSimConfig
+
+NS = 10  # state rows
+NI = 3  # input rows
+NF = 3  # flag rows
+
+
+def pack_state(b: BankState) -> Array:
+    return jnp.stack(
+        [b.st, b.timer, b.idle_ctr, b.refresh_due,
+         b.cur_addr, b.cur_write, b.cur_data, b.cur_id,
+         b.open_row, b.pending]
+    )
+
+
+def unpack_state(s: Array) -> BankState:
+    return BankState(
+        st=s[0], timer=s[1], idle_ctr=s[2], refresh_due=s[3],
+        cur_addr=s[4], cur_write=s[5], cur_data=s[6], cur_id=s[7],
+        open_row=s[8], pending=s[9],
+    )
+
+
+def bank_fsm_step_ref(
+    cfg: MemSimConfig,
+    state: Array,   # [10, B] int32
+    inputs: Array,  # [3, B] int32 0/1
+    pop: Array,     # [4, B] int32
+    cycle: Array,   # [1, 1] int32
+) -> Tuple[Array, Array]:
+    bank = unpack_state(state)
+    new_bank, outs = fsm_update(
+        cfg,
+        bank,
+        grant=inputs[0] == 1,
+        resp_accept=inputs[1] == 1,
+        queue_nonempty=inputs[2] == 1,
+        pop_item=pop.T,
+        cycle=cycle[0, 0],
+    )
+    flags = jnp.stack(
+        [outs.want_pop.astype(jnp.int32),
+         outs.rw_done.astype(jnp.int32),
+         outs.completed.astype(jnp.int32)]
+    )
+    return pack_state(new_bank), flags

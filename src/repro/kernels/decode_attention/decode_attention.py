@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: single-token decode attention (FlashDecoding-style).
+
+Decode is the memory-roofline case the paper's motivation highlights: one
+query token must stream the whole KV cache from HBM; arithmetic intensity
+is O(1) FLOP/byte, so the kernel's only job is to keep the HBM pipe full
+and never materialize logits.
+
+Grid = (B * Hkv, S // block_k) with the KV axis innermost; the g = Hq/Hkv
+query heads of a group ride along as a (g, D) tile so each KV tile fetched
+from HBM serves the entire group (GQA's bandwidth amortization). Online
+softmax state (m, l, acc) lives in VMEM scratch, flushed on the last KV
+step. A kv_len scalar masks cache padding.
+
+VMEM per step (block_k = 512, D = 128, g <= 16):
+  kv tiles 2 * 512*128*4 = 512 KiB + acc (16,128) + s (16,512)  = ~560 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(block_k: int, scale: float,
+            q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref, l_ref):
+    kj = pl.program_id(1)
+    k_start = kj * block_k
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0, 0]
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (g, D)
+        k = k_ref[0].astype(jnp.float32)                  # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                  # (g, block_k)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < kv_len, s, _NEG_INF)
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_new
+
+    @pl.when(kj == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, kv_len=None, block_k: int = 512,
+                            scale: float | None = None,
+                            interpret: bool = True):
+    """q [B, Hq, D]; k, v [B, Hkv, S, D]; kv_len int32[B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    assert hq % hkv == 0 and s % block_k == 0
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+
+    # group query heads: [B*Hkv, g, D]
+    qg = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+    lens = jnp.repeat(kv_len, hkv).reshape(b * hkv, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, block_k, scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kf, vf, lens)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,24 @@
+"""Jit'd decode-attention entry point with backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import Array
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+def decode_attention(q: Array, k: Array, v: Array, kv_len: Array | None = None,
+                     use_pallas: bool = False, interpret: bool = True,
+                     block_k: int = 512) -> Array:
+    """q [B, Hq, D]; k, v [B, Hkv, S, D] -> [B, Hq, D]."""
+    if not use_pallas:
+        return decode_attention_ref(q, k, v, kv_len=kv_len)
+    s = k.shape[2]
+    bk = min(block_k, s)
+    return decode_attention_pallas(q, k, v, kv_len=kv_len, block_k=bk,
+                                   interpret=interpret)

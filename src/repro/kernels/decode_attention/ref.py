@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: single-token GQA decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array,
+                         kv_len: Array | None = None,
+                         scale: float | None = None) -> Array:
+    """One decode step.
+
+    q: [B, Hq, D] (the new token's queries)
+    k, v: [B, Hkv, S, D] (KV cache; positions >= kv_len are padding)
+    kv_len: int32[B] valid cache lengths (None = full cache)
+    Returns [B, Hq, D].
+    """
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qf, kf) * scale
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+        logits = jnp.where(mask, logits, -1e30)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)

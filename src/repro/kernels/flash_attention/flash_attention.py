@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention (fwd).
+
+FlashAttention-2-style online softmax adapted to TPU: the grid is
+(batch*q_heads, q_blocks, kv_blocks) with the KV axis innermost; running
+(max, denom, acc) persist in fp32 VMEM scratch across KV steps and the
+output block is flushed on the last KV step. The MXU does the two matmuls
+per (q, kv) tile; causality skips KV blocks past the diagonal via
+``pl.when`` (zero-cost on the sequential TPU grid).
+
+Layouts: q [B, Hq, S, D], k/v [B, Hkv, S, D] — q-head h reads kv-head
+h // (Hq // Hkv), so the KV tile DMA amortizes across the whole GQA group
+(the reason GQA exists on TPU).
+
+VMEM per grid step (defaults block_q = block_k = 128, D = 128):
+  q tile 64 KiB + k/v tiles 128 KiB + acc/m/l scratch 66 KiB  = ~260 KiB,
+well under the ~16 MiB/core budget — block_k can grow to 512 for higher
+MXU occupancy on long sequences.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _kernel(block_q: int, block_k: int, causal: bool, scale: float,
+            q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip KV blocks strictly above the diagonal band
+    run = (k_start < q_start + block_q) if causal else True
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)                  # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                  # (block_q, block_k)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           scale: float | None = None,
+                           interpret: bool = True):
+    """q [B, Hq, S, D]; k, v [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0 and s % block_q == 0 and s % block_k == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+
+    qf = q.reshape(b * hq, s, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+
+    kernel = functools.partial(_kernel, block_q, block_k, causal, scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, s // block_q, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            _scratch(block_q, d),   # acc
+            _scratch(block_q, 1),   # m (running max)
+            _scratch(block_q, 1),   # l (running denom)
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, d)
+
+
+def _scratch(rows: int, cols: int):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM((rows, cols), jnp.float32)

@@ -1,0 +1,30 @@
+"""Jit'd GQA attention entry point with backend dispatch.
+
+``attention(...)`` is what the model stack calls: the pure-jnp reference on
+CPU (default), the Pallas kernel on TPU. Block sizes clamp to the sequence
+length so short smoke-test sequences work in either backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import Array
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import gqa_attention_ref
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6))
+def attention(q: Array, k: Array, v: Array, causal: bool = True,
+              use_pallas: bool = False, interpret: bool = True,
+              block: int = 128) -> Array:
+    """q [B, Hq, S, D]; k, v [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    if not use_pallas:
+        return gqa_attention_ref(q, k, v, causal=causal)
+    s = q.shape[2]
+    bq = min(block, s)
+    bk = min(block, s)
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  block_q=bq, block_k=bk, interpret=interpret)

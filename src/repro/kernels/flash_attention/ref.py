@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: causal grouped-query attention (materialized softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def _softmax(x: Array) -> Array:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gqa_attention_ref(q: Array, k: Array, v: Array, causal: bool = True,
+                      scale: float | None = None) -> Array:
+    """Reference attention.
+
+    q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] with Hq % Hkv == 0.
+    Returns [B, Hq, S, D] in q's dtype; math in fp32.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = _softmax(logits)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Jit'd selective-scan entry point with backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+from jax import Array
+
+from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.selective_scan.selective_scan import selective_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def selective_scan(x: Array, dt: Array, bc: Array, cc: Array, a: Array,
+                   use_pallas: bool = False, interpret: bool = True):
+    """x, dt: [B, T, D]; bc, cc: [B, T, S]; a: [D, S]
+    -> (y [B, T, D], h_final [B, D, S]).
+
+    Kernel path is forward-only (serving/prefill); training uses the
+    chunked-remat jnp path in repro.models.ssm.
+    """
+    if not use_pallas:
+        return selective_scan_ref(x, dt, bc, cc, a)
+    t, d = x.shape[1], x.shape[2]
+    ct = 256 if t % 256 == 0 else t
+    bd = 512 if d % 512 == 0 else d
+    return selective_scan_pallas(x, dt, bc, cc, a, chunk_t=ct, block_d=bd,
+                                 interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba selective scan.
+
+h_t = exp(dt_t * A) h_{t-1} + (dt_t * x_t) B_t ;  y_t = C_t . h_t
+x, dt: [B, T, D]; bc, cc: [B, T, S]; a: [D, S] (negative)
+-> y [B, T, D], h_final [B, D, S]
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def selective_scan_ref(x: Array, dt: Array, bc: Array, cc: Array, a: Array
+                       ) -> Tuple[Array, Array]:
+    b, t, d = x.shape
+    s = bc.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None].astype(jnp.float32) * a)
+        h = da * h + (dtt * xt)[..., None].astype(jnp.float32) \
+            * bt[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bds,bs->bd", h, ct.astype(jnp.float32))
+        return h, y.astype(x.dtype)
+
+    h0 = jnp.zeros((b, d, s), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          bc.swapaxes(0, 1), cc.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h

@@ -1,0 +1,28 @@
+"""Production mesh definitions (single-pod 16x16, multi-pod 2x16x16).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+forces 512 host devices via XLA_FLAGS before first jax init, while smoke
+tests and benches must see the 1 real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many local devices exist (CPU tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_data_axes(mesh: Mesh) -> tuple:
+    """Physical axes that together form the logical batch/FSDP axis."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

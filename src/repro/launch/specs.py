@@ -1,0 +1,308 @@
+"""Per-(arch x shape) input specs and shardings for the dry-run.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation);
+``build_cell`` additionally pairs them with the step function and the
+in/out shardings the production mesh needs.
+
+The four assigned shapes:
+  train_4k     seq 4,096   global_batch 256  (train_step)
+  prefill_32k  seq 32,768  global_batch 32   (serve prefill)
+  decode_32k   KV 32,768   global_batch 128  (serve_step, one token)
+  long_500k    KV 524,288  global_batch 1    (serve_step; SSM/hybrid only)
+
+Cache sharding: batch over 'data' when it covers the axis, sequence over
+'model' (and over 'data' too when batch = 1) — KV at 32k x 128 otherwise
+exceeds per-device HBM. Encoder-decoder prefill = the encoder pass (its
+"prompt" is the source audio); its decode cells use a fixed 4,096-frame
+source for cross-attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import partition
+from repro.launch import steps as steps_lib
+from repro.models import registry
+from repro.optim import adamw_init
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+CROSS_SRC_LEN = 4096  # encoder source length for enc-dec decode cells
+
+
+def shape_skips(cfg: ArchConfig, shape: str) -> Optional[str]:
+    """Reason a cell is skipped by design, else None."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return "full-attention arch: 500k decode requires sub-quadratic state"
+    return None
+
+
+# ------------------------------------------------------------------ specs ----
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: str, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of a cell (the paper-mandated
+    ``input_specs()``: shardable stand-ins, no allocation)."""
+    info = SHAPES[shape]
+    s, b = info["seq"], info["batch"]
+    kind = info["kind"]
+    if kind == "train":
+        if cfg.is_encdec:
+            return {
+                "src_embeds": _sds((b, s, cfg.d_model), dtype),
+                "tgt_tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+            }
+        if cfg.frontend != "none":
+            return {
+                "embeds": _sds((b, s, cfg.d_model), dtype),
+                "labels": _sds((b, s), jnp.int32),
+            }
+        return {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    if kind == "prefill":
+        if cfg.is_encdec:
+            return {"src_embeds": _sds((b, s, cfg.d_model), dtype)}
+        if cfg.frontend != "none":
+            return {"embeds": _sds((b, s, cfg.d_model), dtype)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode
+    out = {
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((b,), jnp.int32),
+        "caches": jax.eval_shape(
+            lambda: registry.init_caches(cfg, b, s, dtype)),
+    }
+    if cfg.is_encdec:
+        out["cross"] = (
+            _sds((cfg.n_layers, b, cfg.n_kv_heads, CROSS_SRC_LEN, cfg.head_dim), dtype),
+            _sds((cfg.n_layers, b, cfg.n_kv_heads, CROSS_SRC_LEN, cfg.head_dim), dtype),
+        )
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: str = "train_4k", dtype=jnp.bfloat16):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input."""
+    return batch_specs(cfg, shape, dtype)
+
+
+def param_shapes(cfg: ArchConfig, dtype=None):
+    shapes = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    if dtype is not None:
+        shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, dtype), shapes)
+    return shapes
+
+
+# --------------------------------------------------------------- shardings ----
+
+def _resolve(mesh: Mesh, spec: P) -> P:
+    """Expand the logical 'data' axis to ('pod','data') on multi-pod meshes."""
+    multi = "pod" in mesh.axis_names
+    out = []
+    for e in spec:
+        if e == "data" and multi:
+            out.append(("pod", "data"))
+        elif isinstance(e, tuple):
+            flat = []
+            for a in e:
+                if a == "data" and multi:
+                    flat.extend(["pod", "data"])
+                else:
+                    flat.append(a)
+            out.append(tuple(flat))
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _sanitize(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axes whose extent does not divide the dim (jit input shardings
+    require divisibility; e.g. minicpm's vocab 122753 on a 16-way axis)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is not None and i < len(shape) and \
+                shape[i] % _axis_size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def to_named(mesh: Mesh, spec_tree: Any, shape_tree: Any = None) -> Any:
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, _resolve(mesh, s)), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return jax.tree.map(
+        lambda s, l: NamedSharding(
+            mesh, _sanitize(mesh, _resolve(mesh, s), l.shape)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _cache_spec_one(path, leaf, batched: bool) -> P:
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    name = names[-1]
+    stacked = "body" in names
+    b_ax = "data" if batched else None
+
+    if name in ("k", "v", "k_scale", "v_scale"):   # [B, Hkv, S, D|1]
+        spec = P(b_ax, None, "model" if batched else ("data", "model"), None)
+    elif name in ("ckv", "k_rope"):  # [B, S, C]
+        spec = P(b_ax, "model" if batched else ("data", "model"), None)
+    elif name == "h":                # [B, di, ds]
+        spec = P(b_ax, "model", None)
+    elif name == "conv":             # [B, kw-1, di]
+        spec = P(b_ax, None, "model")
+    elif name == "c":
+        spec = (P(b_ax, None, "model", None) if leaf.ndim - stacked == 4
+                else P(b_ax, "model"))
+    elif name == "n":
+        spec = (P(b_ax, None, "model") if leaf.ndim - stacked == 3
+                else P(b_ax, "model"))
+    elif name == "m":
+        spec = (P(b_ax, None) if leaf.ndim - stacked == 2 else P(b_ax, "model"))
+    else:
+        spec = P(*([None] * (leaf.ndim - (1 if stacked else 0))))
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes: Any, batched: bool) -> Any:
+    if cfg.is_encdec:
+        # {k, v: [L, B, Hkv, S, dh]}
+        b_ax = "data" if batched else None
+        s_ax = "model" if batched else ("data", "model")
+        return {k: P(None, b_ax, None, s_ax, None) for k in cache_shapes}
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _cache_spec_one(p, l, batched), cache_shapes)
+
+
+def _batch_data_specs(batch: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch.items():
+        out[k] = P("data", *([None] * (v.ndim - 1)))
+    return out
+
+
+# --------------------------------------------------------------- cells ----
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ArchConfig
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+
+
+def build_cell(cfg: ArchConfig, shape: str, mesh: Mesh,
+               dtype=jnp.bfloat16) -> Cell:
+    """Assemble (step_fn, abstract args, shardings) for one dry-run cell."""
+    skip = shape_skips(cfg, shape)
+    if skip:
+        raise ValueError(f"cell skipped by design: {skip}")
+    info = SHAPES[shape]
+    kind = info["kind"]
+    b = info["batch"]
+    batched = b >= 16
+    batch = batch_specs(cfg, shape, dtype)
+
+    pspecs = partition.param_specs(param_shapes(cfg))
+
+    if kind == "train":
+        params = param_shapes(cfg)                       # fp32 master
+        opt = jax.eval_shape(lambda: adamw_init(params))
+        ospecs = partition.opt_state_specs(opt)
+        step = steps_lib.make_train_step(
+            cfg, dtype=dtype, num_microbatches=cfg.train_microbatches)
+        metrics_shapes = {"loss": 0, "ce_loss": 0, "aux_loss": 0, "tokens": 0,
+                          "grad_norm": 0, "lr": 0}
+        if cfg.is_encdec:
+            metrics_shapes = {"loss": 0, "ce_loss": 0, "tokens": 0,
+                              "grad_norm": 0, "lr": 0}
+        m_specs = {k: P() for k in metrics_shapes}
+        bspecs = _batch_data_specs(batch)
+        return Cell(
+            cfg, shape, kind, step,
+            args=(params, opt, batch),
+            in_shardings=(to_named(mesh, pspecs, params),
+                          to_named(mesh, ospecs, opt),
+                          to_named(mesh, bspecs, batch)),
+            out_shardings=(to_named(mesh, pspecs, params),
+                           to_named(mesh, ospecs, opt),
+                           to_named(mesh, m_specs)),
+        )
+
+    serve_params = param_shapes(cfg, dtype)              # bf16 serving weights
+
+    if kind == "prefill":
+        step = steps_lib.make_prefill(cfg, dtype)
+        bspecs = _batch_data_specs(batch)
+        if cfg.is_encdec:
+            args = (serve_params, batch["src_embeds"])
+            in_sh = (to_named(mesh, pspecs, serve_params),
+                     to_named(mesh, bspecs["src_embeds"], batch["src_embeds"]))
+        else:
+            args = (serve_params, batch)
+            in_sh = (to_named(mesh, pspecs, serve_params),
+                     to_named(mesh, bspecs, batch))
+        return Cell(cfg, shape, kind, step, args, in_sh, out_shardings=None)
+
+    # decode
+    step = steps_lib.make_decode_step(cfg, dtype)
+    cspecs = cache_specs(cfg, batch["caches"], batched)
+    tok_spec = P("data") if batched else P()
+    if cfg.is_encdec:
+        cross_spec = (P(None, "data" if batched else None, None, None, None),) * 2
+        args = (serve_params, batch["caches"], batch["cross"], batch["token"],
+                batch["pos"])
+        in_sh = (to_named(mesh, pspecs, serve_params),
+                 to_named(mesh, cspecs, batch["caches"]),
+                 to_named(mesh, cross_spec, batch["cross"]),
+                 to_named(mesh, tok_spec), to_named(mesh, tok_spec))
+        out_sh = (to_named(mesh, tok_spec), None,
+                  to_named(mesh, cspecs, batch["caches"]))
+    else:
+        args = (serve_params, batch["caches"], batch["token"], batch["pos"])
+        in_sh = (to_named(mesh, pspecs, serve_params),
+                 to_named(mesh, cspecs, batch["caches"]),
+                 to_named(mesh, tok_spec), to_named(mesh, tok_spec))
+        out_sh = (to_named(mesh, tok_spec), None,
+                  to_named(mesh, cspecs, batch["caches"]))
+    return Cell(cfg, shape, kind, step, args, in_sh, out_sh)

@@ -1,0 +1,127 @@
+"""Step builders: train (fwd+bwd+AdamW), prefill, decode — jit/pjit-ready.
+
+These are the functions the dry-run lowers and the drivers execute. All are
+pure (params, state, batch) -> (params', state', metrics) so they compose
+with jit in/out shardings, donation, and checkpointing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm, registry
+from repro.models.layers import rmsnorm
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim import compression as comp_lib
+
+
+def make_train_step(cfg: ArchConfig, schedule: Optional[Callable] = None,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    dtype=jnp.bfloat16, num_microbatches: int = 1,
+                    grad_compression: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``num_microbatches`` > 1 folds the global batch into a gradient-
+    accumulation scan — the standard compute/reduce-scatter overlap lever.
+    ``grad_compression`` applies error-feedback int8 to gradients (the
+    error buffer rides in opt_state["err"]).
+    """
+    lfn = registry.loss_fn(cfg)
+
+    def loss_for(p, b):
+        # §Perf iteration B2: cast the whole param tree to the compute dtype
+        # ONCE, before FSDP gathers happen. GSPMD otherwise all-gathers the
+        # fp32 masters and casts after — 2x the collective bytes (measured
+        # on jamba train: f32 weight gathers + f32 embed all-reduces).
+        # Matrices only; norms/scales stay fp32 for stability.
+        pc = jax.tree.map(
+            lambda x: x.astype(dtype)
+            if (x.dtype == jnp.float32 and x.ndim >= 2) else x, p)
+        return lfn(pc, b, dtype)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            def re(x):
+                return x.reshape((num_microbatches, x.shape[0] // num_microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(re, batch)
+
+            def acc(carry, b):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_for, has_aux=True)(params, b)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, lsum), ms = jax.lax.scan(acc, (g0, jnp.float32(0)), mb)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = lsum * inv
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        opt_state = dict(opt_state)
+        if grad_compression:
+            grads, new_err = comp_lib.compress_tree(grads, opt_state["err"])
+            opt_state["err"] = new_err
+        err = opt_state.pop("err", None)
+        lr = schedule(opt_state["count"]) if schedule else jnp.float32(3e-4)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, lr, opt_cfg)
+        if err is not None:
+            new_opt["err"] = err
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ArchConfig, dtype=jnp.bfloat16) -> Callable:
+    """Full-sequence forward producing last-token logits (+ caches for
+    decoder-only archs; encoder output + cross-K/V for enc-dec)."""
+    if cfg.is_encdec:
+        def prefill(params, src_embeds):
+            enc_out = encdec.encode(cfg, params, src_embeds.astype(dtype))
+            cross = encdec.precompute_cross_kv(cfg, params, enc_out)
+            return enc_out, cross
+        return prefill
+
+    def prefill(params, batch):
+        x, caches, _ = lm.forward(cfg, params, batch.get("tokens"),
+                                  batch.get("embeds"), collect_caches=True,
+                                  dtype=dtype)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"]["table"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = (x[:, -1] @ head.astype(x.dtype)).astype(jnp.float32)
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, dtype=jnp.bfloat16,
+                     greedy: bool = True) -> Callable:
+    """One-token serve step: (params, caches, [cross,] token, pos) ->
+    (next_token, logits, caches)."""
+    if cfg.is_encdec:
+        def step(params, caches, cross, token, pos):
+            logits, new_caches = encdec.decode_step(cfg, params, caches, cross,
+                                                    token, pos, dtype)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, logits, new_caches
+        return step
+
+    def step(params, caches, token, pos):
+        logits, new_caches = lm.decode_step(cfg, params, caches, token, pos,
+                                            dtype)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, new_caches
+
+    return step

@@ -1,0 +1,180 @@
+"""GQA attention (RoPE, optional qk-norm / QKV bias) with KV-cache support.
+
+Covers qwen2/qwen3/minicpm/starcoder2/llava/phi3.5/jamba attention layers
+and the seamless encoder/decoder (incl. cross-attention). Kernel dispatch
+goes through ``repro.kernels``: the pure-jnp reference on CPU, the Pallas
+flash kernels on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.distributed.shard import constrain
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import attention as flash_attention
+from repro.models.blocked_attention import blocked_attention
+from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, truncated_normal
+
+Params = Dict[str, Array]
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   d_head: int, qk_norm: bool = False, qkv_bias: bool = False,
+                   ) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": truncated_normal(ks[0], (d_model, n_heads * d_head)),
+        "wk": truncated_normal(ks[1], (d_model, n_kv_heads * d_head)),
+        "wv": truncated_normal(ks[2], (d_model, n_kv_heads * d_head)),
+        "wo": truncated_normal(ks[3], (n_heads * d_head, d_model),
+                               std=0.02 / jnp.sqrt(2.0)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv_heads * d_head,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv_heads * d_head,), jnp.float32)
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(d_head)
+        p["k_norm"] = init_rmsnorm(d_head)
+    return p
+
+
+def _project(p: Params, x: Array, n_heads: int, n_kv_heads: int, d_head: int,
+             qk_norm: bool, eps: float) -> Tuple[Array, Array, Array]:
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, n_heads, d_head).swapaxes(1, 2)       # [B, Hq, S, D]
+    k = k.reshape(b, s, n_kv_heads, d_head).swapaxes(1, 2)
+    v = v.reshape(b, s, n_kv_heads, d_head).swapaxes(1, 2)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q, eps)
+        k = rmsnorm(p["k_norm"], k, eps)
+    return q, k, v
+
+
+def attn_full(p: Params, x: Array, *, n_heads: int, n_kv_heads: int,
+              d_head: int, rope_theta: float = 10000.0, causal: bool = True,
+              qk_norm: bool = False, eps: float = 1e-5,
+              positions: Optional[Array] = None,
+              use_rope: bool = True,
+              backend: str = "ref") -> Tuple[Array, Tuple[Array, Array]]:
+    """Full-sequence attention (train / prefill).
+
+    Returns (out [B, S, d_model], (k, v) for KV-cache seeding).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project(p, x, n_heads, n_kv_heads, d_head, qk_norm, eps)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        q = apply_rope(q, positions[:, None, :], rope_theta)
+        k = apply_rope(k, positions[:, None, :], rope_theta)
+    if backend == "pallas":
+        o = flash_attention(q, k, v, causal, True)
+    else:
+        o = blocked_attention(q, k, v, causal=causal)
+    o = o.swapaxes(1, 2).reshape(b, s, n_heads * d_head)
+    return o @ p["wo"].astype(x.dtype), (k, v)
+
+
+def _quant_token(t: Array) -> Tuple[Array, Array]:
+    """Symmetric int8 per (batch, head, token): t [B, Hkv, 1, D]."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def attn_decode(p: Params, x: Array, kv_cache: Dict[str, Array], *,
+                n_heads: int, n_kv_heads: int, d_head: int,
+                rope_theta: float = 10000.0, qk_norm: bool = False,
+                eps: float = 1e-5, pos: Array,
+                use_rope: bool = True,
+                backend: str = "ref") -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode. x: [B, 1, d]; pos: int32[B] current lengths.
+
+    Cache forms: bf16/f32 {k, v: [B, Hkv, S, D]} or int8-quantized
+    {k, v: int8 [B, Hkv, S, D], k_scale, v_scale: f16 [B, Hkv, S, 1]}
+    (§Perf cell C: halves the decode memory-roofline term; per-token
+    symmetric scales keep the logit error at the bf16 noise level).
+    Returns (out [B, 1, d], new cache).
+    """
+    b = x.shape[0]
+    quant = "k_scale" in kv_cache
+    q, k, v = _project(p, x, n_heads, n_kv_heads, d_head, qk_norm, eps)
+    if use_rope:
+        q = apply_rope(q, pos[:, None, None], rope_theta)
+        k = apply_rope(k, pos[:, None, None], rope_theta)
+
+    def scatter(cache, new, i):
+        return jax.vmap(
+            lambda c, n, j: jax.lax.dynamic_update_slice(c, n, (0, j, 0))
+        )(cache, new, i)
+
+    if quant:
+        kq, ks = _quant_token(k[:, :, 0:1])
+        vq, vs = _quant_token(v[:, :, 0:1])
+        new_cache = {
+            "k": scatter(kv_cache["k"], kq, pos),
+            "v": scatter(kv_cache["v"], vq, pos),
+            "k_scale": scatter(kv_cache["k_scale"], ks, pos),
+            "v_scale": scatter(kv_cache["v_scale"], vs, pos),
+        }
+        dtype = x.dtype
+        ck = new_cache["k"].astype(dtype) * new_cache["k_scale"].astype(dtype)
+        cv = new_cache["v"].astype(dtype) * new_cache["v_scale"].astype(dtype)
+    else:
+        ck = scatter(kv_cache["k"], k[:, :, 0:1], pos)
+        cv = scatter(kv_cache["v"], v[:, :, 0:1], pos)
+        new_cache = {"k": ck, "v": cv}
+    o = decode_attention(q[:, :, 0], ck, cv, pos + 1, backend == "pallas")
+    o = o.reshape(b, 1, n_heads * d_head)
+    return o @ p["wo"].astype(x.dtype), new_cache
+
+
+def attn_cross(p: Params, x: Array, enc_kv: Tuple[Array, Array], *,
+               n_heads: int, n_kv_heads: int, d_head: int,
+               qk_norm: bool = False, eps: float = 1e-5,
+               backend: str = "ref") -> Array:
+    """Cross-attention: queries from x, K/V precomputed from encoder output."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, s, n_heads, d_head).swapaxes(1, 2)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q, eps)
+    k, v = enc_kv
+    if backend == "pallas":
+        o = flash_attention(q, k, v, False, True)
+    else:
+        o = blocked_attention(q, k, v, causal=False)
+    o = o.swapaxes(1, 2).reshape(b, s, n_heads * d_head)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(p: Params, enc_out: Array, *, n_kv_heads: int, d_head: int,
+             qk_norm: bool = False, eps: float = 1e-5) -> Tuple[Array, Array]:
+    """Precompute encoder K/V for cross-attention (cached across decode)."""
+    b, s, _ = enc_out.shape
+    k = enc_out @ p["wk"].astype(enc_out.dtype)
+    v = enc_out @ p["wv"].astype(enc_out.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    k = k.reshape(b, s, n_kv_heads, d_head).swapaxes(1, 2)
+    v = v.reshape(b, s, n_kv_heads, d_head).swapaxes(1, 2)
+    if qk_norm:
+        k = rmsnorm(p["k_norm"], k, eps)
+    return k, v

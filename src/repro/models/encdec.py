@@ -1,0 +1,192 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+Speech encoder (bidirectional self-attn over stub frame embeddings — the
+modality frontend is precomputed per the assignment) + text decoder with
+causal self-attn, cross-attn to encoder output, and SwiGLU FFNs. Both
+stacks scan stacked layer params like the decoder-only LM.
+
+Decode uses a self-attn KV cache plus *static* cross-attn K/V computed once
+from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shard import constrain
+from repro.models import attention as attn_lib
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    init_swiglu,
+    rmsnorm,
+    swiglu,
+    truncated_normal,
+)
+
+Params = Dict[str, Any]
+
+
+def _init_attn(key, cfg: ArchConfig) -> Params:
+    return attn_lib.init_attention(
+        key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        cfg.qk_norm, cfg.qkv_bias,
+    )
+
+
+def _init_enc_layer(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model),
+        "self_attn": _init_attn(k1, cfg),
+        "norm2": init_rmsnorm(cfg.d_model),
+        "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model),
+        "self_attn": _init_attn(k1, cfg),
+        "norm_x": init_rmsnorm(cfg.d_model),
+        "cross_attn": _init_attn(k2, cfg),
+        "norm2": init_rmsnorm(cfg.d_model),
+        "ffn": init_swiglu(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    cfg.validate()
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": init_embedding(ks[2], cfg.vocab, cfg.d_model),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": truncated_normal(ks[3], (cfg.d_model, cfg.vocab)),
+    }
+
+
+def _attn_kw(cfg: ArchConfig) -> Dict[str, Any]:
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+                qk_norm=cfg.qk_norm, eps=cfg.norm_eps)
+
+
+def encode(cfg: ArchConfig, params: Params, src_embeds: Array) -> Array:
+    """src_embeds: [B, S_src, d] (precomputed frame embeddings, frontend stub)."""
+    x = constrain(src_embeds, "data", None, None)
+    kw = _attn_kw(cfg)
+
+    def layer(x, p):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        o, _ = attn_lib.attn_full(p["self_attn"], h, causal=False, **kw)
+        x = x + o
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + swiglu(p["ffn"], h)
+        return constrain(x, "data", None, None), None
+
+    x, _ = jax.lax.scan(layer, x, params["enc"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(cfg: ArchConfig, params: Params, enc_out: Array,
+                 tgt_tokens: Array, dtype=jnp.float32) -> Array:
+    """Teacher-forced decoder forward. Returns hidden [B, S_tgt, d]."""
+    x = embed(params["embed"], tgt_tokens, dtype)
+    x = constrain(x, "data", None, None)
+    kw = _attn_kw(cfg)
+
+    def layer(x, p):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        o, _ = attn_lib.attn_full(p["self_attn"], h, causal=True, **kw)
+        x = x + o
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        ekv = attn_lib.cross_kv(p["cross_attn"], enc_out,
+                                n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+                                qk_norm=cfg.qk_norm, eps=cfg.norm_eps)
+        o = attn_lib.attn_cross(p["cross_attn"], h, ekv,
+                                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                                d_head=cfg.head_dim, qk_norm=cfg.qk_norm,
+                                eps=cfg.norm_eps)
+        x = x + o
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + swiglu(p["ffn"], h)
+        return constrain(x, "data", None, None), None
+
+    x, _ = jax.lax.scan(layer, x, params["dec"])
+    return x
+
+
+def seq2seq_loss(cfg: ArchConfig, params: Params, src_embeds: Array,
+                 tgt_tokens: Array, labels: Array, dtype=jnp.float32
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    enc_out = encode(cfg, params, src_embeds.astype(dtype))
+    x = decode_train(cfg, params, enc_out, tgt_tokens, dtype)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    loss, count = chunked_softmax_xent(x, params["lm_head"], labels,
+                                       cfg.loss_chunk)
+    return loss, {"ce_loss": loss, "tokens": count}
+
+
+def init_dec_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                    dtype=jnp.float32) -> Params:
+    l, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((l, batch, hkv, max_seq, dh), dtype),
+        "v": jnp.zeros((l, batch, hkv, max_seq, dh), dtype),
+    }
+
+
+def precompute_cross_kv(cfg: ArchConfig, params: Params, enc_out: Array
+                        ) -> Tuple[Array, Array]:
+    """Per-layer cross K/V from encoder output: [L, B, Hkv, S_src, dh]."""
+
+    def one(p):
+        return attn_lib.cross_kv(p["cross_attn"], enc_out,
+                                 n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+                                 qk_norm=cfg.qk_norm, eps=cfg.norm_eps)
+
+    return jax.vmap(one)(params["dec"])
+
+
+def decode_step(cfg: ArchConfig, params: Params, caches: Params,
+                cross: Tuple[Array, Array], token: Array, pos: Array,
+                dtype=jnp.float32) -> Tuple[Array, Params]:
+    """One decoder token. cross: precomputed per-layer cross K/V."""
+    x = embed(params["embed"], token[:, None], dtype)
+    kw = _attn_kw(cfg)
+
+    def layer(x, inp):
+        p, ck, cv, ckv_k, ckv_v = inp
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        o, new_kv = attn_lib.attn_decode(p["self_attn"], h, {"k": ck, "v": cv},
+                                         pos=pos, **kw)
+        x = x + o
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        o = attn_lib.attn_cross(p["cross_attn"], h, (ckv_k, ckv_v),
+                                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                                d_head=cfg.head_dim, qk_norm=cfg.qk_norm,
+                                eps=cfg.norm_eps)
+        x = x + o
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + swiglu(p["ffn"], h)
+        return x, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        layer, x, (params["dec"], caches["k"], caches["v"], cross[0], cross[1])
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv}

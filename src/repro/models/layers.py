@@ -1,0 +1,144 @@
+"""Shared model layers: norms, RoPE, SwiGLU FFN, embeddings.
+
+Pure-pytree parameterization (dicts of arrays) + functional apply, so
+params flow directly through pjit shardings and the checkpoint layer
+without a framework dependency. Compute dtype is the input dtype (bf16 on
+TPU, fp32 in CPU smoke tests); norms and softmax statistics accumulate in
+fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+Params = Dict[str, Array]
+
+
+def truncated_normal(key, shape, std: float = 0.02, dtype=jnp.float32) -> Array:
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * std
+
+
+# ---- norms -------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---- rotary embeddings -----------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., S, D] (D even); positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---- FFNs --------------------------------------------------------------------------
+
+def init_swiglu(key, d: int, h: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal(k1, (d, h)),
+        "w_up": truncated_normal(k2, (d, h)),
+        "w_down": truncated_normal(k3, (h, d), std=0.02 / jnp.sqrt(2.0)),
+    }
+
+
+def swiglu(p: Params, x: Array) -> Array:
+    from repro.distributed.shard import constrain
+
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    h = g * u
+    if h.ndim == 3:  # [B, S, ffn]: TP shard the hidden dim
+        h = constrain(h, "data", None, "model")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---- embeddings ----------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": truncated_normal(key, (vocab, d))}
+
+
+def embed(p: Params, tokens: Array, dtype=jnp.float32) -> Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def chunked_softmax_xent(
+    x: Array,            # [B, S, d] final hidden states
+    head: Array,         # [d, V] unembedding
+    labels: Array,       # [B, S] int32 (-100 = ignore)
+    chunk: int = 512,
+) -> Tuple[Array, Array]:
+    """Cross entropy without materializing [B, S, V].
+
+    Scans sequence chunks; per chunk computes logits [B, c, V] in fp32,
+    accumulates (sum_loss, count). The big-vocab archs (qwen*, seamless at
+    150-256k vocab) would otherwise allocate hundreds of GiB of logits.
+    """
+    b, s, d = x.shape
+    if s % chunk:  # pad tail with ignored labels
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        s += pad
+    n_chunks = s // chunk
+    xc = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)       # [n, B, c, d]
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)     # [n, B, c]
+
+    def chunk_loss(xb, lb):
+        logits = (xb @ head.astype(xb.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lb >= 0
+        loss = jnp.where(valid, lse - picked, 0.0)
+        return loss.sum(), valid.sum()
+
+    # recompute chunk logits in bwd: saving them across chunks would
+    # materialize the full [B, S, V] the chunking exists to avoid
+    chunk_loss = jax.checkpoint(
+        chunk_loss, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        l, c = chunk_loss(*inp)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)), (xc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1), cnt

@@ -1,0 +1,361 @@
+"""Decoder-only LM: embeds -> [prefix + G x period blocks] -> norm -> logits.
+
+Layer bodies are *stacked over groups* and applied with ``lax.scan`` so an
+80-layer qwen2-72b lowers to one period of HLO — the compile-time guarantee
+the 512-device dry-run depends on. Each period slot has its own mixer
+("attn" | "mamba" | "mlstm" | "slstm") and FFN kind ("dense" | "moe" |
+"none"), which expresses every assigned decoder arch:
+
+  dense GQA   period=("attn",), ffn=("dense",)
+  phi3.5-moe  period=("attn",), ffn=("moe",)
+  deepseek-v3 prefix=3x(attn,dense) + period=("attn",), ffn=("moe",)  (MLA)
+  jamba       period=(m,m,m,m,attn,m,m,m), ffn=(dense,moe)*4
+  xlstm       period=(mlstm x7, slstm), ffn=("none",)*8
+
+Caches mirror the layer structure; decode scans the same groups carrying
+the token's hidden state and updating per-slot caches in place.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shard import constrain
+from repro.models import attention as attn_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (
+    chunked_softmax_xent,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    init_swiglu,
+    rmsnorm,
+    swiglu,
+    truncated_normal,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- blocks ----
+
+def init_block(key, cfg: ArchConfig, mixer: str, ffn: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": init_rmsnorm(cfg.d_model)}
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            p["mixer"] = mla_lib.init_mla(k1, cfg)
+        else:
+            p["mixer"] = attn_lib.init_attention(
+                k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                cfg.qk_norm, cfg.qkv_bias,
+            )
+    elif mixer == "mamba":
+        p["mixer"] = ssm_lib.init_mamba(k1, cfg)
+    elif mixer == "mlstm":
+        p["mixer"] = xlstm_lib.init_mlstm(k1, cfg)
+    elif mixer == "slstm":
+        p["mixer"] = xlstm_lib.init_slstm(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        if ffn == "moe":
+            p["ffn"] = moe_lib.init_moe(k2, cfg)
+        else:
+            p["ffn"] = init_swiglu(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _mixer_full(p: Params, x: Array, cfg: ArchConfig, mixer: str,
+                positions: Optional[Array], collect_cache: bool
+                ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    # NOTE: when collect_cache is False the cache tensors must not be
+    # returned at all — outputs of a jax.checkpoint-wrapped layer cannot be
+    # dead-code-eliminated, so returning unused KV caches from the remat'd
+    # train path would stack [L, B, Hkv, S, D] tensors in HBM (observed:
+    # +50 GiB/device on qwen3 train_4k).
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            out, cache = mla_lib.mla_full(p, x, cfg, positions)
+            return out, (cache if collect_cache else None)
+        out, (k, v) = attn_lib.attn_full(
+            p, x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.head_dim, rope_theta=cfg.rope_theta, causal=cfg.causal,
+            qk_norm=cfg.qk_norm, eps=cfg.norm_eps, positions=positions,
+            use_rope=cfg.use_rope,
+        )
+        return out, ({"k": k, "v": v} if collect_cache else None)
+    if mixer == "mamba":
+        out, cache = ssm_lib.mamba_full(p, x, cfg)
+    elif mixer == "mlstm":
+        out, cache = xlstm_lib.mlstm_full(p, x, cfg)
+    elif mixer == "slstm":
+        out, cache = xlstm_lib.slstm_full(p, x, cfg)
+    else:
+        raise ValueError(mixer)
+    return out, (cache if collect_cache else None)
+
+
+def _mixer_decode(p: Params, x: Array, cache: Dict[str, Array],
+                  cfg: ArchConfig, mixer: str, pos: Array
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            return mla_lib.mla_decode(p, x, cache, cfg, pos)
+        return attn_lib.attn_decode(
+            p, x, cache, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, eps=cfg.norm_eps, pos=pos,
+            use_rope=cfg.use_rope,
+        )
+    if mixer == "mamba":
+        return ssm_lib.mamba_decode(p, x, cache, cfg)
+    if mixer == "mlstm":
+        return xlstm_lib.mlstm_decode(p, x, cache, cfg)
+    if mixer == "slstm":
+        return xlstm_lib.slstm_decode(p, x, cache, cfg)
+    raise ValueError(mixer)
+
+
+def apply_block_full(p: Params, x: Array, cfg: ArchConfig, mixer: str,
+                     ffn: str, positions: Optional[Array],
+                     collect_cache: bool = False
+                     ) -> Tuple[Array, Optional[Dict[str, Array]], Array]:
+    """Pre-norm residual block. Returns (x, cache-or-None, moe_aux)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    mix, cache = _mixer_full(p["mixer"], h, cfg, mixer, positions, collect_cache)
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if ffn != "none":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            out, metrics = moe_lib.moe_forward(p["ffn"], h, cfg)
+            aux = metrics["aux_loss"]
+        else:
+            out = swiglu(p["ffn"], h)
+        x = x + out
+    x = constrain(x, "data", None, None)
+    return x, cache, aux
+
+
+def apply_block_decode(p: Params, x: Array, cache: Dict[str, Array],
+                       cfg: ArchConfig, mixer: str, ffn: str, pos: Array
+                       ) -> Tuple[Array, Dict[str, Array]]:
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    mix, new_cache = _mixer_decode(p["mixer"], h, cache, cfg, mixer, pos)
+    x = x + mix
+    if ffn != "none":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            out, _ = moe_lib.moe_forward(p["ffn"], h, cfg)
+        else:
+            out = swiglu(p["ffn"], h)
+        x = x + out
+    return x, new_cache
+
+
+# ---------------------------------------------------------------- model ----
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    cfg.validate()
+    keys = jax.random.split(key, 4 + len(cfg.prefix))
+    params: Params = {
+        "embed": init_embedding(keys[0], cfg.vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal(keys[1], (cfg.d_model, cfg.vocab))
+    params["prefix"] = [
+        init_block(keys[3 + i], cfg, m, f) for i, (m, f) in enumerate(cfg.prefix)
+    ]
+    g = cfg.groups
+    body: Params = {}
+    base = jax.random.fold_in(keys[2], 7)
+    for slot, (m, f) in enumerate(zip(cfg.period, cfg.ffn_period)):
+        slot_keys = jax.random.split(jax.random.fold_in(base, slot), g)
+        body[str(slot)] = jax.vmap(
+            lambda k, m=m, f=f: init_block(k, cfg, m, f)
+        )(slot_keys)
+    params["body"] = body
+    return params
+
+
+def _remat_wrap(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: Optional[Array] = None,
+            embeds: Optional[Array] = None,
+            positions: Optional[Array] = None, collect_caches: bool = False,
+            dtype=jnp.float32) -> Tuple[Array, Params, Array]:
+    """Full-sequence forward. Returns (hidden [B, S, d], caches, moe_aux).
+
+    ``embeds`` (precomputed modality embeddings, the frontend STUB) may
+    replace ``tokens`` — shapes [B, S, d_model].
+    """
+    if embeds is not None:
+        x = embeds.astype(dtype)
+    else:
+        x = embed(params["embed"], tokens, dtype)
+    b, s, _ = x.shape
+    x = constrain(x, "data", None, None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    caches: Params = {"prefix": [], "body": {}}
+    aux = jnp.float32(0.0)
+    for i, (m, f) in enumerate(cfg.prefix):
+        x, cache, a = apply_block_full(params["prefix"][i], x, cfg, m, f,
+                                       positions, collect_caches)
+        caches["prefix"].append(cache)
+        aux = aux + a
+
+    period = list(zip(cfg.period, cfg.ffn_period))
+
+    def group_step(x, group_params):
+        a_g = jnp.float32(0.0)
+        cs = {}
+        for slot, (m, f) in enumerate(period):
+            x, cache, a = apply_block_full(group_params[str(slot)], x, cfg, m,
+                                           f, positions, collect_caches)
+            if collect_caches:
+                cs[str(slot)] = cache
+            a_g = a_g + a
+        return x, (a_g, cs)
+
+    wrapped = _remat_wrap(cfg, group_step)
+
+    def scan_body(x, gp):
+        x, (a_g, cs) = wrapped(x, gp)
+        return x, (a_g, cs)
+
+    x, (aux_g, body_caches) = jax.lax.scan(scan_body, x, params["body"])
+    aux = aux + aux_g.sum()
+    if collect_caches:
+        caches["body"] = body_caches
+    return x, caches, aux
+
+
+def lm_loss(cfg: ArchConfig, params: Params, tokens: Optional[Array],
+            labels: Array, embeds: Optional[Array] = None,
+            dtype=jnp.float32, aux_weight: float = 0.01
+            ) -> Tuple[Array, Dict[str, Array]]:
+    x, _, aux = forward(cfg, params, tokens, embeds, dtype=dtype)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    loss, count = chunked_softmax_xent(x, head, labels, cfg.loss_chunk)
+    total = loss + aux_weight * aux
+    return total, {"ce_loss": loss, "aux_loss": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------- decode ----
+
+def _zero_cache(cfg: ArchConfig, mixer: str, batch: int, max_seq: int,
+                dtype) -> Dict[str, Array]:
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    di = cfg.ssm_expand * cfg.d_model
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            return {
+                "ckv": jnp.zeros((batch, max_seq, cfg.mla_kv_lora), dtype),
+                "k_rope": jnp.zeros((batch, max_seq, cfg.mla_rope_dim), dtype),
+            }
+        if cfg.kv_quant:
+            return {
+                "k": jnp.zeros((batch, hkv, max_seq, dh), jnp.int8),
+                "v": jnp.zeros((batch, hkv, max_seq, dh), jnp.int8),
+                "k_scale": jnp.zeros((batch, hkv, max_seq, 1), jnp.float16),
+                "v_scale": jnp.zeros((batch, hkv, max_seq, 1), jnp.float16),
+            }
+        return {
+            "k": jnp.zeros((batch, hkv, max_seq, dh), dtype),
+            "v": jnp.zeros((batch, hkv, max_seq, dh), dtype),
+        }
+    if mixer == "mamba":
+        return {
+            "h": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+        }
+    if mixer == "mlstm":
+        h, dh_i = cfg.n_heads, (2 * cfg.d_model) // cfg.n_heads
+        return {
+            "c": jnp.zeros((batch, h, dh_i, dh_i), jnp.float32),
+            "n": jnp.zeros((batch, h, dh_i), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32),
+        }
+    if mixer == "slstm":
+        di_s = cfg.d_model
+        return {
+            "c": jnp.zeros((batch, di_s), jnp.float32),
+            "n": jnp.zeros((batch, di_s), jnp.float32),
+            "m": jnp.full((batch, di_s), -1e30, jnp.float32),
+        }
+    raise ValueError(mixer)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.float32
+                ) -> Params:
+    caches: Params = {
+        "prefix": [
+            _zero_cache(cfg, m, batch, max_seq, dtype) for m, _ in cfg.prefix
+        ]
+    }
+    g = cfg.groups
+    body = {}
+    for slot, m in enumerate(cfg.period):
+        one = _zero_cache(cfg, m, batch, max_seq, dtype)
+        body[str(slot)] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), one
+        )
+    caches["body"] = body
+    return caches
+
+
+def decode_step(cfg: ArchConfig, params: Params, caches: Params,
+                token: Array, pos: Array, dtype=jnp.float32
+                ) -> Tuple[Array, Params]:
+    """One decode step. token int32[B]; pos int32[B] current lengths.
+
+    Returns (logits [B, vocab], updated caches).
+    """
+    x = embed(params["embed"], token[:, None], dtype)         # [B, 1, d]
+    new_caches: Params = {"prefix": [], "body": {}}
+    for i, (m, f) in enumerate(cfg.prefix):
+        x, c = apply_block_decode(params["prefix"][i], x, caches["prefix"][i],
+                                  cfg, m, f, pos)
+        new_caches["prefix"].append(c)
+
+    period = list(zip(cfg.period, cfg.ffn_period))
+
+    def group_step(x, gp_and_cache):
+        gp, gc = gp_and_cache
+        new_c = {}
+        for slot, (m, f) in enumerate(period):
+            x, c = apply_block_decode(gp[str(slot)], x, gc[str(slot)], cfg, m,
+                                      f, pos)
+            new_c[str(slot)] = c
+        return x, new_c
+
+    x, body_caches = jax.lax.scan(group_step, x, (params["body"], caches["body"]))
+    new_caches["body"] = body_caches
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = (x[:, 0] @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_caches

@@ -1,0 +1,118 @@
+"""Top-k capacity-based Mixture of Experts with shared experts.
+
+Covers phi3.5-moe (16e top-2), jamba (16e top-2 every other layer) and
+deepseek-v3 (1 shared + 256 routed top-8). Dispatch is the sort-based
+capacity scheme: token-expert assignments are argsorted by expert id,
+positions past each expert's capacity drop (standard GShard semantics), so
+expert FLOPs scale with activated capacity — the honest-roofline accounting
+— and the [E, C, d] dispatch buffer shards over the EP ('model') axis,
+which GSPMD turns into the all-to-all pair of the paper-scale MoE.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shard import constrain
+from repro.models.layers import init_swiglu, swiglu, truncated_normal
+
+Params = Dict[str, Array]
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    e, d, h = cfg.n_experts, cfg.d_model, cfg.ffn_hidden
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": truncated_normal(ks[0], (d, e), std=0.02),
+        "w_gate": truncated_normal(ks[1], (e, d, h)),
+        "w_up": truncated_normal(ks[2], (e, d, h)),
+        "w_down": truncated_normal(ks[3], (e, h, d), std=0.02 / jnp.sqrt(2.0)),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = init_swiglu(ks[4], d, h * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(cfg: ArchConfig, tokens: int) -> int:
+    cap = int(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+# Token-chunked dispatch (§Perf iteration A1): at prefill scale (1M tokens,
+# 256 experts) the [E, capacity, d] dispatch buffer and the [T*k, d] combine
+# gather reach hundreds of GB and drag TB-scale all-gathers with them.
+# Processing tokens in chunks shrinks every dispatch intermediate by
+# T/chunk with identical FLOPs and identical per-chunk capacity semantics
+# (GShard capacity is per-group anyway).
+MOE_CHUNK_TOKENS = 65536
+
+
+def moe_forward(p: Params, x: Array, cfg: ArchConfig) -> Tuple[Array, Dict[str, Array]]:
+    """x: [B, S, d] -> (out [B, S, d], metrics {aux_loss, drop_frac})."""
+    b, s, d = x.shape
+    t = b * s
+    if t > MOE_CHUNK_TOKENS and t % MOE_CHUNK_TOKENS == 0:
+        n_chunks = t // MOE_CHUNK_TOKENS
+        xc = x.reshape(n_chunks, MOE_CHUNK_TOKENS, 1, d)
+
+        def one(xchunk):
+            return moe_forward(p, xchunk, cfg)
+
+        one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+        out, metrics = jax.lax.map(one, xc)
+        return out.reshape(b, s, d), jax.tree.map(jnp.mean, metrics)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, t)
+    xf = x.reshape(t, d)
+
+    # ---- routing (fp32) ------------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    gate, ids = jax.lax.top_k(probs, k)                        # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum(f_e * p_e)
+    me = probs.mean(axis=0)                                    # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ---------------------------------------------------
+    flat_ids = ids.reshape(-1)                                 # [T*k]
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_ids)                              # stable
+    se = flat_ids[order]
+    st = flat_tok[order]
+    sg = flat_gate[order]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < cap
+    drop_frac = 1.0 - keep.mean()
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    idx_e = jnp.where(keep, se, e)                             # OOB -> dropped
+    buf = buf.at[idx_e, jnp.minimum(pos, cap - 1)].set(
+        xf[st], mode="drop"
+    )
+    buf = constrain(buf, "model", None, None)
+
+    # ---- expert FFN (EP-sharded einsums) ------------------------------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edh->ech", buf, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edh->ech", buf, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("ech,ehd->ecd", g * u, p["w_down"].astype(x.dtype))
+    y = constrain(y, "model", None, None)
+
+    # ---- combine -----------------------------------------------------------------------
+    gathered = y[jnp.minimum(se, e - 1), jnp.minimum(pos, cap - 1)]
+    gathered = gathered * (sg * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[st].add(gathered)
+
+    if "shared" in p:
+        out = out + swiglu(p["shared"], xf)
+    metrics = {"aux_loss": aux, "drop_frac": drop_frac}
+    return out.reshape(b, s, d), metrics

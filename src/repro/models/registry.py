@@ -1,0 +1,49 @@
+"""Arch-id -> model entry points (init / loss / decode), family-dispatched."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.is_encdec
+
+
+def init_params(cfg: ArchConfig, key):
+    if cfg.is_encdec:
+        return encdec.init_params(cfg, key)
+    return lm.init_params(cfg, key)
+
+
+def loss_fn(cfg: ArchConfig):
+    """Returns loss(params, batch, dtype) -> (scalar, metrics).
+
+    Batch keys: decoder-only: {tokens|embeds, labels};
+    enc-dec: {src_embeds, tgt_tokens, labels}.
+    """
+    if cfg.is_encdec:
+        def f(params, batch, dtype):
+            return encdec.seq2seq_loss(cfg, params, batch["src_embeds"],
+                                       batch["tgt_tokens"], batch["labels"],
+                                       dtype)
+        return f
+
+    def f(params, batch, dtype):
+        return lm.lm_loss(cfg, params, batch.get("tokens"), batch["labels"],
+                          embeds=batch.get("embeds"), dtype=dtype)
+    return f
+
+
+def decode_entry(cfg: ArchConfig) -> Callable[..., Any]:
+    if cfg.is_encdec:
+        return encdec.decode_step
+    return lm.decode_step
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    if cfg.is_encdec:
+        return encdec.init_dec_caches(cfg, batch, max_seq, dtype)
+    return lm.init_caches(cfg, batch, max_seq, dtype)

@@ -1,0 +1,53 @@
+"""Chunked remat-scan for recurrent mixers.
+
+A plain ``lax.scan`` over T timesteps saves its carry at every step for the
+backward pass — for mLSTM that is a [T, B, H, dh, dh] stack (hundreds of
+GiB at 4k x wide heads). ``chunked_scan`` nests two scans (sqrt-T style):
+the outer scan saves only one carry per chunk and the inner scan is
+wrapped in ``jax.checkpoint(nothing_saveable)`` so its per-step states are
+recomputed during backprop. Memory drops from O(T) carries to
+O(T/chunk + chunk), at the cost of one extra forward over each chunk —
+the same trade the xLSTM/Mamba chunkwise-parallel kernels make on GPU.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step: Callable, init: Any, xs: Any, chunk: int = 128
+                 ) -> Tuple[Any, Any]:
+    """Equivalent to ``lax.scan(step, init, xs)`` with chunked remat.
+
+    ``xs`` leaves have leading time axis T; T % chunk need not hold — the
+    tail falls back to a plain scan. Returns (final_carry, stacked_ys).
+    """
+    t = jax.tree.leaves(xs)[0].shape[0]
+    if t <= chunk:
+        return jax.lax.scan(step, init, xs)
+    n_chunks, rem = divmod(t, chunk)
+
+    head = jax.tree.map(lambda a: a[: n_chunks * chunk], xs)
+    head = jax.tree.map(
+        lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), head)
+
+    def run_chunk(carry, xs_chunk):
+        return jax.lax.scan(step, carry, xs_chunk)
+
+    run_chunk = jax.checkpoint(
+        run_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    carry, ys_head = jax.lax.scan(run_chunk, init, head)
+    ys_head = jax.tree.map(
+        lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:]), ys_head)
+    if rem == 0:
+        return carry, ys_head
+
+    tail = jax.tree.map(lambda a: a[n_chunks * chunk:], xs)
+    carry, ys_tail = jax.lax.scan(step, carry, tail)
+    ys = jax.tree.map(
+        lambda h, tl: jnp.concatenate([h, tl], axis=0), ys_head, ys_tail)
+    return carry, ys

@@ -1,0 +1,129 @@
+"""Mamba selective-SSM mixer (jamba's dominant layer type).
+
+Recurrent form: ``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t``,
+``y_t = C_t . h_t + D x_t`` with input-dependent (dt, B, C) — evaluated with
+``lax.scan`` over time carrying h [B, d_inner, d_state]. The scan form keeps
+HLO size O(1) in sequence length and gives O(1)-state decode (why jamba
+runs the long_500k cell). A chunked associative-scan Pallas kernel is the
+known TPU optimization; recorded as a §Perf candidate rather than built —
+the dominant roofline term for the assigned shapes is elsewhere (see
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shard import constrain
+from repro.models.layers import truncated_normal
+from repro.models.scan_utils import chunked_scan
+
+Params = Dict[str, Array]
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(1, -(-cfg.d_model // 16))
+
+
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ds = cfg.ssm_d_state
+    dr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": truncated_normal(ks[0], (d, 2 * di)),
+        "conv_w": truncated_normal(ks[1], (cfg.ssm_d_conv, di), std=0.1),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_x": truncated_normal(ks[2], (di, dr + 2 * ds)),
+        "w_dt": truncated_normal(ks[3], (dr, di), std=dr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": truncated_normal(ks[4], (di, d), std=0.02 / jnp.sqrt(2.0)),
+    }
+
+
+def _conv_causal(p: Params, x: Array, state: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv over time. x: [B, S, di].
+
+    Returns (out, new_state) where state carries the trailing (d_conv - 1)
+    inputs for decode continuation.
+    """
+    b, s, di = x.shape
+    kw = p["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((b, kw - 1, di), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                  # [B, kw-1+S, di]
+    w = p["conv_w"].astype(x.dtype)                           # [kw, di]
+    out = jnp.zeros_like(x)
+    for i in range(kw):                                       # kw = 4: unrolled taps
+        out = out + xp[:, i : i + s] * w[i]
+    out = out + p["conv_b"].astype(x.dtype)
+    return jax.nn.silu(out), xp[:, -(kw - 1):]
+
+
+def _ssm_params(p: Params, xc: Array, cfg: ArchConfig):
+    dr = _dt_rank(cfg)
+    ds = cfg.ssm_d_state
+    proj = xc @ p["w_x"].astype(xc.dtype)                     # [B, S, dr+2ds]
+    dt = jax.nn.softplus(
+        proj[..., :dr] @ p["w_dt"].astype(xc.dtype)
+        + p["dt_bias"].astype(xc.dtype)
+    )                                                          # [B, S, di]
+    bc = proj[..., dr : dr + ds]                               # [B, S, ds]
+    cc = proj[..., dr + ds :]                                  # [B, S, ds]
+    return dt, bc, cc
+
+
+def mamba_full(p: Params, x: Array, cfg: ArchConfig
+               ) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence selective scan. Returns (out, state for decode)."""
+    b, s, d = x.shape
+    xz = x @ p["w_in"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)                         # [B, S, di]
+    x1 = constrain(x1, "data", None, "model")
+    z = constrain(z, "data", None, "model")
+    xc, conv_state = _conv_causal(p, x1)
+    dt, bc, cc = _ssm_params(p, xc, cfg)
+    dt = constrain(dt, "data", None, "model")
+    a = -jnp.exp(p["A_log"]).astype(jnp.float32)              # [di, ds]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                                  # [B,di],[B,di],[B,ds],[B,ds]
+        da = jnp.exp(dtt[..., None].astype(jnp.float32) * a)   # [B, di, ds]
+        h = da * h + (dtt * xt)[..., None].astype(jnp.float32) * bt[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bds,bs->bd", h, ct.astype(jnp.float32))
+        return h, y.astype(x.dtype)
+
+    h0 = jnp.zeros((b, x1.shape[-1], cfg.ssm_d_state), jnp.float32)
+    xs = (xc.swapaxes(0, 1), dt.swapaxes(0, 1),
+          bc.swapaxes(0, 1), cc.swapaxes(0, 1))
+    h_final, ys = chunked_scan(step, h0, xs, chunk=128)
+    y = ys.swapaxes(0, 1) + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, {"h": h_final, "conv": conv_state}
+
+
+def mamba_decode(p: Params, x: Array, state: Dict[str, Array], cfg: ArchConfig
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token step. x: [B, 1, d]; state: {h [B,di,ds], conv [B,kw-1,di]}."""
+    xz = x @ p["w_in"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv_causal(p, x1, state["conv"])
+    dt, bc, cc = _ssm_params(p, xc, cfg)
+    a = -jnp.exp(p["A_log"]).astype(jnp.float32)
+    dtt, xt = dt[:, 0], xc[:, 0]
+    da = jnp.exp(dtt[..., None].astype(jnp.float32) * a)
+    h = da * state["h"] + (dtt * xt)[..., None].astype(jnp.float32) * bc[:, 0][:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bds,bs->bd", h, cc[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = (y + xt * p["D"].astype(x.dtype)) * jax.nn.silu(z[:, 0])
+    out = (y @ p["w_out"].astype(x.dtype))[:, None]
+    return out, {"h": h, "conv": conv_state}

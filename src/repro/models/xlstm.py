@@ -1,0 +1,199 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows the xLSTM paper's recurrences with exponential gating and the
+max-based stabilizer state m. Simplifications vs the full paper blocks
+(documented in DESIGN.md §Arch-applicability): sLSTM omits the recurrent
+(hidden-to-gate) weights, and both blocks use the Mamba-style up/down
+projection with a SiLU-gated z path instead of the paper's exact
+pre/post-LN block plumbing. Recurrences and state shapes are faithful:
+
+  mLSTM: C_t = f' C + i' (v k^T)   [B, H, dh, dh]
+         n_t = f' n + i' k          [B, H, dh]
+         h_t = (C_t q) / max(|n_t . q|, 1)
+  sLSTM: c_t = f' c + i' z          [B, H, dh] (scalar memory per cell)
+
+Both are lax.scan over time -> O(1)-state decode; xlstm runs long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shard import constrain
+from repro.models.layers import truncated_normal
+from repro.models.scan_utils import chunked_scan
+
+Params = Dict[str, Array]
+
+
+def _dims(cfg: ArchConfig, kind: str) -> Tuple[int, int, int]:
+    """(d_inner, heads, head_dim). mLSTM up-projects by 2, sLSTM stays at d."""
+    pf = 2 if kind == "mlstm" else 1
+    di = pf * cfg.d_model
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+def init_mlstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    di, h, dh = _dims(cfg, "mlstm")
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": truncated_normal(ks[0], (d, 2 * di)),
+        "w_q": truncated_normal(ks[1], (di, di)),
+        "w_k": truncated_normal(ks[2], (di, di)),
+        "w_v": truncated_normal(ks[3], (di, di)),
+        "w_if": truncated_normal(ks[4], (di, 2 * h), std=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]).astype(jnp.float32),
+        "w_out": truncated_normal(ks[5], (di, d), std=0.02 / jnp.sqrt(2.0)),
+    }
+
+
+def init_slstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    di, h, dh = _dims(cfg, "slstm")
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": truncated_normal(ks[0], (d, 4 * di)),   # i, f, z, o pre-acts
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((di,)), jnp.full((di,), 3.0), jnp.zeros((2 * di,))]
+        ).astype(jnp.float32),
+        "w_out": truncated_normal(ks[2], (di, d), std=0.02 / jnp.sqrt(2.0)),
+    }
+
+
+def _mlstm_scan(q, k, v, log_i, log_f, c0, n0, m0):
+    """q,k,v: [S, B, H, dh]; log_i/log_f: [S, B, H]."""
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)                       # [B, H]
+        i_p = jnp.exp(li - m_new)[..., None]                  # [B, H, 1]
+        f_p = jnp.exp(lf + m - m_new)[..., None]
+        n_new = f_p * n + i_p * kt                            # [B, H, dh]
+        c_new = f_p[..., None] * c + i_p[..., None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )                                                      # [B, H, dh, dh]
+        num = jnp.einsum("bhde,bhe->bhd", c_new, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qt))[..., None], 1.0
+        )
+        h = num / den
+        return (c_new, n_new, m_new), h
+
+    (c, n, m), hs = chunked_scan(step, (c0, n0, m0), (q, k, v, log_i, log_f), chunk=64)
+    return hs, (c, n, m)
+
+
+def mlstm_full(p: Params, x: Array, cfg: ArchConfig
+               ) -> Tuple[Array, Dict[str, Array]]:
+    b, s, d = x.shape
+    di, h, dh = _dims(cfg, "mlstm")
+    xz = x @ p["w_in"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, "data", None, "model")
+    z = constrain(z, "data", None, "model")
+    q = (xi @ p["w_q"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (xi @ p["w_k"].astype(x.dtype)).reshape(b, s, h, dh) * (dh ** -0.5)
+    v = (xi @ p["w_v"].astype(x.dtype)).reshape(b, s, h, dh)
+    # TP: head_dim over 'model' (few, wide heads in xLSTM)
+    q = constrain(q, "data", None, None, "model")
+    k = constrain(k, "data", None, None, "model")
+    v = constrain(v, "data", None, None, "model")
+    gates = (xi @ p["w_if"].astype(x.dtype)).astype(jnp.float32) + p["b_if"]
+    log_i, f_pre = gates[..., :h], gates[..., h:]
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    to_t = lambda a: a.swapaxes(0, 1).astype(jnp.float32)
+    hs, (c, n, m) = _mlstm_scan(to_t(q), to_t(k), to_t(v),
+                                log_i.swapaxes(0, 1), log_f.swapaxes(0, 1),
+                                c0, n0, m0)
+    y = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"].astype(x.dtype), {"c": c, "n": n, "m": m}
+
+
+def mlstm_decode(p: Params, x: Array, state: Dict[str, Array], cfg: ArchConfig
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    b = x.shape[0]
+    di, h, dh = _dims(cfg, "mlstm")
+    xz = x @ p["w_in"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi1 = xi[:, 0]
+    q = (xi1 @ p["w_q"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    k = ((xi1 @ p["w_k"].astype(x.dtype)) * (dh ** -0.5)).reshape(b, h, dh).astype(jnp.float32)
+    v = (xi1 @ p["w_v"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    gates = (xi1 @ p["w_if"].astype(x.dtype)).astype(jnp.float32) + p["b_if"]
+    log_i, log_f = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    n_new = f_p * n + i_p * k
+    c_new = f_p[..., None] * c + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q))[..., None], 1.0)
+    y = (num / den).reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(x.dtype), {"c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_full(p: Params, x: Array, cfg: ArchConfig
+               ) -> Tuple[Array, Dict[str, Array]]:
+    b, s, d = x.shape
+    di, h, dh = _dims(cfg, "slstm")
+    pre = (x @ p["w_gates"].astype(x.dtype)).astype(jnp.float32) + p["b_gates"]
+    i_pre, f_pre, z_pre, o_pre = [
+        constrain(t, "data", None, "model") for t in jnp.split(pre, 4, axis=-1)
+    ]   # [B, S, di]
+    log_f = jax.nn.log_sigmoid(f_pre)
+    zt = jnp.tanh(z_pre)
+    ot = jax.nn.sigmoid(o_pre)
+
+    def step(carry, inp):
+        c, n, m = carry                                        # [B, di]
+        li, lf, z_in = inp
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * z_in
+        n_new = f_p * n + i_p
+        h_t = c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new), h_t
+
+    c0 = jnp.zeros((b, di), jnp.float32)
+    n0 = jnp.zeros((b, di), jnp.float32)
+    m0 = jnp.full((b, di), -1e30, jnp.float32)
+    (c, n, m), hs = chunked_scan(
+        step, (c0, n0, m0),
+        (i_pre.swapaxes(0, 1), log_f.swapaxes(0, 1), zt.swapaxes(0, 1)),
+        chunk=128,
+    )
+    y = (hs.swapaxes(0, 1) * ot).astype(x.dtype)
+    return y @ p["w_out"].astype(x.dtype), {"c": c, "n": n, "m": m}
+
+
+def slstm_decode(p: Params, x: Array, state: Dict[str, Array], cfg: ArchConfig
+                 ) -> Tuple[Array, Dict[str, Array]]:
+    b = x.shape[0]
+    di, h, dh = _dims(cfg, "slstm")
+    pre = (x[:, 0] @ p["w_gates"].astype(x.dtype)).astype(jnp.float32) + p["b_gates"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_p = jnp.exp(i_pre - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_pre)
+    n_new = f_p * n + i_p
+    y = (c_new / jnp.maximum(n_new, 1.0) * jax.nn.sigmoid(o_pre)).astype(x.dtype)
+    out = (y[:, None] @ p["w_out"].astype(x.dtype))
+    return out, {"c": c_new, "n": n_new, "m": m_new}

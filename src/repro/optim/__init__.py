@@ -1,0 +1,7 @@
+"""Optimizers, LR schedules, gradient compression."""
+
+from repro.optim.adamw import AdamWConfig, init as adamw_init, update as adamw_update, global_norm
+from repro.optim import schedules, compression
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "schedules", "compression"]

@@ -1,0 +1,68 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+For slow inter-pod links, the DP gradient all-reduce can move int8 instead
+of fp32 (4x fewer bytes). This module implements the numerics: per-tensor
+symmetric int8 quantization with an error-feedback residual so compression
+noise is re-injected next step (Seide et al. / EF-SGD), which keeps
+convergence intact.
+
+Transport note (DESIGN.md §8): under GSPMD the bwd all-reduce is fused into
+the backward pass, so *wire-level* int8 transport needs the shard_map
+manual-collective path in ``compressed_psum`` below; ``compress_tree`` is
+the numerics-only transform usable with any transport. The launcher enables
+this per-config (off by default).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def _quant_int8(x: Array) -> Tuple[Array, Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Quantize->dequantize each gradient leaf with error feedback.
+
+    Returns (compressed_grads, new_error). The returned grads are what the
+    optimizer sees; new_error carries the quantization residual forward.
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _quant_int8(gf)
+        deq = _dequant(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compressed_psum(x: Array, axis_name: str) -> Array:
+    """int8-on-the-wire psum for use inside shard_map: quantize locally,
+    all-reduce the int32-accumulated payload, dequantize with the max scale."""
+    q, scale = _quant_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # requantize against the global scale so the sum is well-defined
+    q2 = jnp.clip(jnp.round(x / scale_max), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis_name)
+    return total.astype(jnp.float32) * scale_max

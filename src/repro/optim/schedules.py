@@ -1,0 +1,41 @@
+"""LR schedules: WSD (minicpm's warmup-stable-decay), cosine, linear."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def wsd(step: Array, peak_lr: float, warmup: int, stable: int, decay: int,
+        floor: float = 0.1) -> Array:
+    """MiniCPM's warmup-stable-decay: linear warmup, flat plateau, then an
+    exponential-ish decay to ``floor * peak`` over ``decay`` steps."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    in_decay = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    decay_mult = (1.0 - in_decay) + in_decay * floor
+    return jnp.where(step < warmup + stable, warm, peak_lr * decay_mult)
+
+
+def cosine(step: Array, peak_lr: float, warmup: int, total: int,
+           floor: float = 0.1) -> Array:
+    step = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def constant(step: Array, peak_lr: float, warmup: int = 0) -> Array:
+    step = step.astype(jnp.float32)
+    return peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) if warmup else jnp.full_like(step, peak_lr)
+
+
+def make(name: str, peak_lr: float, total_steps: int, warmup: int = 100):
+    if name == "wsd":
+        stable = int(total_steps * 0.8) - warmup
+        decay = total_steps - warmup - stable
+        return lambda s: wsd(s, peak_lr, warmup, max(stable, 1), max(decay, 1))
+    if name == "cosine":
+        return lambda s: cosine(s, peak_lr, warmup, total_steps)
+    return lambda s: constant(s, peak_lr, warmup)

@@ -1,0 +1,64 @@
+"""HLO text analysis: collective bytes per op kind.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+collective term comes from parsing the lowered/compiled HLO: sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+
+Shapes are parsed from instruction result types, e.g.
+``bf16[16,1024,1024]{2,1,0}`` -> 2 * 16 * 1024 * 1024 bytes. Tuple results
+(common for fused all-reduces) sum their element sizes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|f16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes_from_text(hlo: str) -> Dict[str, float]:
+    """Sum result bytes of every collective instruction, by op kind."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # instruction lines look like:  %name = TYPE op-name(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        out[kind] += _shape_bytes(result_type)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,48 @@
+"""Trace file round-trip in the DRAMSim3 text format.
+
+DRAMSim3's standalone trace format is one request per line::
+
+    0x2AE00000 READ 120
+    0x2AE00040 WRITE 128
+
+i.e. hex address, opcode, issue cycle. We read/write that format so traces
+are exchangeable with the reference simulator the paper compares against.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.core.simulator import Trace
+
+
+def save_trace(path: str, trace: Trace, word_bytes: int = 4) -> None:
+    t = np.asarray(trace.t)
+    addr = np.asarray(trace.addr).astype(np.int64) * word_bytes
+    wr = np.asarray(trace.is_write)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        for i in range(len(t)):
+            op = "WRITE" if wr[i] else "READ"
+            f.write(f"0x{addr[i]:08X} {op} {int(t[i])}\n")
+
+
+def load_trace(path: str, word_bytes: int = 4) -> Trace:
+    ts, addrs, writes = [], [], []
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if len(parts) != 3:
+                continue
+            a, op, t = parts
+            addrs.append(int(a, 16) // word_bytes)
+            writes.append(1 if op.upper() == "WRITE" else 0)
+            ts.append(int(t))
+    return Trace.from_numpy(
+        np.asarray(ts, np.int64).astype(np.int32),
+        np.asarray(addrs, np.int64) & 0x3FFFFFFF,
+        np.asarray(writes, np.int32),
+    )

@@ -1,0 +1,158 @@
+"""LLM workload -> DRAM trace (the paper's motivation, made concrete).
+
+The paper motivates MemorySim with LLM memory-boundedness but never closes
+the loop from an actual model to a DRAM trace. We do: given one of the
+assigned architecture configs and a step kind, synthesize the per-device
+HBM access stream of one step at a configurable sampling ratio, so the
+cycle-accurate simulator can estimate *effective* (not peak) bandwidth for
+that workload. Used by ``perfmodel.effective_bw`` to refine the roofline
+memory term.
+
+Access stream model (per device, per step):
+
+  * ``decode``  — weight streaming dominates: every parameter shard is read
+    once per token (sequential, large rows); the KV cache / SSM state is
+    read (and appended) per layer; activations are negligible.
+  * ``train``   — parameters read (fwd+bwd), gradients written, activations
+    written in fwd and re-read in bwd, optimizer state read+written.
+  * ``prefill`` — weights read once, activations streamed per layer.
+
+Every simulated request stands for ``bytes_per_req`` real bytes (one DRAM
+burst of 64B times ``sample_every`` — the trace subsampling keeps simulated
+request counts ~10k while preserving the bank/row access *pattern*).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.simulator import Trace
+
+BURST_BYTES = 64  # one DRAM burst (BL8 x 64-bit channel)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadTraffic:
+    """Per-device HBM traffic of one step, in bytes."""
+
+    name: str
+    weight_read: float
+    act_read: float
+    act_write: float
+    kv_read: float
+    kv_write: float
+
+    @property
+    def total(self) -> float:
+        return (self.weight_read + self.act_read + self.act_write
+                + self.kv_read + self.kv_write)
+
+
+def traffic_from_cost(name: str, bytes_accessed: float,
+                      weight_frac: float = 0.6, read_frac: float = 0.8) -> WorkloadTraffic:
+    """Build a traffic split from a compiled ``cost_analysis`` byte count."""
+    wr = bytes_accessed * weight_frac
+    rest = bytes_accessed - wr
+    return WorkloadTraffic(
+        name=name,
+        weight_read=wr,
+        act_read=rest * read_frac * 0.5,
+        act_write=rest * (1 - read_frac),
+        kv_read=rest * read_frac * 0.5,
+        kv_write=0.0,
+    )
+
+
+def synthesize(traffic: WorkloadTraffic, target_requests: int = 12_000,
+               rate: float = 0.9, seed: int = 0) -> Tuple[Trace, float]:
+    """Turn a traffic split into a request trace.
+
+    Returns ``(trace, bytes_per_request)``. Streams are interleaved the way
+    an accelerator's DMA engines would issue them: long sequential weight
+    runs, strided activation bursts, and KV-region appends, shuffled at
+    coarse granularity. ``rate`` is requests/cycle offered to the front end.
+    """
+    rng = np.random.default_rng(seed)
+    total = traffic.total
+    if total <= 0:
+        raise ValueError("empty traffic")
+    bytes_per_req = max(BURST_BYTES, total / target_requests)
+
+    def _n(x: float) -> int:
+        return max(1, int(round(x / bytes_per_req)))
+
+    # address regions (word = 4B granularity; addresses in words)
+    wspan = 1 << 22
+    w_base, a_base, k_base = 0, wspan, wspan + (wspan >> 1)
+    stride = max(1, int(bytes_per_req // 4))
+
+    chunks = []
+    # weights: one long sequential stream, chunked per layer-ish granule
+    n_w = _n(traffic.weight_read)
+    per_chunk = max(16, n_w // 64)
+    pos = 0
+    while pos < n_w:
+        c = min(per_chunk, n_w - pos)
+        addr = w_base + (np.arange(c) + pos) * stride
+        chunks.append((addr % wspan, np.zeros(c, np.int32)))
+        pos += c
+    # activations: strided read + write bursts
+    for frac, is_w in ((traffic.act_read, 0), (traffic.act_write, 1)):
+        n = _n(frac)
+        pos = 0
+        while pos < n:
+            c = min(256, n - pos)
+            base = a_base + int(rng.integers(0, wspan >> 2))
+            addr = base + np.arange(c) * stride
+            chunks.append((addr % (wspan << 1), np.full(c, is_w, np.int32)))
+            pos += c
+    # KV: sequential reads over the cache + small append writes
+    for frac, is_w in ((traffic.kv_read, 0), (traffic.kv_write, 1)):
+        n = _n(frac)
+        pos = 0
+        while pos < n:
+            c = min(512, n - pos)
+            addr = k_base + (np.arange(c) + pos) * stride
+            chunks.append((addr % (wspan << 1), np.full(c, is_w, np.int32)))
+            pos += c
+
+    order = rng.permutation(len(chunks))
+    addrs = np.concatenate([chunks[i][0] for i in order]).astype(np.int64)
+    writes = np.concatenate([chunks[i][1] for i in order])
+    n = len(addrs)
+    gaps = rng.random(n) < rate
+    t = np.cumsum(np.where(gaps, 1, 1 + rng.integers(1, 4, size=n))).astype(np.int64)
+    return (
+        Trace.from_numpy(t.astype(np.int32), addrs & 0x3FFFFFFF, writes,
+                         np.arange(n, dtype=np.int64) & 0x7FFFFFFF),
+        float(bytes_per_req),
+    )
+
+
+def decode_step_traffic(name: str, params_bytes_per_device: float,
+                        kv_bytes_per_device: float) -> WorkloadTraffic:
+    """Single-token decode: read all weight shards once + the full KV/state."""
+    return WorkloadTraffic(
+        name=name,
+        weight_read=params_bytes_per_device,
+        act_read=params_bytes_per_device * 0.01,
+        act_write=params_bytes_per_device * 0.01,
+        kv_read=kv_bytes_per_device,
+        kv_write=kv_bytes_per_device * 0.002,
+    )
+
+
+def train_step_traffic(name: str, params_bytes_per_device: float,
+                       act_bytes_per_device: float) -> WorkloadTraffic:
+    """Training: params fwd+bwd reads, grad writes, act write+read, opt r/w."""
+    return WorkloadTraffic(
+        name=name,
+        weight_read=params_bytes_per_device * 3.0,   # fwd + bwd + optimizer read
+        act_read=act_bytes_per_device,
+        act_write=act_bytes_per_device + params_bytes_per_device * 2.0,  # acts + grad + opt write
+        kv_read=0.0,
+        kv_write=0.0,
+    )

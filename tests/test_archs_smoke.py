@@ -1,0 +1,134 @@
+"""Per-arch smoke tests: reduced same-family config, one fwd/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch.steps import make_train_step
+from repro.models import encdec, lm, registry
+from repro.optim import adamw_init
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_for(cfg, b=2, s=64):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab, size=(b, s + 1)).astype(np.int32)
+    if cfg.is_encdec:
+        return {
+            "src_embeds": jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)) * 0.02, jnp.float32),
+            "tgt_tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+    if cfg.frontend != "none":
+        return {
+            "embeds": jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)) * 0.02, jnp.float32),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+    return {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact published dims (exercised via the
+    dry-run; here we assert the table values)."""
+    cfg = ARCHS[arch]
+    expected = {
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward(arch):
+    cfg = ARCHS[arch].tiny()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, metrics = registry.loss_fn(cfg)(params, batch, jnp.float32)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert loss.shape == ()
+    assert int(metrics["tokens"]) == batch["labels"].size
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = ARCHS[arch].tiny()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, dtype=jnp.float32))
+    batch = _batch_for(cfg)
+    p2, o2, m = step(params, opt, batch)
+    assert jnp.isfinite(m["loss"])
+    assert jnp.isfinite(m["grad_norm"]) and m["grad_norm"] > 0
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert delta > 0
+    # shapes preserved
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert a.shape == b.shape
+        assert jnp.isfinite(b).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "jamba-v0.1-52b",
+                                  "deepseek-v3-671b", "xlstm-1.3b"])
+def test_smoke_decode_shapes(arch):
+    cfg = ARCHS[arch].tiny()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    b, max_seq = 2, 32
+    caches = lm.init_caches(cfg, b, max_seq)
+    logits, caches2 = lm.decode_step(
+        cfg, params, caches, jnp.zeros((b,), jnp.int32),
+        jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+def test_smoke_encdec_decode():
+    cfg = ARCHS["seamless-m4t-medium"].tiny()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    b = 2
+    enc_out = encdec.encode(
+        cfg, params, jnp.ones((b, 16, cfg.d_model), jnp.float32) * 0.01)
+    assert jnp.isfinite(enc_out).all()
+    cross = encdec.precompute_cross_kv(cfg, params, enc_out)
+    caches = encdec.init_dec_caches(cfg, b, 32)
+    logits, _ = encdec.decode_step(
+        cfg, params, caches, cross, jnp.zeros((b,), jnp.int32),
+        jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+def test_moe_routing_properties():
+    """Capacity MoE: outputs finite, aux loss ~1 at uniform routing, drops
+    bounded by capacity factor."""
+    cfg = ARCHS["phi3.5-moe-42b-a6.6b"].tiny()
+    from repro.models import moe as moe_lib
+
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model)) * 0.1
+    p = params["body"]["0"]["ffn"]
+    p0 = jax.tree.map(lambda a: a[0], p)
+    out, metrics = moe_lib.moe_forward(p0, x, cfg)
+    assert out.shape == x.shape
+    assert jnp.isfinite(out).all()
+    assert 0.5 < float(metrics["aux_loss"]) < 4.0
+    assert 0.0 <= float(metrics["drop_frac"]) < 0.5

@@ -1,0 +1,79 @@
+"""Trace generators, trace IO, LLM-workload synthesis, effective bandwidth."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MemSimConfig, simulate
+from repro.traces import BENCHMARKS, load_trace, save_trace
+from repro.traces.llm_workload import (
+    WorkloadTraffic, decode_step_traffic, synthesize, train_step_traffic,
+)
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_generators_wellformed(name):
+    tr = BENCHMARKS[name]()
+    t = np.asarray(tr.t)
+    assert (np.diff(t) > 0).all(), "front-end admits one request per cycle"
+    assert tr.num_requests > 1000
+    assert (np.asarray(tr.addr) >= 0).all()
+    w = np.asarray(tr.is_write)
+    assert set(np.unique(w)) <= {0, 1}
+    assert 0 < w.mean() < 1, "both reads and writes present"
+
+
+def test_trace_file_roundtrip(tmp_path):
+    tr = BENCHMARKS["trace_example"](n=50)
+    path = str(tmp_path / "t.trace")
+    save_trace(path, tr)
+    tr2 = load_trace(path)
+    np.testing.assert_array_equal(np.asarray(tr.t), np.asarray(tr2.t))
+    np.testing.assert_array_equal(np.asarray(tr.addr), np.asarray(tr2.addr))
+    np.testing.assert_array_equal(np.asarray(tr.is_write), np.asarray(tr2.is_write))
+    with open(path) as f:
+        line = f.readline()
+    assert line.startswith("0x") and ("READ" in line or "WRITE" in line)
+
+
+def test_llm_workload_synthesis():
+    traffic = decode_step_traffic("x", 2e9, 0.5e9)
+    trace, bpr = synthesize(traffic, target_requests=4000)
+    assert 3000 < trace.num_requests < 6000
+    assert bpr * trace.num_requests == pytest.approx(traffic.total, rel=0.25)
+    w = np.asarray(trace.is_write).mean()
+    assert w < 0.2, "decode is read-dominated"
+
+    tt = train_step_traffic("x", 2e9, 1e9)
+    trace2, _ = synthesize(tt, target_requests=4000)
+    assert np.asarray(trace2.is_write).mean() > 0.2, "train writes grads/opt"
+
+
+def test_effective_bw_integration():
+    """The memsim-refined bandwidth term: efficiency in (0, 1]."""
+    from repro.perfmodel.effective_bw import measure
+
+    traffic = WorkloadTraffic("t", 3e8, 3e7, 3e7, 1e8, 1e6)
+    r = measure("t", traffic, MemSimConfig(queue_size=128),
+                target_requests=3000)
+    assert 0.0 < r.efficiency <= 1.0
+    assert r.requests > 2500
+    assert r.read_latency_mean > 0
+
+
+def test_hlo_collective_parser():
+    from repro.perfmodel.hlo import collective_bytes_from_text
+
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
+  %ar.1 = f32[512]{0} all-reduce-start(%y), channel_id=1
+  %ar.2 = f32[512]{0} all-reduce-done(%ar.1)
+  %rs = (f32[64]{0}, f32[32]{0}) reduce-scatter(%a, %b)
+  %dot = f32[128,128]{1,0} dot(%p, %q)
+"""
+    out = collective_bytes_from_text(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 512 * 4          # start counted, done skipped
+    assert out["reduce-scatter"] == 64 * 4 + 32 * 4
+    assert out["total"] == out["all-gather"] + out["all-reduce"] + out["reduce-scatter"]
