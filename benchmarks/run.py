@@ -1,17 +1,52 @@
 """Benchmark entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo contract, then
-the detailed tables. The roofline benchmark additionally requires dry-run
-records (results/*.jsonl) — it degrades to 'missing' rows without them.
+the detailed tables. ``--json out.json`` additionally writes the rows plus
+an ``engine`` section with wall-clock measurements (compile time and
+steady-state cycles/sec, seed per-cycle engine vs the batched
+cycle-skipping engine, and the Fig 7/8/9 sweep speedup). The roofline
+benchmark additionally requires dry-run records (results/*.jsonl) — it
+degrades to 'missing' rows without them.
+
+Env knobs:
+  MEMSIM_SMOKE=1           reduced-cycle smoke profile (CI)
+  MEMSIM_FULL_OLD_SWEEP=1  time the seed engine on EVERY sweep point for the
+                           engine comparison (slow; default times a 4-point
+                           subset, which lower-bounds the speedup because
+                           the batched engine amortizes its single compile
+                           over more points)
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
+from typing import Dict, List
+
+# The batched engine dispatches sweep lanes concurrently across host
+# devices; on a plain-CPU box XLA exposes one device unless told otherwise.
+# Must happen before jax initializes (all jax imports in this module are
+# deliberately function-local).
+if "XLA_FLAGS" not in os.environ:
+    try:
+        cpus = len(os.sched_getaffinity(0))  # Linux: honors cgroup limits
+    except AttributeError:
+        cpus = os.cpu_count() or 1
+    cpus = min(cpus, 8)
+    if cpus > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={cpus}")
+
+_ROWS: List[Dict] = []
+_ENGINE: Dict = {}
 
 
 def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.0f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us),
+                  "derived": derived})
 
 
 def bench_table2() -> None:
@@ -68,6 +103,110 @@ def bench_fig9() -> None:
          f"done(q=2)={rows[0]['completed']};done(q=1024)={rows[-1]['completed']}")
 
 
+def bench_engine() -> None:
+    """Seed per-cycle engine vs the batched cycle-skipping engine.
+
+    Two comparisons, both recorded in the JSON ``engine`` section:
+      * single-run: compile_s / run_s / steady-state cycles per second on
+        the overload conv2d trace at queueSize=128;
+      * sweep: wall-clock of the Fig 7/8/9 queue sweep. "Old" replays the
+        seed path exactly as the seed ``figures.py`` executed it — one
+        fresh ``simulate`` compile+run plus one ``simulate_ideal`` per
+        point, and a second full pass at the Fig 9 horizon. "New" is the
+        actual engine sweep ``figures.py`` now uses (one compile, lanes
+        concurrent across devices, Fig 9 derived by causality). By default
+        the old path is timed on a subset of depths and extrapolated
+        per-point to the full 21-program seed sweep (the subset speedup
+        already lower-bounds the full one, since the new engine's single
+        compile amortizes over more points); MEMSIM_FULL_OLD_SWEEP=1 times
+        every point instead.
+    """
+    import jax
+
+    from benchmarks import figures
+    from benchmarks.memsim_common import NUM_CYCLES, trace_for
+    from repro.core import (MemSimConfig, simulate, simulate_fast,
+                            simulate_ideal)
+    from repro.core.simulator import _simulate_jit
+
+    tr = trace_for("conv2d", overload=True)
+    nc = NUM_CYCLES
+    fig9_nc = min(30_000, nc)
+
+    # ---- single-run comparison at queueSize=128 --------------------------
+    cfg = MemSimConfig(queue_size=128)
+    t0 = time.time()
+    compiled = _simulate_jit.lower(cfg, tr, nc).compile()
+    t1 = time.time()
+    jax.block_until_ready(compiled(tr))
+    t2 = time.time()
+    old_single = {"compile_s": round(t1 - t0, 3), "run_s": round(t2 - t1, 3),
+                  "cycles_per_sec": round(nc / max(t2 - t1, 1e-9))}
+
+    timings: Dict = {}
+    simulate_fast(MemSimConfig(queue_size=2048), tr, num_cycles=nc,
+                  queue_size=128, timings=timings)
+    new_single = {"compile_s": round(timings["compile_s"], 3),
+                  "run_s": round(timings["run_s"], 3),
+                  "cycles_per_sec": round(nc / max(timings["run_s"], 1e-9)),
+                  "steps_executed": timings["steps"],
+                  "cycles_skipped": nc - timings["steps"]}
+
+    # ---- Fig 7/8/9 sweep: seed path vs engine path -----------------------
+    full = bool(os.environ.get("MEMSIM_FULL_OLD_SWEEP"))
+    subset = figures.SWEEP_F8 if full else [2, 16, 128, 1024]
+
+    def seed_point(q: int, cycles: int) -> float:
+        """One seed run_pair: fresh-compile simulate + ideal reference."""
+        c = MemSimConfig(queue_size=q)
+        t0 = time.time()
+        simulate(c, tr, num_cycles=cycles)
+        jax.block_until_ready(simulate_ideal(c, tr).t_complete)
+        return time.time() - t0
+
+    old_full_pass = sum(seed_point(q, nc) for q in subset)
+    old_fig9_pass = sum(seed_point(q, fig9_nc) for q in subset
+                        if q in figures.SWEEP)
+    old_wall = old_full_pass + old_fig9_pass
+    n_old_progs = len(subset) + sum(1 for q in subset if q in figures.SWEEP)
+
+    # the new path's cost for the whole Fig 6-9 pipeline is the one batched
+    # sweep figures.py already ran (compile + concurrent lanes; Fig 9 is
+    # derived from the same run) — take its recorded wall split
+    from benchmarks.memsim_common import run_sweep
+    _, new_wall = run_sweep("conv2d", figures.SWEEP_F8, overload=True)
+
+    # extrapolate the old path to the full seed sweep (21 programs:
+    # 11 depths at the full horizon + 10 at the Fig 9 horizon)
+    full_progs = len(figures.SWEEP_F8) + len(figures.SWEEP)
+    old_extrapolated = old_wall / n_old_progs * full_progs
+    speedup = old_extrapolated / max(new_wall.total_s, 1e-9)
+    sweep = {
+        "queue_sizes_measured_old": list(subset),
+        "num_cycles": nc,
+        "fig9_num_cycles": fig9_nc,
+        "devices": len(jax.devices()),
+        "old_wall_s": round(old_wall, 2),
+        "old_programs_measured": n_old_progs,
+        "old_full_sweep_s": round(old_extrapolated, 2),
+        "old_full_sweep_measured": full,
+        "new_full_sweep_s": round(new_wall.total_s, 2),
+        "new_compile_s": round(new_wall.compile_s, 3),
+        "new_run_s": round(new_wall.run_s, 3),
+        "speedup": round(speedup, 2),
+    }
+    _ENGINE.update({"old": old_single, "new": new_single, "sweep": sweep})
+    _row("engine_single_run",
+         (old_single["run_s"] + new_single["run_s"]) * 1e6,
+         f"old_cps={old_single['cycles_per_sec']};"
+         f"new_cps={new_single['cycles_per_sec']};"
+         f"steps={new_single['steps_executed']}/{nc}")
+    _row("engine_sweep", new_wall.total_s * 1e6 / len(figures.SWEEP_F8),
+         f"old_full_s={sweep['old_full_sweep_s']};"
+         f"new_full_s={sweep['new_full_sweep_s']};"
+         f"speedup={sweep['speedup']}x")
+
+
 def bench_open_page() -> None:
     """Beyond-paper: open-page (row caching) vs closed-page vs ideal."""
     import numpy as np
@@ -115,16 +254,30 @@ def bench_roofline() -> None:
     _row("roofline_cells", us, f"ok={ok};skip={skip};total={len(rows)}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", metavar="OUT", default=None,
+                        help="write rows + engine wall-clock to this path")
+    args = parser.parse_args(argv)
+
     print("name,us_per_call,derived")
     bench_table2()
     bench_fig6()
     bench_fig7()
     bench_fig8()
     bench_fig9()
+    bench_engine()
     bench_open_page()
     bench_effective_bw()
     bench_roofline()
+
+    if args.json:
+        payload = {"rows": _ROWS, "engine": _ENGINE,
+                   "smoke": bool(os.environ.get("MEMSIM_SMOKE"))}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {args.json}")
+
     print()
     from benchmarks import table2, figures
     table2.main()

@@ -7,6 +7,12 @@ DRAMSim3-like open-page reference it is evaluated against.
 
 from repro.core.params import DEFAULT_CONFIG, MemSimConfig
 from repro.core.simulator import SimResult, Trace, simulate
+from repro.core.engine import (
+    simulate_fast,
+    simulate_batch,
+    stack_traces,
+    sweep_queue_sizes,
+)
 from repro.core.ideal import simulate_ideal, ideal_latencies
 from repro.core import stats
 
@@ -16,6 +22,10 @@ __all__ = [
     "SimResult",
     "Trace",
     "simulate",
+    "simulate_fast",
+    "simulate_batch",
+    "stack_traces",
+    "sweep_queue_sizes",
     "simulate_ideal",
     "ideal_latencies",
     "stats",

@@ -107,6 +107,19 @@ def row_of(cfg: MemSimConfig, addr: Array) -> Array:
     return (addr >> (cfg.addr_low_bits + cfg.column_bits)).astype(jnp.int32)
 
 
+def wait_mask(st: Array) -> Array:
+    """bool[B]: bank is in a timed WAIT state (timer counts down, no bus
+    activity until expiry). Shared by ``fsm_update`` and the cycle-skipping
+    engine, which fast-forwards these timers."""
+    return (
+        (st == S_ACT_WAIT)
+        | (st == S_RW_WAIT)
+        | (st == S_PRE_WAIT)
+        | (st == S_REF_WAIT)
+        | (st == S_SREF_EXIT_WAIT)
+    )
+
+
 def compute_bids(cfg: MemSimConfig, st: Array, cur_write: Array) -> Tuple[Array, Array]:
     """Current-state command bids for the shared command bus.
 
@@ -141,13 +154,7 @@ def fsm_update(
     refresh_needed = cycle >= (bank.refresh_due - cfg.tRFC)
 
     # ---- WAIT states: tick timers, transition on expiry -------------------
-    in_wait = (
-        (st == S_ACT_WAIT)
-        | (st == S_RW_WAIT)
-        | (st == S_PRE_WAIT)
-        | (st == S_REF_WAIT)
-        | (st == S_SREF_EXIT_WAIT)
-    )
+    in_wait = wait_mask(st)
     timer2 = jnp.where(in_wait, jnp.maximum(timer - 1, 0), timer)
     expired = in_wait & (timer2 == 0)
 

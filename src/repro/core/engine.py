@@ -1,0 +1,650 @@
+"""High-throughput simulation engine: compile-once sweeps, batching, skipping.
+
+The reference engine (:func:`repro.core.simulator.simulate`) runs one
+``lax.scan`` step per clock and bakes ``queue_size`` into the compiled
+program, so the paper's Fig 7/8/9 queue sweeps pay one full XLA compile per
+sweep point and a fully serial 100k-step scan per run. This module removes
+all three bottlenecks while staying **bit-exact** against the reference:
+
+1. **Compile-once sweeps** — queue occupancy is a *runtime* limit against a
+   static max capacity (``Fifo.limit`` / ``BankedFifo.limit``,
+   ``SimState.effective_queue_size``). Every sweep point shares one compiled
+   program; only the limit scalar changes.
+
+2. **Batched simulation** — :func:`simulate_batch` runs (trace,
+   runtime-config) lanes through one compile. In ``"vmap"`` mode the lanes
+   are stacked on a leading axis and ``jax.vmap``-ed through the cycle step
+   as ONE device program on a shared clock, sharded across devices via the
+   ``repro.distributed.shard`` mesh helpers (right on accelerators, whose
+   hardware lanes absorb the batch axis). In ``"lanes"`` mode (CPU default)
+   one compiled single-lane executable per device serves every lane, and
+   lanes execute concurrently from worker threads with *independent*
+   cycle-skipping (XLA releases the GIL; ``jax.vmap`` cannot amortize a
+   batch across CPU cores, and a shared clock would hold every lane to the
+   busiest lane's pace).
+
+3. **Cycle-skipping** — when every bank sits in a timed WAIT countdown,
+   self-refresh, or truly-idle state, and no arrival, refresh deadline, or
+   queue activity is due, the clock jumps by
+   ``delta = min(timers - 1, next_arrival, refresh_due, sref_entry, horizon)``
+   in a single step: timers are decremented by ``delta``, idle counters and
+   per-state cycle counters advance by ``delta``. Every cycle in which *any*
+   state element would change is still executed normally, so results
+   (``t_complete``, ``rdata``, counters, blocked-cycle totals — the full
+   ``SimState``) are bit-identical to the per-cycle engine; only inert
+   cycles are collapsed. The skip check runs every ``_CHUNK`` cycles (the
+   chunk interior is the plain per-cycle loop, so saturated phases pay no
+   skip overhead), collapsing bursty gaps and the post-drain tail of finite
+   traces.
+
+Exactness contract: for any ``cfg`` with capacity ``C``, trace, horizon and
+runtime limit ``q <= C``,
+
+    simulate_fast(cfg[C], trace, n, queue_size=q)
+        == simulate(cfg[queue_size=q], trace, n)
+
+field-for-field. ``tests/test_engine_equivalence.py`` enforces this for all
+seed traces, both page policies and both FSM backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.bank_fsm import wait_mask
+from repro.core.params import CMD_NOP, MemSimConfig, S_IDLE, S_SREF
+from repro.core.simulator import (
+    SimResult,
+    SimState,
+    Trace,
+    cycle_step,
+    init_state,
+    state_to_result,
+)
+
+_INF = jnp.int32(0x3FFFFFFF)
+_PAD_T = 0x3FFFFFFF  # arrival time for padded trace slots: never due
+
+
+# --------------------------------------------------------------------------
+# cycle-skipping
+# --------------------------------------------------------------------------
+
+def _skip_delta(cfg: MemSimConfig, trace: Trace, state: SimState,
+                nxt: Array, horizon: Array) -> Array:
+    """Number of provably-inert cycles starting at cycle ``nxt``.
+
+    A cycle is inert when executing it would change nothing but countdown
+    timers, idle counters and per-cycle statistics: every bank is in a WAIT
+    state, parked in SREF, or idle with an empty scheduler queue; the global
+    request and response queues are empty; and no arrival or refresh window
+    opens. The returned delta never swallows a cycle in which a timer
+    expires, an arrival lands, a refresh window opens, or a self-refresh
+    entry threshold is crossed — those cycles run through ``cycle_step``.
+    """
+    st = state.bank.st
+    in_wait = wait_mask(st)
+    is_idle = st == S_IDLE
+    is_sref = st == S_SREF
+
+    # gate: nothing can happen at cycle `nxt` except timer/counter ticks
+    inert_states = (in_wait | is_idle | is_sref).all()
+    bq_empty = state.bank_q.empty()
+    no_local_work = jnp.where(is_idle | is_sref, bq_empty, True).all()
+    gate = (inert_states & no_local_work
+            & state.req_q.empty() & state.resp_q.empty())
+
+    # bounds: cycles nxt .. nxt+delta-1 must all stay inert
+    n = trace.num_requests
+    idx = jnp.minimum(state.next_arrival, n - 1)
+    arrival = jnp.where(state.next_arrival < n, trace.t[idx] - nxt, _INF)
+    # a WAIT bank with timer k expires during cycle nxt + k - 1
+    timers = jnp.where(in_wait, state.bank.timer - 1, _INF).min()
+    # an idle bank enters its refresh window at cycle refresh_due - tRFC
+    refresh = jnp.where(is_idle, state.bank.refresh_due - cfg.tRFC - nxt,
+                        _INF).min()
+    # an idle bank crosses the SREF threshold when idle_ctr+1 reaches it
+    sref_in = jnp.where(is_idle,
+                        cfg.sref_idle_cycles - 1 - state.bank.idle_ctr,
+                        _INF).min()
+    bound = jnp.minimum(jnp.minimum(arrival, timers),
+                        jnp.minimum(refresh, sref_in))
+    bound = jnp.minimum(bound, horizon - nxt)
+    return jnp.where(gate, jnp.maximum(bound, 0), 0).astype(jnp.int32)
+
+
+def _apply_skip(cfg: MemSimConfig, state: SimState, delta: Array) -> SimState:
+    """Fast-forward ``delta`` inert cycles, replicating exactly what the
+    per-cycle engine would have accumulated over them."""
+    st = state.bank.st
+    in_wait = wait_mask(st)
+    is_idle = st == S_IDLE
+    is_sref = st == S_SREF
+    skipped = delta > 0
+
+    timer = jnp.where(in_wait, state.bank.timer - delta, state.bank.timer)
+    # per-cycle semantics: truly-idle banks count up, all others reset to 0
+    idle_ctr = jnp.where(
+        skipped,
+        jnp.where(is_idle, state.bank.idle_ctr + delta, 0),
+        state.bank.idle_ctr,
+    ).astype(jnp.int32)
+    bank = state.bank._replace(timer=timer.astype(jnp.int32),
+                               idle_ctr=idle_ctr)
+
+    b = st.shape[0]
+    n_sref = is_sref.sum().astype(jnp.int32)
+    n_idle = is_idle.sum().astype(jnp.int32)
+    c = state.counters
+    counters = dict(c)
+    # each skipped cycle issues CMD_NOP on every channel (junk slot, but we
+    # keep it bit-identical to the per-cycle engine)
+    counters["cmd_counts"] = c["cmd_counts"].at[CMD_NOP].add(
+        delta * cfg.channels)
+    counters["sref_cycles"] = c["sref_cycles"] + delta * n_sref
+    counters["idle_cycles"] = c["idle_cycles"] + delta * n_idle
+    counters["active_cycles"] = c["active_cycles"] + delta * (
+        b - n_sref - n_idle)
+    return state._replace(bank=bank, counters=counters)
+
+
+# --------------------------------------------------------------------------
+# single-lane runners
+# --------------------------------------------------------------------------
+
+#: cycles executed between skip checks. Inside a chunk the engine is a
+#: plain per-cycle loop (same op stream as the reference scan — no skip
+#: overhead per cycle); at chunk boundaries one exact skip may fire. Small
+#: enough that quiescent tails collapse, large enough that the skip logic
+#: is amortized to noise during saturated phases.
+_CHUNK = 128
+
+
+def _run_skip_core(cfg: MemSimConfig, trace: Trace, num_cycles: Array,
+                   queue_limit: Array, resp_limit: Array
+                   ) -> Tuple[SimState, Array]:
+    """Chunked while-loop engine with cycle-skipping; ``num_cycles`` is
+    traced, so one compiled program serves every horizon. Returns (final
+    state, number of cycle_step executions actually performed).
+
+    The loop condition is a scalar, so XLA keeps the carried buffers
+    in-place — no per-iteration state copies (this is why the batched
+    variant below shares one clock across lanes instead of vmapping the
+    whole while loop, whose batching rule would select-copy the full state
+    every step)."""
+    state0 = init_state(cfg, trace.num_requests, queue_limit, resp_limit)
+    num_cycles = jnp.asarray(num_cycles, jnp.int32)
+
+    def cond(carry):
+        _, t, _ = carry
+        return t + _CHUNK <= num_cycles
+
+    def body(carry):
+        state, t, steps = carry
+        state = jax.lax.fori_loop(
+            0, _CHUNK, lambda i, s: cycle_step(cfg, trace, s, t + i), state)
+        delta = _skip_delta(cfg, trace, state, t + _CHUNK, num_cycles)
+        state = _apply_skip(cfg, state, delta)
+        return (state, t + _CHUNK + delta, steps + _CHUNK)
+
+    state, t, steps = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(0), jnp.int32(0)))
+    # remainder: fewer than _CHUNK cycles left, plain per-cycle loop
+    state = jax.lax.fori_loop(
+        t, num_cycles, lambda c, s: cycle_step(cfg, trace, s, c), state)
+    return state, steps + (num_cycles - t)
+
+
+def _run_skip_batch_core(cfg: MemSimConfig, traces: Trace, num_cycles: Array,
+                         queue_limits: Array, resp_limits: Array
+                         ) -> Tuple[SimState, Array]:
+    """Batched cycle-skipping on a SHARED clock (vmap mode).
+
+    All lanes see the same cycle counter; the clock jumps by the *joint*
+    skip ``delta = min over lanes`` of each lane's inert bound, so a jump
+    happens only when every lane is provably quiescent and each lane's
+    skipped cycles are inert for it — per-lane exactness is untouched.
+    Sharing the clock keeps the while condition scalar: no per-lane
+    live-masking of the carry (which would copy every queue/memory buffer
+    each step) and in-place buffer updates survive."""
+    states = jax.vmap(
+        lambda tr, ql, rl: init_state(cfg, tr.num_requests, ql, rl)
+    )(traces, queue_limits, resp_limits)
+    num_cycles = jnp.asarray(num_cycles, jnp.int32)
+
+    def step_all(states, cycle):
+        return jax.vmap(
+            lambda tr, st: cycle_step(cfg, tr, st, cycle))(traces, states)
+
+    def cond(carry):
+        _, t, _ = carry
+        return t + _CHUNK <= num_cycles
+
+    def body(carry):
+        states, t, steps = carry
+        states = jax.lax.fori_loop(
+            0, _CHUNK, lambda i, s: step_all(s, t + i), states)
+        deltas = jax.vmap(
+            lambda tr, st: _skip_delta(cfg, tr, st, t + _CHUNK, num_cycles)
+        )(traces, states)
+        delta = deltas.min()
+        states = jax.vmap(lambda st: _apply_skip(cfg, st, delta))(states)
+        return (states, t + _CHUNK + delta, steps + _CHUNK)
+
+    states, t, steps = jax.lax.while_loop(
+        cond, body, (states, jnp.int32(0), jnp.int32(0)))
+    states = jax.lax.fori_loop(
+        t, num_cycles, lambda c, s: step_all(s, c), states)
+    return states, steps + (num_cycles - t)
+
+
+def _run_scan_core(cfg: MemSimConfig, trace: Trace, num_cycles: int,
+                   queue_limit: Array, resp_limit: Array
+                   ) -> Tuple[SimState, Array]:
+    """Plain per-cycle scan, but with runtime queue limits (compile-once)."""
+    state0 = init_state(cfg, trace.num_requests, queue_limit, resp_limit)
+
+    def step(carry, cycle):
+        return cycle_step(cfg, trace, carry, cycle), None
+
+    final, _ = jax.lax.scan(step, state0,
+                            jnp.arange(num_cycles, dtype=jnp.int32))
+    return final, jnp.int32(num_cycles)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_skip_jit(cfg, trace, num_cycles, queue_limit, resp_limit):
+    return _run_skip_core(cfg, trace, num_cycles, queue_limit, resp_limit)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_scan_jit(cfg, trace, num_cycles, queue_limit, resp_limit):
+    return _run_scan_core(cfg, trace, num_cycles, queue_limit, resp_limit)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_skip_batch_jit(cfg, traces, num_cycles, queue_limits, resp_limits):
+    return _run_skip_batch_core(cfg, traces, num_cycles, queue_limits,
+                                resp_limits)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_scan_batch_jit(cfg, traces, num_cycles, queue_limits, resp_limits):
+    fn = lambda tr, ql, rl: _run_scan_core(cfg, tr, num_cycles, ql, rl)
+    return jax.vmap(fn)(traces, queue_limits, resp_limits)
+
+
+# --------------------------------------------------------------------------
+# trace batching
+# --------------------------------------------------------------------------
+
+def _pad_trace(tr: Trace, n_max: int) -> Trace:
+    """Pad one trace to ``n_max`` requests with inert slots: arrival time
+    ``_PAD_T`` is never due inside any horizon, so padded requests are
+    never admitted and their records stay -1."""
+    n = int(tr.num_requests)
+    if n == n_max:
+        return tr
+
+    def pad(x, fill):
+        out = np.full((n_max,), fill, np.int32)
+        out[:n] = np.asarray(x, np.int32)
+        return jnp.asarray(out)
+
+    return Trace(t=pad(tr.t, _PAD_T), addr=pad(tr.addr, 0),
+                 is_write=pad(tr.is_write, 0), wdata=pad(tr.wdata, 0))
+
+
+def stack_traces(traces: Sequence[Trace]) -> Tuple[Trace, List[int]]:
+    """Pad traces to a common length (see :func:`_pad_trace`) and stack on
+    a leading batch axis. Returns the stacked trace and the real per-lane
+    request counts."""
+    ns = [int(tr.num_requests) for tr in traces]
+    n_max = max(ns)
+    padded = [_pad_trace(tr, n_max) for tr in traces]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *padded)
+    return stacked, ns
+
+
+def _lane_executable(cfg: MemSimConfig, n_max: int, num_cycles: int,
+                     cycle_skip: bool, device) -> Tuple[object, float]:
+    """AOT-compile the single-lane runner for one device (cached).
+
+    Lowering uses ShapeDtypeStructs committed to ``device``, so each device
+    gets its own executable once and every lane dispatched to that device
+    reuses it — including across horizons (``num_cycles`` is a runtime
+    value for the skipping engine). Returns (executable, compile seconds —
+    0.0 on cache hit)."""
+    from jax.sharding import SingleDeviceSharding
+
+    sharding = SingleDeviceSharding(device)
+    key = ("lane", cfg, n_max, None if cycle_skip else num_cycles,
+           cycle_skip, device.id)
+    cached = _aot_cache.get(key)
+    if cached is not None:
+        return cached, 0.0
+
+    def sds(shape):
+        return jax.ShapeDtypeStruct(shape, jnp.int32, sharding=sharding)
+
+    tr_s = Trace(t=sds((n_max,)), addr=sds((n_max,)),
+                 is_write=sds((n_max,)), wdata=sds((n_max,)))
+    scal = sds(())
+    t0 = time.perf_counter()
+    if cycle_skip:
+        compiled = _run_skip_jit.lower(cfg, tr_s, scal, scal, scal).compile()
+    else:
+        compiled = _run_scan_jit.lower(cfg, tr_s, num_cycles, scal,
+                                       scal).compile()
+    compile_s = time.perf_counter() - t0
+    _aot_cache[key] = compiled
+    return compiled, compile_s
+
+
+def _run_lanes(cfg: MemSimConfig, trace_list: List[Trace], num_cycles: int,
+               qs: List[int], rs: List[int], cycle_skip: bool, shard: bool,
+               timings: Optional[dict]) -> Tuple[List[SimState], List[int]]:
+    """Lanes mode: each lane runs the single-lane engine; lanes round-robin
+    over devices and execute concurrently from worker threads (XLA releases
+    the GIL during execution). Unlike the vmap mode this keeps per-lane
+    *independent* cycle-skipping — a drained lane fast-forwards even while
+    another is still saturated — and each lane's op stream is identical to
+    ``simulate_fast``. One compiled executable per device serves every lane
+    and horizon."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    n_max = max(int(tr.num_requests) for tr in trace_list)
+    padded = [_pad_trace(tr, n_max) for tr in trace_list]
+    devices = jax.devices() if shard else jax.devices()[:1]
+    d_count = min(len(devices), len(padded))
+
+    compile_s = 0.0
+    compiled = []
+    for di in range(d_count):
+        exe, c_s = _lane_executable(cfg, n_max, num_cycles, cycle_skip,
+                                    devices[di])
+        compiled.append(exe)
+        compile_s += c_s
+
+    def work(i: int):
+        dev = devices[i % d_count]
+        tr = jax.device_put(padded[i], dev)
+        ql = jax.device_put(jnp.int32(qs[i]), dev)
+        rl = jax.device_put(jnp.int32(rs[i]), dev)
+        if cycle_skip:
+            nc = jax.device_put(jnp.int32(num_cycles), dev)
+            final, steps = compiled[i % d_count](tr, nc, ql, rl)
+        else:
+            final, steps = compiled[i % d_count](tr, ql, rl)
+        jax.block_until_ready(final)
+        return final, int(steps)
+
+    t0 = time.perf_counter()
+    if d_count > 1 and len(padded) > 1:
+        with ThreadPoolExecutor(max_workers=d_count) as pool:
+            outs = list(pool.map(work, range(len(padded))))
+    else:
+        outs = [work(i) for i in range(len(padded))]
+    run_s = time.perf_counter() - t0
+
+    if timings is not None:
+        timings["compile_s"] = timings.get("compile_s", 0.0) + compile_s
+        timings["run_s"] = timings.get("run_s", 0.0) + run_s
+    return [o[0] for o in outs], [o[1] for o in outs]
+
+
+def _maybe_shard(tree, batch: int):
+    """Shard the leading batch axis across visible devices, best-effort."""
+    devices = jax.devices()
+    if len(devices) <= 1 or batch % len(devices) != 0:
+        return tree
+    try:
+        from jax.sharding import Mesh
+
+        from repro.distributed import shard as shard_lib
+
+        mesh = Mesh(np.asarray(devices), ("data",))
+        with shard_lib.use_mesh(mesh):
+            sharding = shard_lib.named(mesh, "data")
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sharding), tree)
+    except Exception:  # pragma: no cover - single-device fallback
+        return tree
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+_aot_cache: Dict[tuple, object] = {}
+
+
+def _timed(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple,
+           timings: Optional[dict]):
+    """Invoke a jitted runner, optionally splitting compile vs run wall time
+    via AOT lowering. ``all_args`` is the full positional argument list
+    (statics interleaved, as the jit signature expects); ``dyn_args`` the
+    dynamic subset an AOT-compiled executable takes. Compiled executables
+    are cached by (fn, statics, dynamic-arg shapes) so re-timing the same
+    program records ``compile_s == 0`` instead of recompiling. ``timings``
+    (if given) gains ``compile_s`` / ``run_s``."""
+    if timings is None:
+        return jitted(*all_args)
+    shapes = tuple((x.shape, str(x.dtype))
+                   for x in jax.tree_util.tree_leaves(dyn_args))
+    key = (id(jitted), static_key, shapes)
+    compiled = _aot_cache.get(key)
+    compile_s = 0.0
+    if compiled is None:
+        t0 = time.perf_counter()
+        compiled = jitted.lower(*all_args).compile()
+        compile_s = time.perf_counter() - t0
+        _aot_cache[key] = compiled
+    t1 = time.perf_counter()
+    out = compiled(*dyn_args)
+    jax.block_until_ready(out)
+    t2 = time.perf_counter()
+    timings["compile_s"] = timings.get("compile_s", 0.0) + compile_s
+    timings["run_s"] = timings.get("run_s", 0.0) + (t2 - t1)
+    return out
+
+
+def simulate_fast(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
+                  *, queue_size: Optional[int] = None,
+                  resp_queue_size: Optional[int] = None,
+                  cycle_skip: bool = True,
+                  timings: Optional[dict] = None) -> SimResult:
+    """Single-trace run on the fast engine; bit-exact vs :func:`simulate`.
+
+    ``cfg.queue_size`` is the static *capacity*; ``queue_size`` (default:
+    capacity) is the runtime depth actually enforced, so successive calls
+    with different depths reuse one compiled program. With ``cycle_skip``
+    the engine fast-forwards through provably inert cycles (exact — see
+    module docstring); pass ``cycle_skip=False`` for the plain compile-once
+    scan. ``timings`` (optional dict) receives ``compile_s``, ``run_s`` and
+    ``steps`` (cycle_step executions; < num_cycles when skipping helped).
+    """
+    cfg.validate()
+    ql = cfg.queue_size if queue_size is None else queue_size
+    rl = cfg.resp_queue_size if resp_queue_size is None else resp_queue_size
+    if not (1 <= ql <= cfg.queue_size):
+        raise ValueError(f"queue_size={ql} not in [1, {cfg.queue_size}]")
+    if not (1 <= rl <= cfg.resp_queue_size):
+        raise ValueError(f"resp_queue_size={rl} not in [1, {cfg.resp_queue_size}]")
+    ql = jnp.int32(ql)
+    rl = jnp.int32(rl)
+    if cycle_skip:
+        nc = jnp.int32(num_cycles)
+        final, steps = _timed(_run_skip_jit, (cfg, trace, nc, ql, rl),
+                              (trace, nc, ql, rl), (cfg,), timings)
+    else:
+        final, steps = _timed(_run_scan_jit, (cfg, trace, num_cycles, ql, rl),
+                              (trace, ql, rl), (cfg, num_cycles), timings)
+    if timings is not None:
+        timings["steps"] = int(steps)
+    res = state_to_result(cfg, trace, final, num_cycles)
+    res.cfg = dataclasses.replace(cfg, queue_size=int(ql),
+                                  resp_queue_size=int(rl))
+    return res
+
+
+def simulate_batch(cfg: MemSimConfig,
+                   traces: Union[Trace, Sequence[Trace]],
+                   num_cycles: int = 100_000,
+                   *, queue_sizes: Optional[Sequence[int]] = None,
+                   resp_queue_sizes: Optional[Sequence[int]] = None,
+                   cycle_skip: bool = True,
+                   shard: bool = True,
+                   batch_mode: str = "auto",
+                   timings: Optional[dict] = None) -> List[SimResult]:
+    """Run a batch of (trace, runtime-config) lanes through one compile.
+
+    ``traces`` may be a list of traces (a multi-trace workload) or a single
+    trace that is broadcast across ``queue_sizes`` (a queue-depth sweep).
+    Lanes are padded to a common request count; each lane is bit-exact vs
+    an individual :func:`simulate` run at its queue depth.
+
+    ``batch_mode``:
+      * ``"vmap"``  — stack lanes on a leading axis and ``vmap`` the cycle
+        step: the whole batch is ONE device program on a shared clock
+        (joint cycle-skipping); the batch axis is sharded across devices
+        when more than one is visible and ``shard``. Best on accelerators,
+        where the batch axis vectorizes into the hardware lanes.
+      * ``"lanes"`` — one compiled single-lane executable per device,
+        reused by every lane; lanes round-robin over devices and run
+        concurrently from worker threads, each with independent
+        cycle-skipping. Best on CPU, where vmap cannot amortize across the
+        batch and joint skipping is held back by the busiest lane.
+      * ``"auto"``  — ``"lanes"`` on the CPU backend, ``"vmap"`` otherwise.
+    """
+    cfg.validate()
+    if batch_mode not in ("auto", "vmap", "lanes"):
+        raise ValueError(f"unknown batch_mode {batch_mode!r}")
+    if batch_mode == "auto":
+        batch_mode = "lanes" if jax.default_backend() == "cpu" else "vmap"
+    if isinstance(traces, Trace):
+        if queue_sizes is None:
+            raise ValueError("broadcasting a single trace requires queue_sizes")
+        trace_list = [traces] * len(queue_sizes)
+    else:
+        trace_list = list(traces)
+    lanes = len(trace_list)
+    if lanes == 0:
+        return []
+
+    def _broadcast(vals, default, name, cap):
+        if vals is None:
+            vals = [default] * lanes
+        vals = list(vals)
+        if len(vals) != lanes:
+            raise ValueError(f"{name} must have one entry per lane")
+        for v in vals:
+            if not (1 <= v <= cap):
+                raise ValueError(f"{name} entry {v} not in [1, {cap}]")
+        return vals
+
+    qs = _broadcast(queue_sizes, cfg.queue_size, "queue_sizes",
+                    cfg.queue_size)
+    rs = _broadcast(resp_queue_sizes, cfg.resp_queue_size,
+                    "resp_queue_sizes", cfg.resp_queue_size)
+
+    ns = [int(tr.num_requests) for tr in trace_list]
+
+    if batch_mode == "lanes":
+        finals, lane_steps = _run_lanes(cfg, trace_list, num_cycles, qs, rs,
+                                        cycle_skip, shard, timings)
+        if timings is not None:
+            timings["steps"] = max(lane_steps)
+            timings["steps_total"] = sum(lane_steps)
+        hosts = [jax.device_get(f) for f in finals]
+
+        def lane_field(i, name):
+            return np.asarray(getattr(hosts[i], name))[: ns[i]]
+
+        def lane_counters(i):
+            return {k: np.asarray(v) for k, v in hosts[i].counters.items()}
+
+        def lane_scalar(i, name):
+            return int(getattr(hosts[i], name))
+    else:
+        stacked, _ = stack_traces(trace_list)
+        ql = jnp.asarray(qs, jnp.int32)
+        rl = jnp.asarray(rs, jnp.int32)
+        if shard:
+            stacked, ql, rl = _maybe_shard((stacked, ql, rl), lanes)
+
+        if cycle_skip:
+            nc = jnp.int32(num_cycles)
+            finals, steps = _timed(_run_skip_batch_jit,
+                                   (cfg, stacked, nc, ql, rl),
+                                   (stacked, nc, ql, rl), (cfg,), timings)
+        else:
+            finals, steps = _timed(_run_scan_batch_jit,
+                                   (cfg, stacked, num_cycles, ql, rl),
+                                   (stacked, ql, rl), (cfg, num_cycles),
+                                   timings)
+        if timings is not None:
+            timings["steps"] = int(np.max(np.asarray(steps)))
+        host = jax.device_get(finals)
+
+        def lane_field(i, name):
+            return np.asarray(getattr(host, name))[i, : ns[i]]
+
+        def lane_counters(i):
+            return {k: np.asarray(v)[i] for k, v in host.counters.items()}
+
+        def lane_scalar(i, name):
+            return int(np.asarray(getattr(host, name))[i])
+
+    results = []
+    for i in range(lanes):
+        lane_cfg = dataclasses.replace(cfg, queue_size=qs[i],
+                                       resp_queue_size=rs[i])
+        results.append(SimResult(
+            cfg=lane_cfg,
+            num_cycles=num_cycles,
+            t_intended=np.asarray(trace_list[i].t),
+            is_write=np.asarray(trace_list[i].is_write),
+            t_admit=lane_field(i, "t_admit"),
+            t_dispatch=lane_field(i, "t_dispatch"),
+            t_start=lane_field(i, "t_start"),
+            t_complete=lane_field(i, "t_complete"),
+            rdata=lane_field(i, "rdata"),
+            counters=lane_counters(i),
+            blocked_arrival=lane_scalar(i, "blocked_arrival"),
+            blocked_dispatch=lane_scalar(i, "blocked_dispatch"),
+        ))
+    return results
+
+
+def sweep_queue_sizes(cfg: MemSimConfig, trace: Trace,
+                      queue_sizes: Sequence[int],
+                      num_cycles: int = 100_000,
+                      *, capacity: Optional[int] = None,
+                      cycle_skip: bool = True,
+                      batch_mode: str = "auto",
+                      timings: Optional[dict] = None) -> List[SimResult]:
+    """The paper's queue sweep as one compile + one batched device program.
+
+    ``capacity`` (default ``max(queue_sizes)``) sizes the static buffers;
+    pass the largest depth you will ever sweep so later sweeps with the same
+    trace shape and lane count reuse the compiled program (``num_cycles`` is
+    already a runtime value for the skipping engine).
+    """
+    cap = max(queue_sizes) if capacity is None else capacity
+    if cap < max(queue_sizes):
+        raise ValueError("capacity below largest swept queue size")
+    cfg_cap = dataclasses.replace(cfg, queue_size=cap)
+    return simulate_batch(cfg_cap, trace, num_cycles,
+                          queue_sizes=list(queue_sizes),
+                          cycle_skip=cycle_skip, batch_mode=batch_mode,
+                          timings=timings)

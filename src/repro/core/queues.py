@@ -11,12 +11,20 @@ All fields are int32; ``F`` packs the request fields
 ``(addr, is_write, data, req_id)``. Operations are branchless (masked) so
 they can live inside a ``lax.scan`` cycle step, mirroring how an RTL queue
 always computes its next state and the enable wire decides commitment.
+
+Each queue carries a runtime ``limit`` (occupancy cap <= static capacity):
+``full()`` compares ``count`` against ``limit`` instead of the buffer shape,
+so a queue-depth sweep can reuse one compiled program — the buffer is sized
+for the largest depth and the limit is a traced scalar. With
+``limit == capacity`` (the default) behaviour is identical to the plain
+circular queue.
 """
 
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import Array
 
@@ -28,13 +36,15 @@ class Fifo(NamedTuple):
     buf: Array    # [Q, F] int32
     head: Array   # scalar int32
     count: Array  # scalar int32
+    limit: Array  # scalar int32 runtime occupancy cap (<= capacity)
 
     @staticmethod
-    def make(capacity: int, fields: int = REQ_FIELDS) -> "Fifo":
+    def make(capacity: int, fields: int = REQ_FIELDS, limit=None) -> "Fifo":
         return Fifo(
             buf=jnp.zeros((capacity, fields), jnp.int32),
             head=jnp.int32(0),
             count=jnp.int32(0),
+            limit=jnp.asarray(capacity if limit is None else limit, jnp.int32),
         )
 
     @property
@@ -42,7 +52,7 @@ class Fifo(NamedTuple):
         return self.buf.shape[0]
 
     def full(self) -> Array:
-        return self.count >= self.capacity
+        return self.count >= self.limit
 
     def empty(self) -> Array:
         return self.count == 0
@@ -56,10 +66,14 @@ class Fifo(NamedTuple):
         idx = (self.head + self.count) % q
         cur = self.buf[idx]
         new = jnp.where(enable, item, cur)
+        # dynamic_update_slice (not scatter): alias-friendly, so the buffer
+        # stays in-place across scan/while iterations even at large capacity
         return Fifo(
-            buf=self.buf.at[idx].set(new),
+            buf=jax.lax.dynamic_update_slice(self.buf, new[None, :],
+                                             (idx, jnp.int32(0))),
             head=self.head,
             count=self.count + enable.astype(jnp.int32),
+            limit=self.limit,
         )
 
     def pop(self, enable: Array) -> Tuple["Fifo", Array]:
@@ -67,7 +81,7 @@ class Fifo(NamedTuple):
         en = enable.astype(jnp.int32)
         return (
             Fifo(buf=self.buf, head=(self.head + en) % self.capacity,
-                 count=self.count - en),
+                 count=self.count - en, limit=self.limit),
             item,
         )
 
@@ -76,13 +90,16 @@ class BankedFifo(NamedTuple):
     buf: Array    # [B, Q, F] int32
     head: Array   # [B] int32
     count: Array  # [B] int32
+    limit: Array  # scalar int32 runtime occupancy cap (<= capacity, all banks)
 
     @staticmethod
-    def make(banks: int, capacity: int, fields: int = REQ_FIELDS) -> "BankedFifo":
+    def make(banks: int, capacity: int, fields: int = REQ_FIELDS,
+             limit=None) -> "BankedFifo":
         return BankedFifo(
             buf=jnp.zeros((banks, capacity, fields), jnp.int32),
             head=jnp.zeros((banks,), jnp.int32),
             count=jnp.zeros((banks,), jnp.int32),
+            limit=jnp.asarray(capacity if limit is None else limit, jnp.int32),
         )
 
     @property
@@ -90,7 +107,7 @@ class BankedFifo(NamedTuple):
         return self.buf.shape[1]
 
     def full(self) -> Array:           # [B] bool
-        return self.count >= self.capacity
+        return self.count >= self.limit
 
     def empty(self) -> Array:          # [B] bool
         return self.count == 0
@@ -108,9 +125,11 @@ class BankedFifo(NamedTuple):
         new = jnp.where(enable, item, cur)
         en = enable.astype(jnp.int32)
         return BankedFifo(
-            buf=self.buf.at[bank, idx].set(new),
+            buf=jax.lax.dynamic_update_slice(
+                self.buf, new[None, None, :], (bank, idx, jnp.int32(0))),
             head=self.head,
             count=self.count.at[bank].add(en),
+            limit=self.limit,
         )
 
     def pop_mask(self, enable: Array) -> Tuple["BankedFifo", Array]:
@@ -125,6 +144,7 @@ class BankedFifo(NamedTuple):
                 buf=self.buf,
                 head=(self.head + en) % self.capacity,
                 count=self.count - en,
+                limit=self.limit,
             ),
             items,
         )
@@ -157,7 +177,7 @@ class BankedFifo(NamedTuple):
         sel_items = self.buf[ar_b, pos]
         buf = self.buf.at[ar_b, self.head].set(sel_items)
         buf = buf.at[ar_b, pos].set(head_items)
-        return BankedFifo(buf, self.head, self.count)
+        return BankedFifo(buf, self.head, self.count, self.limit)
 
 
 def rr_arbiter(bids: Array, ptr: Array) -> Tuple[Array, Array, Array]:

@@ -82,6 +82,13 @@ class SimState(NamedTuple):
     blocked_arrival: Array    # cycles an arrival stalled on full reqQueue
     blocked_dispatch: Array   # cycles dispatch stalled on a full bank queue
 
+    @property
+    def effective_queue_size(self) -> Array:
+        """Runtime depth enforced on the req/bank queues (the paper's
+        ``queueSize`` as a data value — see ``Fifo.limit``). The global
+        reqQueue and every bank queue share one limit by construction."""
+        return self.req_q.limit
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -118,17 +125,26 @@ class SimResult:
         return np.where(self.completed, self.t_complete - self.t_intended, -1)
 
 
-def init_state(cfg: MemSimConfig, num_requests: int) -> SimState:
+def init_state(cfg: MemSimConfig, num_requests: int,
+               queue_limit=None, resp_queue_limit=None) -> SimState:
+    """Initial register file.
+
+    ``queue_limit`` / ``resp_queue_limit`` are optional *runtime* occupancy
+    caps (traced scalars) on the statically-sized queues: the paper's
+    ``queueSize`` becomes a data value instead of a compiled shape, so a
+    queue-depth sweep reuses one XLA program (see ``repro.core.engine``).
+    Defaults reproduce the static behaviour (limit == capacity).
+    """
     neg = jnp.full((num_requests,), -1, jnp.int32)
     return SimState(
         next_arrival=jnp.int32(0),
-        req_q=Fifo.make(cfg.queue_size),
-        bank_q=BankedFifo.make(cfg.num_banks, cfg.queue_size),
+        req_q=Fifo.make(cfg.queue_size, limit=queue_limit),
+        bank_q=BankedFifo.make(cfg.num_banks, cfg.queue_size, limit=queue_limit),
         bank=BankState.make(cfg),
         timing=TimingState.make(cfg),
         cmd_rr=jnp.zeros((cfg.channels,), jnp.int32),
         resp_rr=jnp.int32(0),
-        resp_q=Fifo.make(cfg.resp_queue_size),
+        resp_q=Fifo.make(cfg.resp_queue_size, limit=resp_queue_limit),
         mem=jnp.zeros((cfg.mem_words,), jnp.int32),
         t_admit=neg,
         t_dispatch=neg,
@@ -295,10 +311,9 @@ def _simulate_jit(cfg: MemSimConfig, trace: Trace, num_cycles: int) -> SimState:
     return final
 
 
-def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000) -> SimResult:
-    """Run MemorySim for ``num_cycles`` over ``trace``; returns host stats."""
-    cfg.validate()
-    final = _simulate_jit(cfg, trace, num_cycles)
+def state_to_result(cfg: MemSimConfig, trace: Trace, final: SimState,
+                    num_cycles: int) -> SimResult:
+    """Pull a device-side final state into the host-side result bundle."""
     counters = {k: np.asarray(v) for k, v in final.counters.items()}
     return SimResult(
         cfg=cfg,
@@ -314,3 +329,16 @@ def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000) -> SimR
         blocked_arrival=int(final.blocked_arrival),
         blocked_dispatch=int(final.blocked_dispatch),
     )
+
+
+def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000) -> SimResult:
+    """Run MemorySim for ``num_cycles`` over ``trace``; returns host stats.
+
+    This is the reference per-cycle engine: one ``lax.scan`` step per clock,
+    ``queue_size`` baked into the compiled program. The high-throughput
+    engine in :mod:`repro.core.engine` (compile-once sweeps, batching,
+    cycle-skipping) is bit-exact against this function.
+    """
+    cfg.validate()
+    final = _simulate_jit(cfg, trace, num_cycles)
+    return state_to_result(cfg, trace, final, num_cycles)

@@ -13,7 +13,10 @@ from repro.core.params import MemSimConfig, S_IDLE
 from repro.kernels.bank_fsm.bank_fsm import bank_fsm_step_pallas
 from repro.kernels.bank_fsm.ref import bank_fsm_step_ref
 
-_FAR_FUTURE = jnp.int32(0x3FFFFFFF)
+# plain int, not a jnp array: this module is imported lazily from inside
+# traced cycle loops, and a module-level jnp constant materialized during
+# tracing would leak that trace's context into later traces
+_FAR_FUTURE = 0x3FFFFFFF
 
 
 def _pad_banks(state: Array, inputs: Array, pop: Array, padded_b: int):

@@ -1,0 +1,185 @@
+"""Bit-exactness contract of the high-throughput engine (repro.core.engine).
+
+``simulate_fast`` / ``simulate_batch`` must reproduce the seed per-cycle
+``simulate`` field-for-field — per-request records (t_admit/t_dispatch/
+t_start/t_complete), returned read data, every power/state counter, and the
+blocked-cycle totals — for all seed traces, both page policies, both
+scheduling policies and both FSM backends, at runtime queue depths below
+the static capacity. Cycle-skipping must also genuinely skip on sparse
+traces while preserving that contract.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MemSimConfig,
+    Trace,
+    simulate,
+    simulate_batch,
+    simulate_fast,
+    sweep_queue_sizes,
+)
+from repro.core.engine import stack_traces
+from repro.traces import BENCHMARKS
+
+# MEMSIM_SMOKE=1 (the CI profile) halves the simulated horizon here, same
+# as it caps the benchmark horizons in benchmarks/memsim_common.py
+CYCLES = 4_000 if os.environ.get("MEMSIM_SMOKE") else 8_000
+
+
+def small_trace(name: str) -> Trace:
+    """Scaled-down versions of the paper microbenchmarks (fast to simulate,
+    same access patterns)."""
+    gen = BENCHMARKS[name]
+    if name == "conv2d":
+        return gen(h=10, w=10, burst_gap=24)
+    if name == "multihead_attention":
+        return gen(seq=6, dim=4, heads=1, burst_gap=30)
+    if name == "trace_example":
+        return gen(n=80, gap=5)
+    return gen(num_vectors=60, burst_gap=18)
+
+
+def assert_bit_identical(ref, fast, label=""):
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        a, b = getattr(ref, f), getattr(fast, f)
+        np.testing.assert_array_equal(a, b, err_msg=f"{label}: {f} differs")
+    assert set(ref.counters) == set(fast.counters)
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{label}: counter {k} differs")
+    assert ref.blocked_arrival == fast.blocked_arrival, label
+    assert ref.blocked_dispatch == fast.blocked_dispatch, label
+
+
+@pytest.mark.parametrize("bench", sorted(BENCHMARKS))
+@pytest.mark.parametrize("page_policy", ["closed", "open"])
+def test_fast_engine_bit_exact(bench, page_policy):
+    """simulate_fast (runtime queue limit + cycle-skipping) == seed engine."""
+    tr = small_trace(bench)
+    ref = simulate(
+        MemSimConfig(queue_size=16, page_policy=page_policy),
+        tr, num_cycles=CYCLES)
+    fast = simulate_fast(
+        MemSimConfig(queue_size=64, page_policy=page_policy),
+        tr, num_cycles=CYCLES, queue_size=16)
+    assert_bit_identical(ref, fast, f"{bench}/{page_policy}")
+
+
+@pytest.mark.parametrize("cycle_skip", [True, False])
+def test_fast_engine_scan_and_skip_paths(cycle_skip):
+    tr = small_trace("trace_example")
+    ref = simulate(MemSimConfig(queue_size=8), tr, num_cycles=CYCLES)
+    fast = simulate_fast(MemSimConfig(queue_size=64), tr,
+                         num_cycles=CYCLES, queue_size=8,
+                         cycle_skip=cycle_skip)
+    assert_bit_identical(ref, fast, f"cycle_skip={cycle_skip}")
+
+
+def test_cycle_skipping_actually_skips_and_stays_exact():
+    """A sparse trace (long quiescent stretches: SREF entries, refresh
+    windows, empty queues) must collapse to far fewer executed steps."""
+    tr = small_trace("trace_example")
+    cycles = 40_000  # long tail after the trace drains
+    timings = {}
+    fast = simulate_fast(MemSimConfig(queue_size=64), tr, num_cycles=cycles,
+                         queue_size=16, timings=timings)
+    assert timings["steps"] < cycles // 4, (
+        f"skipping ineffective: {timings['steps']} steps for {cycles} cycles")
+    ref = simulate(MemSimConfig(queue_size=16), tr, num_cycles=cycles)
+    assert_bit_identical(ref, fast, "sparse skip")
+
+
+def test_frfcfs_open_page_bit_exact():
+    tr = small_trace("trace_example")
+    kw = dict(page_policy="open", sched_policy="frfcfs")
+    ref = simulate(MemSimConfig(queue_size=16, **kw), tr, num_cycles=CYCLES)
+    fast = simulate_fast(MemSimConfig(queue_size=64, **kw), tr,
+                         num_cycles=CYCLES, queue_size=16)
+    assert_bit_identical(ref, fast, "frfcfs/open")
+
+
+def test_pallas_backend_bit_exact():
+    """The Pallas FSM kernel path through the while-loop engine."""
+    tr = BENCHMARKS["trace_example"](n=40, gap=6)
+    ref = simulate(MemSimConfig(queue_size=8), tr, num_cycles=1500)
+    fast = simulate_fast(MemSimConfig(queue_size=16, fsm_backend="pallas"),
+                         tr, num_cycles=1500, queue_size=8)
+    assert_bit_identical(ref, fast, "pallas")
+
+
+@pytest.mark.parametrize("batch_mode", ["lanes", "vmap"])
+def test_batch_mixed_traces_and_queue_sizes(batch_mode):
+    """(trace, runtime-config) lanes — padded and batched in both modes
+    (concurrent per-device lanes / vmapped shared clock) — each match an
+    individual seed run."""
+    lanes = [("trace_example", 8), ("conv2d", 32), ("vector_similarity", 16)]
+    traces = [small_trace(b) for b, _ in lanes]
+    qs = [q for _, q in lanes]
+    batch = simulate_batch(MemSimConfig(queue_size=32), traces,
+                           num_cycles=CYCLES, queue_sizes=qs,
+                           batch_mode=batch_mode)
+    for (bench, q), tr, res in zip(lanes, traces, batch):
+        ref = simulate(MemSimConfig(queue_size=q), tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"{batch_mode} {bench}/q={q}")
+
+
+def test_records_at_horizon_matches_direct_short_run():
+    """Causality: the t_* records of a horizon-cycle run are derivable from
+    any longer run (this is how Fig 9 avoids re-simulating)."""
+    from repro.core import stats
+
+    tr = small_trace("conv2d")
+    horizon = 3_000
+    long = simulate(MemSimConfig(queue_size=16), tr, num_cycles=CYCLES)
+    short = simulate(MemSimConfig(queue_size=16), tr, num_cycles=horizon)
+    derived = stats.records_at_horizon(long, horizon)
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete"):
+        np.testing.assert_array_equal(
+            getattr(short, f), getattr(derived, f), err_msg=f)
+    assert stats.pareto_point(short) == stats.pareto_point(derived)
+    with pytest.raises(ValueError):
+        stats.records_at_horizon(short, CYCLES)
+
+
+def test_sweep_queue_sizes_compile_once_bit_exact():
+    """The Fig 7/8/9 pattern: one batched program, every depth bit-exact;
+    a second sweep at a different horizon reuses the compiled executable."""
+    tr = small_trace("conv2d")
+    qs = [2, 8, 64]
+    timings = {}
+    results = sweep_queue_sizes(MemSimConfig(), tr, qs, num_cycles=CYCLES,
+                                capacity=64, timings=timings)
+    for q, res in zip(qs, results):
+        ref = simulate(MemSimConfig(queue_size=q), tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"sweep q={q}")
+    first_compile = timings["compile_s"]
+    assert first_compile > 0
+    timings2 = {}
+    sweep_queue_sizes(MemSimConfig(), tr, qs, num_cycles=CYCLES // 2,
+                      capacity=64, timings=timings2)
+    assert timings2["compile_s"] == 0.0, "horizon change must not recompile"
+
+
+def test_stack_traces_padding_is_inert():
+    a = BENCHMARKS["trace_example"](n=30, gap=4)
+    b = BENCHMARKS["trace_example"](n=50, gap=4, seed=1)
+    stacked, ns = stack_traces([a, b])
+    assert ns == [30 * 2, 50 * 2]  # write pass + read pass
+    assert stacked.t.shape == (2, 100)
+    # padded slots must never be admitted inside any realistic horizon
+    assert int(stacked.t[0, ns[0]:].min()) > 10_000_000
+
+
+def test_queue_size_validation():
+    tr = small_trace("trace_example")
+    with pytest.raises(ValueError):
+        simulate_fast(MemSimConfig(queue_size=16), tr, num_cycles=100,
+                      queue_size=32)  # above capacity
+    with pytest.raises(ValueError):
+        sweep_queue_sizes(MemSimConfig(), tr, [8, 64], num_cycles=100,
+                          capacity=32)

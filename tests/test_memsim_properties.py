@@ -7,7 +7,12 @@ command stream, and determinism.
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import MemSimConfig, Trace, simulate
 from repro.core.dram_model import decode_address
