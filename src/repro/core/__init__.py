@@ -5,12 +5,19 @@ simulator (controller, bank-scheduler FSMs, DRAM timing model) — plus the
 DRAMSim3-like open-page reference it is evaluated against.
 """
 
-from repro.core.params import DEFAULT_CONFIG, MemSimConfig
+from repro.core.params import (
+    DEFAULT_CONFIG,
+    MemSimConfig,
+    RuntimeParams,
+    Topology,
+)
 from repro.core.simulator import SimResult, Trace, simulate
 from repro.core.engine import (
+    grid_points,
     simulate_fast,
     simulate_batch,
     stack_traces,
+    sweep_grid,
     sweep_queue_sizes,
 )
 from repro.core.ideal import simulate_ideal, ideal_latencies
@@ -19,12 +26,16 @@ from repro.core import stats
 __all__ = [
     "DEFAULT_CONFIG",
     "MemSimConfig",
+    "RuntimeParams",
+    "Topology",
     "SimResult",
     "Trace",
     "simulate",
     "simulate_fast",
     "simulate_batch",
     "stack_traces",
+    "grid_points",
+    "sweep_grid",
     "sweep_queue_sizes",
     "simulate_ideal",
     "ideal_latencies",

@@ -7,6 +7,11 @@ FSM requests. ``fsm_update`` is the per-cycle hot loop; the Pallas kernel in
 ``repro.kernels.bank_fsm`` implements the identical function blocked over the
 bank axis for TPU, validated against this implementation.
 
+Every timing value and the page policy come from the traced
+:class:`RuntimeParams` pytree — the page-policy selection is branchless
+``jnp.where`` on the ``PAGE_OPEN`` flag, so a single compiled program
+serves both policies (and any Table-1 timing point); only the data differs.
+
 Closed-page transitions (the paper's policy; write identical with WR):
 
   IDLE --pop--> ACT_ISSUE --grant--> ACT_WAIT(tRCD) --> RW_ISSUE
@@ -41,7 +46,8 @@ from repro.core.params import (
     CMD_SREF_ENTER,
     CMD_SREF_EXIT,
     CMD_WR,
-    MemSimConfig,
+    PAGE_OPEN,
+    RuntimeParams,
     S_ACT_ISSUE,
     S_ACT_WAIT,
     S_IDLE,
@@ -56,6 +62,7 @@ from repro.core.params import (
     S_SREF_EXIT_ISSUE,
     S_SREF_EXIT_WAIT,
     S_SREF_ISSUE,
+    Topology,
 )
 
 # pending-after-precharge codes (open-page mode)
@@ -77,14 +84,15 @@ class BankState(NamedTuple):
     pending: Array      # open-page: action after PRE_WAIT (P_* codes)
 
     @staticmethod
-    def make(cfg: MemSimConfig) -> "BankState":
-        b = cfg.num_banks
+    def make(topo: Topology, rp: RuntimeParams) -> "BankState":
+        b = topo.num_banks
         z = jnp.zeros((b,), jnp.int32)
         return BankState(
             st=z,
             timer=z,
             idle_ctr=z,
-            refresh_due=jnp.full((b,), cfg.tREFI, jnp.int32),
+            refresh_due=jnp.broadcast_to(
+                jnp.asarray(rp.tREFI, jnp.int32), (b,)),
             cur_addr=z,
             cur_write=z,
             cur_data=z,
@@ -103,8 +111,8 @@ class FsmOutputs(NamedTuple):
     started: Array       # bool[B]: service began (for latency breakdown)
 
 
-def row_of(cfg: MemSimConfig, addr: Array) -> Array:
-    return (addr >> (cfg.addr_low_bits + cfg.column_bits)).astype(jnp.int32)
+def row_of(topo: Topology, addr: Array) -> Array:
+    return (addr >> (topo.addr_low_bits + topo.column_bits)).astype(jnp.int32)
 
 
 def wait_mask(st: Array) -> Array:
@@ -120,7 +128,7 @@ def wait_mask(st: Array) -> Array:
     )
 
 
-def compute_bids(cfg: MemSimConfig, st: Array, cur_write: Array) -> Tuple[Array, Array]:
+def compute_bids(st: Array, cur_write: Array) -> Tuple[Array, Array]:
     """Current-state command bids for the shared command bus.
 
     Returns (bids bool[B], cmds int32[B]); cmds is CMD_NOP where not bidding.
@@ -137,7 +145,8 @@ def compute_bids(cfg: MemSimConfig, st: Array, cur_write: Array) -> Tuple[Array,
 
 
 def fsm_update(
-    cfg: MemSimConfig,
+    topo: Topology,
+    rp: RuntimeParams,
     bank: BankState,
     grant: Array,           # bool[B] command-bus grant (timing-checked)
     resp_accept: Array,     # bool[B] response arbiter accepted our token
@@ -145,13 +154,19 @@ def fsm_update(
     pop_item: Array,        # [B, 4] head items (addr, is_write, data, id)
     cycle: Array,           # scalar int32
 ) -> Tuple[BankState, FsmOutputs]:
-    """One synchronous clock edge for all bank FSMs (pure, branchless)."""
-    open_pol = cfg.page_policy == "open"
+    """One synchronous clock edge for all bank FSMs (pure, branchless).
+
+    ``rp.page_policy`` is a traced flag: the open-page deviations are merged
+    in with ``jnp.where`` masks gated on ``is_open``, so closed- and
+    open-page lanes share one compiled program and each reproduces the
+    original per-policy semantics bit-for-bit.
+    """
+    is_open = jnp.asarray(rp.page_policy) == PAGE_OPEN  # traced scalar
     st, timer = bank.st, bank.timer
     open_row = bank.open_row
     pending = bank.pending
 
-    refresh_needed = cycle >= (bank.refresh_due - cfg.tRFC)
+    refresh_needed = cycle >= (bank.refresh_due - rp.tRFC)
 
     # ---- WAIT states: tick timers, transition on expiry -------------------
     in_wait = wait_mask(st)
@@ -162,20 +177,19 @@ def fsm_update(
     nxt = jnp.where(expired & (st == S_ACT_WAIT), S_RW_ISSUE, nxt)
     # activation opens the row (tracked in both modes; used by open mode)
     open_row = jnp.where(expired & (st == S_ACT_WAIT),
-                         row_of(cfg, bank.cur_addr), open_row)
-    if open_pol:
-        nxt = jnp.where(expired & (st == S_RW_WAIT), S_RESP_PEND, nxt)
-        # after PRE: do whatever was pending (activate / refresh / sref)
-        pre_done = expired & (st == S_PRE_WAIT)
-        nxt = jnp.where(pre_done & (pending == P_RW), S_ACT_ISSUE, nxt)
-        nxt = jnp.where(pre_done & (pending == P_REF), S_REF_ISSUE, nxt)
-        nxt = jnp.where(pre_done & (pending == P_SREF), S_SREF_ISSUE, nxt)
-        open_row = jnp.where(pre_done, -1, open_row)
-        pending = jnp.where(pre_done, P_NONE, pending)
-    else:
-        nxt = jnp.where(expired & (st == S_RW_WAIT), S_PRE_ISSUE, nxt)
-        nxt = jnp.where(expired & (st == S_PRE_WAIT), S_RESP_PEND, nxt)
-        open_row = jnp.where(expired & (st == S_PRE_WAIT), -1, open_row)
+                         row_of(topo, bank.cur_addr), open_row)
+    # RW_WAIT expiry: open page responds directly, closed page precharges
+    nxt = jnp.where(expired & (st == S_RW_WAIT),
+                    jnp.where(is_open, S_RESP_PEND, S_PRE_ISSUE), nxt)
+    # PRE_WAIT expiry: closed page responds; open page dispatches on the
+    # pending code latched when the precharge was scheduled
+    pre_done = expired & (st == S_PRE_WAIT)
+    nxt = jnp.where(pre_done & ~is_open, S_RESP_PEND, nxt)
+    nxt = jnp.where(pre_done & is_open & (pending == P_RW), S_ACT_ISSUE, nxt)
+    nxt = jnp.where(pre_done & is_open & (pending == P_REF), S_REF_ISSUE, nxt)
+    nxt = jnp.where(pre_done & is_open & (pending == P_SREF), S_SREF_ISSUE, nxt)
+    open_row = jnp.where(pre_done, -1, open_row)
+    pending = jnp.where(pre_done, P_NONE, pending)
     nxt = jnp.where(expired & (st == S_REF_WAIT), S_IDLE, nxt)
     nxt = jnp.where(expired & (st == S_SREF_EXIT_WAIT), S_IDLE, nxt)
     rw_done = expired & (st == S_RW_WAIT)
@@ -183,18 +197,18 @@ def fsm_update(
 
     # ---- ISSUE states: on grant, enter the corresponding WAIT -------------
     is_wr = bank.cur_write == 1
-    act_dur = jnp.where(is_wr, cfg.tRCDWR, cfg.tRCDRD).astype(jnp.int32)
+    act_dur = jnp.where(is_wr, rp.tRCDWR, rp.tRCDRD).astype(jnp.int32)
     nxt = jnp.where(grant & (st == S_ACT_ISSUE), S_ACT_WAIT, nxt)
     timer2 = jnp.where(grant & (st == S_ACT_ISSUE), act_dur, timer2)
     nxt = jnp.where(grant & (st == S_RW_ISSUE), S_RW_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_RW_ISSUE), cfg.tCL, timer2)
+    timer2 = jnp.where(grant & (st == S_RW_ISSUE), rp.tCL, timer2)
     nxt = jnp.where(grant & (st == S_PRE_ISSUE), S_PRE_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_PRE_ISSUE), cfg.tRP, timer2)
+    timer2 = jnp.where(grant & (st == S_PRE_ISSUE), rp.tRP, timer2)
     nxt = jnp.where(grant & (st == S_REF_ISSUE), S_REF_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_REF_ISSUE), cfg.tRFC, timer2)
+    timer2 = jnp.where(grant & (st == S_REF_ISSUE), rp.tRFC, timer2)
     nxt = jnp.where(grant & (st == S_SREF_ISSUE), S_SREF, nxt)
     nxt = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), S_SREF_EXIT_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), cfg.tXS, timer2)
+    timer2 = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), rp.tXS, timer2)
 
     # ---- RESP_PEND: drained by the response arbiter ------------------------
     completed = resp_accept & (st == S_RESP_PEND)
@@ -204,46 +218,38 @@ def fsm_update(
     idle = st == S_IDLE
     row_open = open_row >= 0
     go_ref = idle & refresh_needed
-    if open_pol:
-        # refresh requires a closed row: precharge first if one is open
-        nxt = jnp.where(go_ref & row_open, S_PRE_ISSUE, nxt)
-        pending = jnp.where(go_ref & row_open, P_REF, pending)
-        nxt = jnp.where(go_ref & ~row_open, S_REF_ISSUE, nxt)
-    else:
-        nxt = jnp.where(go_ref, S_REF_ISSUE, nxt)
+    # open page with a row open must precharge before refreshing
+    ref_pre = is_open & row_open
+    nxt = jnp.where(go_ref, jnp.where(ref_pre, S_PRE_ISSUE, S_REF_ISSUE), nxt)
+    pending = jnp.where(go_ref & ref_pre, P_REF, pending)
 
     want_pop = idle & ~refresh_needed & queue_nonempty
-    if open_pol:
-        pop_row = row_of(cfg, pop_item[:, 0])
-        hit = want_pop & row_open & (open_row == pop_row)
-        conflict = want_pop & row_open & (open_row != pop_row)
-        closed_row = want_pop & ~row_open
-        nxt = jnp.where(hit, S_RW_ISSUE, nxt)          # row hit: CAS only
-        nxt = jnp.where(closed_row, S_ACT_ISSUE, nxt)
-        nxt = jnp.where(conflict, S_PRE_ISSUE, nxt)    # conflict: close first
-        pending = jnp.where(conflict, P_RW, pending)
-    else:
-        nxt = jnp.where(want_pop, S_ACT_ISSUE, nxt)
+    pop_row = row_of(topo, pop_item[:, 0])
+    hit = is_open & want_pop & row_open & (open_row == pop_row)
+    conflict = is_open & want_pop & row_open & (open_row != pop_row)
+    # default: activate (closed page always; open page when no row is open)
+    nxt = jnp.where(want_pop, S_ACT_ISSUE, nxt)
+    nxt = jnp.where(hit, S_RW_ISSUE, nxt)          # row hit: CAS only
+    nxt = jnp.where(conflict, S_PRE_ISSUE, nxt)    # conflict: close first
+    pending = jnp.where(conflict, P_RW, pending)
 
     truly_idle = idle & ~refresh_needed & ~queue_nonempty
     idle_ctr2 = jnp.where(truly_idle, bank.idle_ctr + 1, jnp.zeros_like(bank.idle_ctr))
-    go_sref = truly_idle & (idle_ctr2 >= cfg.sref_idle_cycles)
-    if open_pol:
-        nxt = jnp.where(go_sref & row_open, S_PRE_ISSUE, nxt)
-        pending = jnp.where(go_sref & row_open, P_SREF, pending)
-        nxt = jnp.where(go_sref & ~row_open, S_SREF_ISSUE, nxt)
-    else:
-        nxt = jnp.where(go_sref, S_SREF_ISSUE, nxt)
+    go_sref = truly_idle & (idle_ctr2 >= rp.sref_idle_cycles)
+    sref_pre = is_open & row_open
+    nxt = jnp.where(go_sref,
+                    jnp.where(sref_pre, S_PRE_ISSUE, S_SREF_ISSUE), nxt)
+    pending = jnp.where(go_sref & sref_pre, P_SREF, pending)
 
     # ---- SREF: wake on pending work ----------------------------------------
     wake = (st == S_SREF) & queue_nonempty
     nxt = jnp.where(wake, S_SREF_EXIT_ISSUE, nxt)
 
     # ---- refresh bookkeeping ------------------------------------------------
-    refresh_due2 = jnp.where(ref_done, bank.refresh_due + cfg.tREFI, bank.refresh_due)
+    refresh_due2 = jnp.where(ref_done, bank.refresh_due + rp.tREFI, bank.refresh_due)
     # Self-refresh internally maintains the cells: push the deadline forward.
     exiting = expired & (st == S_SREF_EXIT_WAIT)
-    refresh_due2 = jnp.where(exiting, cycle + cfg.tREFI, refresh_due2)
+    refresh_due2 = jnp.where(exiting, cycle + rp.tREFI, refresh_due2)
 
     # ---- latch popped request -------------------------------------------------
     cur_addr = jnp.where(want_pop, pop_item[:, 0], bank.cur_addr)

@@ -12,7 +12,10 @@ the corresponding timing parameter, and the FSM cannot skip states — the
 same "correct by construction" property the paper claims for RTL.
 
 State layout is vectorized: one entry per flattened rank for rank-scoped
-registers, one per flattened bank for bank-scoped ones.
+registers, one per flattened bank for bank-scoped ones. Structure (rank and
+bank counts, address decode) comes from the static :class:`Topology`; every
+timing value comes from the traced :class:`RuntimeParams` pytree, so one
+compiled program serves any Table-1 parameter point.
 """
 
 from __future__ import annotations
@@ -26,7 +29,8 @@ from repro.core.params import (
     CMD_ACT,
     CMD_RD,
     CMD_WR,
-    MemSimConfig,
+    RuntimeParams,
+    Topology,
 )
 
 _NEG = jnp.int32(-(1 << 20))  # "long ago" initializer for last-command times
@@ -41,8 +45,8 @@ class TimingState(NamedTuple):
     last_wr: Array     # [R] most recent WRITE column command
 
     @staticmethod
-    def make(cfg: MemSimConfig) -> "TimingState":
-        r = cfg.num_ranks
+    def make(topo: Topology) -> "TimingState":
+        r = topo.num_ranks
         return TimingState(
             last_act=jnp.full((r,), _NEG, jnp.int32),
             act_win=jnp.full((r, 4), _NEG, jnp.int32),
@@ -51,16 +55,16 @@ class TimingState(NamedTuple):
         )
 
 
-def bank_to_rank(cfg: MemSimConfig, bank_idx: Array) -> Array:
+def bank_to_rank(topo: Topology, bank_idx: Array) -> Array:
     """Map flattened bank index -> flattened rank index.
 
     Banks are flattened channel-major: ``bank = ((ch * R + rank) * BG + bg) * BA + ba``.
     """
-    return bank_idx // cfg.banks_per_rank
+    return bank_idx // topo.banks_per_rank
 
 
 def check_issue(
-    cfg: MemSimConfig,
+    rp: RuntimeParams,
     timing: TimingState,
     cycle: Array,
     cmd: Array,          # [B] int32 command each bank wants to issue
@@ -77,9 +81,9 @@ def check_issue(
     lw = timing.last_wr[rank_of_bank]
 
     oldest_act = aw.min(axis=-1)
-    act_ok = ((cycle - la) >= cfg.tRRDL) & ((cycle - oldest_act) >= cfg.tFAW)
-    rd_ok = ((cycle - lr) >= cfg.tCCDL) & ((cycle - lw) >= cfg.tWTR)
-    wr_ok = ((cycle - lw) >= cfg.tCCDL) & ((cycle - lr) >= cfg.tRTW)
+    act_ok = ((cycle - la) >= rp.tRRDL) & ((cycle - oldest_act) >= rp.tFAW)
+    rd_ok = ((cycle - lr) >= rp.tCCDL) & ((cycle - lw) >= rp.tWTR)
+    wr_ok = ((cycle - lw) >= rp.tCCDL) & ((cycle - lr) >= rp.tRTW)
 
     ok = jnp.ones_like(cmd, dtype=bool)
     ok = jnp.where(cmd == CMD_ACT, act_ok, ok)
@@ -89,7 +93,6 @@ def check_issue(
 
 
 def record_issue(
-    cfg: MemSimConfig,
     timing: TimingState,
     cycle: Array,
     cmd: Array,        # scalar int32: the command granted this cycle (per channel
@@ -115,7 +118,7 @@ def record_issue(
     return TimingState(last_act, act_win, last_rd, last_wr)
 
 
-def wait_duration(cfg: MemSimConfig, cmd: Array, is_write: Array) -> Array:
+def wait_duration(rp: RuntimeParams, cmd: Array, is_write: Array) -> Array:
     """Duration of the WAIT state entered after a command is issued.
 
     ACT  -> tRCDRD / tRCDWR (activate-to-column delay, paper Table 1)
@@ -127,29 +130,29 @@ def wait_duration(cfg: MemSimConfig, cmd: Array, is_write: Array) -> Array:
     from repro.core.params import CMD_PRE, CMD_REF, CMD_SREF_ENTER, CMD_SREF_EXIT
 
     dur = jnp.zeros_like(cmd)
-    act_dur = jnp.where(is_write, cfg.tRCDWR, cfg.tRCDRD)
+    act_dur = jnp.where(is_write, rp.tRCDWR, rp.tRCDRD)
     dur = jnp.where(cmd == CMD_ACT, act_dur, dur)
-    dur = jnp.where((cmd == CMD_RD) | (cmd == CMD_WR), cfg.tCL, dur)
-    dur = jnp.where(cmd == CMD_PRE, cfg.tRP, dur)
-    dur = jnp.where(cmd == CMD_REF, cfg.tRFC, dur)
+    dur = jnp.where((cmd == CMD_RD) | (cmd == CMD_WR), rp.tCL, dur)
+    dur = jnp.where(cmd == CMD_PRE, rp.tRP, dur)
+    dur = jnp.where(cmd == CMD_REF, rp.tRFC, dur)
     dur = jnp.where(cmd == CMD_SREF_ENTER, 1, dur)
-    dur = jnp.where(cmd == CMD_SREF_EXIT, cfg.tXS, dur)
+    dur = jnp.where(cmd == CMD_SREF_EXIT, rp.tXS, dur)
     return dur
 
 
-def decode_address(cfg: MemSimConfig, addr: Array) -> Tuple[Array, Array, Array]:
+def decode_address(topo: Topology, addr: Array) -> Tuple[Array, Array, Array]:
     """Address -> (flat_bank, flat_rank, row), paper §5.2 fixed mapping.
 
     Low bits: {channel? no — paper: remaining|rank|bankgroup|bank}. We extend
     with channel above rank when channels > 1.
     """
-    ba = addr & (cfg.banks_per_group - 1)
-    bg = (addr >> cfg.bank_bits) & (cfg.bankgroups - 1)
-    rk = (addr >> (cfg.bank_bits + cfg.bankgroup_bits)) & (cfg.ranks - 1)
-    ch = (addr >> (cfg.bank_bits + cfg.bankgroup_bits + cfg.rank_bits)) & (
-        cfg.channels - 1
+    ba = addr & (topo.banks_per_group - 1)
+    bg = (addr >> topo.bank_bits) & (topo.bankgroups - 1)
+    rk = (addr >> (topo.bank_bits + topo.bankgroup_bits)) & (topo.ranks - 1)
+    ch = (addr >> (topo.bank_bits + topo.bankgroup_bits + topo.rank_bits)) & (
+        topo.channels - 1
     )
-    flat_bank = ((ch * cfg.ranks + rk) * cfg.bankgroups + bg) * cfg.banks_per_group + ba
-    flat_rank = ch * cfg.ranks + rk
-    row = addr >> (cfg.addr_low_bits + cfg.column_bits)
+    flat_bank = ((ch * topo.ranks + rk) * topo.bankgroups + bg) * topo.banks_per_group + ba
+    flat_rank = ch * topo.ranks + rk
+    row = addr >> (topo.addr_low_bits + topo.column_bits)
     return flat_bank.astype(jnp.int32), flat_rank.astype(jnp.int32), row.astype(jnp.int32)

@@ -4,7 +4,7 @@ The reference engine (:func:`repro.core.simulator.simulate`) runs one
 ``lax.scan`` step per clock and bakes ``queue_size`` into the compiled
 program, so the paper's Fig 7/8/9 queue sweeps pay one full XLA compile per
 sweep point and a fully serial 100k-step scan per run. This module removes
-all three bottlenecks while staying **bit-exact** against the reference:
+those bottlenecks while staying **bit-exact** against the reference:
 
 1. **Compile-once sweeps** — queue occupancy is a *runtime* limit against a
    static max capacity (``Fifo.limit`` / ``BankedFifo.limit``,
@@ -37,22 +37,31 @@ all three bottlenecks while staying **bit-exact** against the reference:
    skip overhead), collapsing bursty gaps and the post-drain tail of finite
    traces.
 
+4. **Runtime parameter grids** — every Table-1 timing value, the page
+   policy and the scheduler are a traced :class:`RuntimeParams` pytree (the
+   static :class:`Topology` carries only shapes), so :func:`sweep_grid`
+   runs a whole (timing x page-policy x scheduler x refresh x queue-depth)
+   Cartesian grid as batch lanes of ONE compiled XLA program.
+
 Exactness contract: for any ``cfg`` with capacity ``C``, trace, horizon and
 runtime limit ``q <= C``,
 
     simulate_fast(cfg[C], trace, n, queue_size=q)
         == simulate(cfg[queue_size=q], trace, n)
 
-field-for-field. ``tests/test_engine_equivalence.py`` enforces this for all
-seed traces, both page policies and both FSM backends.
+field-for-field, and likewise per lane for any RuntimeParams point of a
+grid. ``tests/test_engine_equivalence.py`` enforces this for all seed
+traces, both page policies, both schedulers, both FSM backends, and
+randomized RuntimeParams draws.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +69,14 @@ import numpy as np
 from jax import Array
 
 from repro.core.bank_fsm import wait_mask
-from repro.core.params import CMD_NOP, MemSimConfig, S_IDLE, S_SREF
+from repro.core.params import (
+    CMD_NOP,
+    MemSimConfig,
+    RuntimeParams,
+    S_IDLE,
+    S_SREF,
+    Topology,
+)
 from repro.core.simulator import (
     SimResult,
     SimState,
@@ -78,7 +94,7 @@ _PAD_T = 0x3FFFFFFF  # arrival time for padded trace slots: never due
 # cycle-skipping
 # --------------------------------------------------------------------------
 
-def _skip_delta(cfg: MemSimConfig, trace: Trace, state: SimState,
+def _skip_delta(rp: RuntimeParams, trace: Trace, state: SimState,
                 nxt: Array, horizon: Array) -> Array:
     """Number of provably-inert cycles starting at cycle ``nxt``.
 
@@ -109,11 +125,12 @@ def _skip_delta(cfg: MemSimConfig, trace: Trace, state: SimState,
     # a WAIT bank with timer k expires during cycle nxt + k - 1
     timers = jnp.where(in_wait, state.bank.timer - 1, _INF).min()
     # an idle bank enters its refresh window at cycle refresh_due - tRFC
-    refresh = jnp.where(is_idle, state.bank.refresh_due - cfg.tRFC - nxt,
+    # (both traced RuntimeParams values, so the bound itself is data)
+    refresh = jnp.where(is_idle, state.bank.refresh_due - rp.tRFC - nxt,
                         _INF).min()
     # an idle bank crosses the SREF threshold when idle_ctr+1 reaches it
     sref_in = jnp.where(is_idle,
-                        cfg.sref_idle_cycles - 1 - state.bank.idle_ctr,
+                        rp.sref_idle_cycles - 1 - state.bank.idle_ctr,
                         _INF).min()
     bound = jnp.minimum(jnp.minimum(arrival, timers),
                         jnp.minimum(refresh, sref_in))
@@ -121,7 +138,7 @@ def _skip_delta(cfg: MemSimConfig, trace: Trace, state: SimState,
     return jnp.where(gate, jnp.maximum(bound, 0), 0).astype(jnp.int32)
 
 
-def _apply_skip(cfg: MemSimConfig, state: SimState, delta: Array) -> SimState:
+def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
     """Fast-forward ``delta`` inert cycles, replicating exactly what the
     per-cycle engine would have accumulated over them."""
     st = state.bank.st
@@ -148,7 +165,7 @@ def _apply_skip(cfg: MemSimConfig, state: SimState, delta: Array) -> SimState:
     # each skipped cycle issues CMD_NOP on every channel (junk slot, but we
     # keep it bit-identical to the per-cycle engine)
     counters["cmd_counts"] = c["cmd_counts"].at[CMD_NOP].add(
-        delta * cfg.channels)
+        delta * topo.channels)
     counters["sref_cycles"] = c["sref_cycles"] + delta * n_sref
     counters["idle_cycles"] = c["idle_cycles"] + delta * n_idle
     counters["active_cycles"] = c["active_cycles"] + delta * (
@@ -168,19 +185,20 @@ def _apply_skip(cfg: MemSimConfig, state: SimState, delta: Array) -> SimState:
 _CHUNK = 128
 
 
-def _run_skip_core(cfg: MemSimConfig, trace: Trace, num_cycles: Array,
-                   queue_limit: Array, resp_limit: Array
+def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
+                   rp: RuntimeParams, queue_limit: Array, resp_limit: Array
                    ) -> Tuple[SimState, Array]:
-    """Chunked while-loop engine with cycle-skipping; ``num_cycles`` is
-    traced, so one compiled program serves every horizon. Returns (final
-    state, number of cycle_step executions actually performed).
+    """Chunked while-loop engine with cycle-skipping; ``num_cycles`` and
+    every RuntimeParams value are traced, so one compiled program serves
+    every horizon and parameter point. Returns (final state, number of
+    cycle_step executions actually performed).
 
     The loop condition is a scalar, so XLA keeps the carried buffers
     in-place — no per-iteration state copies (this is why the batched
     variant below shares one clock across lanes instead of vmapping the
     whole while loop, whose batching rule would select-copy the full state
     every step)."""
-    state0 = init_state(cfg, trace.num_requests, queue_limit, resp_limit)
+    state0 = init_state(topo, rp, trace.num_requests, queue_limit, resp_limit)
     num_cycles = jnp.asarray(num_cycles, jnp.int32)
 
     def cond(carry):
@@ -190,39 +208,44 @@ def _run_skip_core(cfg: MemSimConfig, trace: Trace, num_cycles: Array,
     def body(carry):
         state, t, steps = carry
         state = jax.lax.fori_loop(
-            0, _CHUNK, lambda i, s: cycle_step(cfg, trace, s, t + i), state)
-        delta = _skip_delta(cfg, trace, state, t + _CHUNK, num_cycles)
-        state = _apply_skip(cfg, state, delta)
+            0, _CHUNK, lambda i, s: cycle_step(topo, rp, trace, s, t + i),
+            state)
+        delta = _skip_delta(rp, trace, state, t + _CHUNK, num_cycles)
+        state = _apply_skip(topo, state, delta)
         return (state, t + _CHUNK + delta, steps + _CHUNK)
 
     state, t, steps = jax.lax.while_loop(
         cond, body, (state0, jnp.int32(0), jnp.int32(0)))
     # remainder: fewer than _CHUNK cycles left, plain per-cycle loop
     state = jax.lax.fori_loop(
-        t, num_cycles, lambda c, s: cycle_step(cfg, trace, s, c), state)
+        t, num_cycles, lambda c, s: cycle_step(topo, rp, trace, s, c), state)
     return state, steps + (num_cycles - t)
 
 
-def _run_skip_batch_core(cfg: MemSimConfig, traces: Trace, num_cycles: Array,
-                         queue_limits: Array, resp_limits: Array
-                         ) -> Tuple[SimState, Array]:
+def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
+                         rps: RuntimeParams, queue_limits: Array,
+                         resp_limits: Array) -> Tuple[SimState, Array]:
     """Batched cycle-skipping on a SHARED clock (vmap mode).
 
-    All lanes see the same cycle counter; the clock jumps by the *joint*
-    skip ``delta = min over lanes`` of each lane's inert bound, so a jump
-    happens only when every lane is provably quiescent and each lane's
-    skipped cycles are inert for it — per-lane exactness is untouched.
-    Sharing the clock keeps the while condition scalar: no per-lane
-    live-masking of the carry (which would copy every queue/memory buffer
-    each step) and in-place buffer updates survive."""
+    Lanes carry heterogeneous RuntimeParams (``rps`` has a leading batch
+    axis on every field): timings, policies, refresh intervals and queue
+    limits all differ per lane inside ONE device program. All lanes see
+    the same cycle counter; the clock jumps by the *joint* skip ``delta =
+    min over lanes`` of each lane's inert bound, so a jump happens only
+    when every lane is provably quiescent and each lane's skipped cycles
+    are inert for it — per-lane exactness is untouched. Sharing the clock
+    keeps the while condition scalar: no per-lane live-masking of the
+    carry (which would copy every queue/memory buffer each step) and
+    in-place buffer updates survive."""
     states = jax.vmap(
-        lambda tr, ql, rl: init_state(cfg, tr.num_requests, ql, rl)
-    )(traces, queue_limits, resp_limits)
+        lambda tr, rp, ql, rl: init_state(topo, rp, tr.num_requests, ql, rl)
+    )(traces, rps, queue_limits, resp_limits)
     num_cycles = jnp.asarray(num_cycles, jnp.int32)
 
     def step_all(states, cycle):
         return jax.vmap(
-            lambda tr, st: cycle_step(cfg, tr, st, cycle))(traces, states)
+            lambda tr, rp, st: cycle_step(topo, rp, tr, st, cycle)
+        )(traces, rps, states)
 
     def cond(carry):
         _, t, _ = carry
@@ -233,10 +256,10 @@ def _run_skip_batch_core(cfg: MemSimConfig, traces: Trace, num_cycles: Array,
         states = jax.lax.fori_loop(
             0, _CHUNK, lambda i, s: step_all(s, t + i), states)
         deltas = jax.vmap(
-            lambda tr, st: _skip_delta(cfg, tr, st, t + _CHUNK, num_cycles)
-        )(traces, states)
+            lambda tr, rp, st: _skip_delta(rp, tr, st, t + _CHUNK, num_cycles)
+        )(traces, rps, states)
         delta = deltas.min()
-        states = jax.vmap(lambda st: _apply_skip(cfg, st, delta))(states)
+        states = jax.vmap(lambda st: _apply_skip(topo, st, delta))(states)
         return (states, t + _CHUNK + delta, steps + _CHUNK)
 
     states, t, steps = jax.lax.while_loop(
@@ -246,14 +269,14 @@ def _run_skip_batch_core(cfg: MemSimConfig, traces: Trace, num_cycles: Array,
     return states, steps + (num_cycles - t)
 
 
-def _run_scan_core(cfg: MemSimConfig, trace: Trace, num_cycles: int,
-                   queue_limit: Array, resp_limit: Array
+def _run_scan_core(topo: Topology, trace: Trace, num_cycles: int,
+                   rp: RuntimeParams, queue_limit: Array, resp_limit: Array
                    ) -> Tuple[SimState, Array]:
-    """Plain per-cycle scan, but with runtime queue limits (compile-once)."""
-    state0 = init_state(cfg, trace.num_requests, queue_limit, resp_limit)
+    """Plain per-cycle scan, but with runtime limits/params (compile-once)."""
+    state0 = init_state(topo, rp, trace.num_requests, queue_limit, resp_limit)
 
     def step(carry, cycle):
-        return cycle_step(cfg, trace, carry, cycle), None
+        return cycle_step(topo, rp, trace, carry, cycle), None
 
     final, _ = jax.lax.scan(step, state0,
                             jnp.arange(num_cycles, dtype=jnp.int32))
@@ -261,25 +284,30 @@ def _run_scan_core(cfg: MemSimConfig, trace: Trace, num_cycles: int,
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run_skip_jit(cfg, trace, num_cycles, queue_limit, resp_limit):
-    return _run_skip_core(cfg, trace, num_cycles, queue_limit, resp_limit)
+def _run_skip_jit(topo, trace, num_cycles, rp, queue_limit, resp_limit):
+    return _run_skip_core(topo, trace, num_cycles, rp, queue_limit,
+                          resp_limit)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_scan_jit(cfg, trace, num_cycles, queue_limit, resp_limit):
-    return _run_scan_core(cfg, trace, num_cycles, queue_limit, resp_limit)
+def _run_scan_jit(topo, trace, num_cycles, rp, queue_limit, resp_limit):
+    return _run_scan_core(topo, trace, num_cycles, rp, queue_limit,
+                          resp_limit)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run_skip_batch_jit(cfg, traces, num_cycles, queue_limits, resp_limits):
-    return _run_skip_batch_core(cfg, traces, num_cycles, queue_limits,
+def _run_skip_batch_jit(topo, traces, num_cycles, rps, queue_limits,
+                        resp_limits):
+    return _run_skip_batch_core(topo, traces, num_cycles, rps, queue_limits,
                                 resp_limits)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_scan_batch_jit(cfg, traces, num_cycles, queue_limits, resp_limits):
-    fn = lambda tr, ql, rl: _run_scan_core(cfg, tr, num_cycles, ql, rl)
-    return jax.vmap(fn)(traces, queue_limits, resp_limits)
+def _run_scan_batch_jit(topo, traces, num_cycles, rps, queue_limits,
+                        resp_limits):
+    fn = lambda tr, rp, ql, rl: _run_scan_core(topo, tr, num_cycles, rp,
+                                               ql, rl)
+    return jax.vmap(fn)(traces, rps, queue_limits, resp_limits)
 
 
 # --------------------------------------------------------------------------
@@ -315,19 +343,20 @@ def stack_traces(traces: Sequence[Trace]) -> Tuple[Trace, List[int]]:
     return stacked, ns
 
 
-def _lane_executable(cfg: MemSimConfig, n_max: int, num_cycles: int,
+def _lane_executable(topo: Topology, n_max: int, num_cycles: int,
                      cycle_skip: bool, device) -> Tuple[object, float]:
     """AOT-compile the single-lane runner for one device (cached).
 
     Lowering uses ShapeDtypeStructs committed to ``device``, so each device
     gets its own executable once and every lane dispatched to that device
-    reuses it — including across horizons (``num_cycles`` is a runtime
-    value for the skipping engine). Returns (executable, compile seconds —
-    0.0 on cache hit)."""
+    reuses it — including across horizons and RuntimeParams points
+    (``num_cycles`` and the whole parameter pytree are runtime values for
+    the skipping engine). Returns (executable, compile seconds — 0.0 on
+    cache hit)."""
     from jax.sharding import SingleDeviceSharding
 
     sharding = SingleDeviceSharding(device)
-    key = ("lane", cfg, n_max, None if cycle_skip else num_cycles,
+    key = ("lane", topo, n_max, None if cycle_skip else num_cycles,
            cycle_skip, device.id)
     cached = _aot_cache.get(key)
     if cached is not None:
@@ -339,27 +368,30 @@ def _lane_executable(cfg: MemSimConfig, n_max: int, num_cycles: int,
     tr_s = Trace(t=sds((n_max,)), addr=sds((n_max,)),
                  is_write=sds((n_max,)), wdata=sds((n_max,)))
     scal = sds(())
+    rp_s = RuntimeParams(*([scal] * len(RuntimeParams._fields)))
     t0 = time.perf_counter()
     if cycle_skip:
-        compiled = _run_skip_jit.lower(cfg, tr_s, scal, scal, scal).compile()
+        compiled = _run_skip_jit.lower(topo, tr_s, scal, rp_s, scal,
+                                       scal).compile()
     else:
-        compiled = _run_scan_jit.lower(cfg, tr_s, num_cycles, scal,
+        compiled = _run_scan_jit.lower(topo, tr_s, num_cycles, rp_s, scal,
                                        scal).compile()
     compile_s = time.perf_counter() - t0
     _aot_cache[key] = compiled
     return compiled, compile_s
 
 
-def _run_lanes(cfg: MemSimConfig, trace_list: List[Trace], num_cycles: int,
-               qs: List[int], rs: List[int], cycle_skip: bool, shard: bool,
+def _run_lanes(topo: Topology, trace_list: List[Trace], num_cycles: int,
+               rps: List[RuntimeParams], qs: List[int], rs: List[int],
+               cycle_skip: bool, shard: bool,
                timings: Optional[dict]) -> Tuple[List[SimState], List[int]]:
     """Lanes mode: each lane runs the single-lane engine; lanes round-robin
     over devices and execute concurrently from worker threads (XLA releases
     the GIL during execution). Unlike the vmap mode this keeps per-lane
     *independent* cycle-skipping — a drained lane fast-forwards even while
     another is still saturated — and each lane's op stream is identical to
-    ``simulate_fast``. One compiled executable per device serves every lane
-    and horizon."""
+    ``simulate_fast``. One compiled executable per device serves every
+    lane, horizon and RuntimeParams point."""
     from concurrent.futures import ThreadPoolExecutor
 
     n_max = max(int(tr.num_requests) for tr in trace_list)
@@ -368,23 +400,27 @@ def _run_lanes(cfg: MemSimConfig, trace_list: List[Trace], num_cycles: int,
     d_count = min(len(devices), len(padded))
 
     compile_s = 0.0
+    compiles = 0
     compiled = []
     for di in range(d_count):
-        exe, c_s = _lane_executable(cfg, n_max, num_cycles, cycle_skip,
+        exe, c_s = _lane_executable(topo, n_max, num_cycles, cycle_skip,
                                     devices[di])
         compiled.append(exe)
         compile_s += c_s
+        compiles += int(c_s > 0.0)
 
     def work(i: int):
         dev = devices[i % d_count]
         tr = jax.device_put(padded[i], dev)
+        rp = jax.tree_util.tree_map(
+            lambda x: jax.device_put(jnp.asarray(x, jnp.int32), dev), rps[i])
         ql = jax.device_put(jnp.int32(qs[i]), dev)
         rl = jax.device_put(jnp.int32(rs[i]), dev)
         if cycle_skip:
             nc = jax.device_put(jnp.int32(num_cycles), dev)
-            final, steps = compiled[i % d_count](tr, nc, ql, rl)
+            final, steps = compiled[i % d_count](tr, nc, rp, ql, rl)
         else:
-            final, steps = compiled[i % d_count](tr, ql, rl)
+            final, steps = compiled[i % d_count](tr, rp, ql, rl)
         jax.block_until_ready(final)
         return final, int(steps)
 
@@ -399,6 +435,7 @@ def _run_lanes(cfg: MemSimConfig, trace_list: List[Trace], num_cycles: int,
     if timings is not None:
         timings["compile_s"] = timings.get("compile_s", 0.0) + compile_s
         timings["run_s"] = timings.get("run_s", 0.0) + run_s
+        timings["compiles"] = timings.get("compiles", 0) + compiles
     return [o[0] for o in outs], [o[1] for o in outs]
 
 
@@ -428,6 +465,22 @@ def _maybe_shard(tree, batch: int):
 _aot_cache: Dict[tuple, object] = {}
 
 
+def _rp_i32(rp: RuntimeParams) -> RuntimeParams:
+    """Coerce every RuntimeParams leaf to a committed int32 scalar so AOT
+    cache keys and lowered signatures are stable regardless of whether the
+    caller passed Python ints or device arrays. Cross-field constraints the
+    seed path enforces are checked here too (skipped only for traced
+    leaves, which cannot be inspected host-side)."""
+    try:
+        if int(rp.tREFI) <= int(rp.tRFC):
+            raise ValueError(
+                f"tREFI={int(rp.tREFI)} must exceed tRFC={int(rp.tRFC)}")
+    except (jax.errors.TracerIntegerConversionError,
+            jax.errors.ConcretizationTypeError):
+        pass  # traced values: the caller owns validation
+    return RuntimeParams(*[jnp.asarray(v, jnp.int32) for v in rp])
+
+
 def _timed(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple,
            timings: Optional[dict]):
     """Invoke a jitted runner, optionally splitting compile vs run wall time
@@ -444,17 +497,20 @@ def _timed(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple,
     key = (id(jitted), static_key, shapes)
     compiled = _aot_cache.get(key)
     compile_s = 0.0
+    fresh = 0
     if compiled is None:
         t0 = time.perf_counter()
         compiled = jitted.lower(*all_args).compile()
         compile_s = time.perf_counter() - t0
         _aot_cache[key] = compiled
+        fresh = 1
     t1 = time.perf_counter()
     out = compiled(*dyn_args)
     jax.block_until_ready(out)
     t2 = time.perf_counter()
     timings["compile_s"] = timings.get("compile_s", 0.0) + compile_s
     timings["run_s"] = timings.get("run_s", 0.0) + (t2 - t1)
+    timings["compiles"] = timings.get("compiles", 0) + fresh
     return out
 
 
@@ -462,18 +518,24 @@ def simulate_fast(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
                   *, queue_size: Optional[int] = None,
                   resp_queue_size: Optional[int] = None,
                   cycle_skip: bool = True,
+                  params: Optional[RuntimeParams] = None,
                   timings: Optional[dict] = None) -> SimResult:
     """Single-trace run on the fast engine; bit-exact vs :func:`simulate`.
 
     ``cfg.queue_size`` is the static *capacity*; ``queue_size`` (default:
-    capacity) is the runtime depth actually enforced, so successive calls
-    with different depths reuse one compiled program. With ``cycle_skip``
-    the engine fast-forwards through provably inert cycles (exact — see
-    module docstring); pass ``cycle_skip=False`` for the plain compile-once
-    scan. ``timings`` (optional dict) receives ``compile_s``, ``run_s`` and
-    ``steps`` (cycle_step executions; < num_cycles when skipping helped).
+    capacity) is the runtime depth actually enforced. ``params`` (default:
+    ``cfg.runtime()``) carries every timing value and policy flag as traced
+    data. Successive calls with different depths, horizons or parameter
+    points all reuse one compiled program per ``cfg.topology()``. With
+    ``cycle_skip`` the engine fast-forwards through provably inert cycles
+    (exact — see module docstring); pass ``cycle_skip=False`` for the plain
+    compile-once scan. ``timings`` (optional dict) receives ``compile_s``,
+    ``run_s``, ``compiles`` and ``steps`` (cycle_step executions; <
+    num_cycles when skipping helped).
     """
     cfg.validate()
+    topo = cfg.topology()
+    rp = _rp_i32(cfg.runtime() if params is None else params)
     ql = cfg.queue_size if queue_size is None else queue_size
     rl = cfg.resp_queue_size if resp_queue_size is None else resp_queue_size
     if not (1 <= ql <= cfg.queue_size):
@@ -484,15 +546,18 @@ def simulate_fast(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
     rl = jnp.int32(rl)
     if cycle_skip:
         nc = jnp.int32(num_cycles)
-        final, steps = _timed(_run_skip_jit, (cfg, trace, nc, ql, rl),
-                              (trace, nc, ql, rl), (cfg,), timings)
+        final, steps = _timed(_run_skip_jit, (topo, trace, nc, rp, ql, rl),
+                              (trace, nc, rp, ql, rl), (topo,), timings)
     else:
-        final, steps = _timed(_run_scan_jit, (cfg, trace, num_cycles, ql, rl),
-                              (trace, ql, rl), (cfg, num_cycles), timings)
+        final, steps = _timed(_run_scan_jit,
+                              (topo, trace, num_cycles, rp, ql, rl),
+                              (trace, rp, ql, rl), (topo, num_cycles),
+                              timings)
     if timings is not None:
         timings["steps"] = int(steps)
     res = state_to_result(cfg, trace, final, num_cycles)
-    res.cfg = dataclasses.replace(cfg, queue_size=int(ql),
+    label = cfg if params is None else rp.apply_to(cfg)
+    res.cfg = dataclasses.replace(label, queue_size=int(ql),
                                   resp_queue_size=int(rl))
     return res
 
@@ -502,6 +567,8 @@ def simulate_batch(cfg: MemSimConfig,
                    num_cycles: int = 100_000,
                    *, queue_sizes: Optional[Sequence[int]] = None,
                    resp_queue_sizes: Optional[Sequence[int]] = None,
+                   params: Optional[Sequence[RuntimeParams]] = None,
+                   lane_cfgs: Optional[Sequence[MemSimConfig]] = None,
                    cycle_skip: bool = True,
                    shard: bool = True,
                    batch_mode: str = "auto",
@@ -509,9 +576,16 @@ def simulate_batch(cfg: MemSimConfig,
     """Run a batch of (trace, runtime-config) lanes through one compile.
 
     ``traces`` may be a list of traces (a multi-trace workload) or a single
-    trace that is broadcast across ``queue_sizes`` (a queue-depth sweep).
-    Lanes are padded to a common request count; each lane is bit-exact vs
-    an individual :func:`simulate` run at its queue depth.
+    trace that is broadcast across the lanes implied by ``queue_sizes`` /
+    ``params`` (a parameter sweep). ``params`` gives each lane its own
+    :class:`RuntimeParams` point — timings, page policy, scheduler,
+    refresh interval — all traced data inside the one compiled program
+    (default: every lane runs ``cfg.runtime()``). Lanes are padded to a
+    common request count; each lane is bit-exact vs an individual
+    :func:`simulate` run at its queue depth and parameter point.
+    ``lane_cfgs`` (optional, one per lane) labels each returned
+    ``SimResult.cfg``; by default the label is ``cfg`` with the lane's
+    queue depths substituted.
 
     ``batch_mode``:
       * ``"vmap"``  — stack lanes on a leading axis and ``vmap`` the cycle
@@ -527,14 +601,18 @@ def simulate_batch(cfg: MemSimConfig,
       * ``"auto"``  — ``"lanes"`` on the CPU backend, ``"vmap"`` otherwise.
     """
     cfg.validate()
+    topo = cfg.topology()
     if batch_mode not in ("auto", "vmap", "lanes"):
         raise ValueError(f"unknown batch_mode {batch_mode!r}")
     if batch_mode == "auto":
         batch_mode = "lanes" if jax.default_backend() == "cpu" else "vmap"
     if isinstance(traces, Trace):
-        if queue_sizes is None:
-            raise ValueError("broadcasting a single trace requires queue_sizes")
-        trace_list = [traces] * len(queue_sizes)
+        n_lanes = (len(queue_sizes) if queue_sizes is not None
+                   else len(params) if params is not None else None)
+        if n_lanes is None:
+            raise ValueError(
+                "broadcasting a single trace requires queue_sizes or params")
+        trace_list = [traces] * n_lanes
     else:
         trace_list = list(traces)
     lanes = len(trace_list)
@@ -556,12 +634,20 @@ def simulate_batch(cfg: MemSimConfig,
                     cfg.queue_size)
     rs = _broadcast(resp_queue_sizes, cfg.resp_queue_size,
                     "resp_queue_sizes", cfg.resp_queue_size)
+    if params is None:
+        rps = [_rp_i32(cfg.runtime())] * lanes
+    else:
+        rps = [_rp_i32(rp) for rp in params]
+        if len(rps) != lanes:
+            raise ValueError("params must have one entry per lane")
+    if lane_cfgs is not None and len(lane_cfgs) != lanes:
+        raise ValueError("lane_cfgs must have one entry per lane")
 
     ns = [int(tr.num_requests) for tr in trace_list]
 
     if batch_mode == "lanes":
-        finals, lane_steps = _run_lanes(cfg, trace_list, num_cycles, qs, rs,
-                                        cycle_skip, shard, timings)
+        finals, lane_steps = _run_lanes(topo, trace_list, num_cycles, rps,
+                                        qs, rs, cycle_skip, shard, timings)
         if timings is not None:
             timings["steps"] = max(lane_steps)
             timings["steps_total"] = sum(lane_steps)
@@ -577,21 +663,25 @@ def simulate_batch(cfg: MemSimConfig,
             return int(getattr(hosts[i], name))
     else:
         stacked, _ = stack_traces(trace_list)
+        rp_stack = RuntimeParams.stack(rps)
         ql = jnp.asarray(qs, jnp.int32)
         rl = jnp.asarray(rs, jnp.int32)
         if shard:
-            stacked, ql, rl = _maybe_shard((stacked, ql, rl), lanes)
+            stacked, rp_stack, ql, rl = _maybe_shard(
+                (stacked, rp_stack, ql, rl), lanes)
 
         if cycle_skip:
             nc = jnp.int32(num_cycles)
             finals, steps = _timed(_run_skip_batch_jit,
-                                   (cfg, stacked, nc, ql, rl),
-                                   (stacked, nc, ql, rl), (cfg,), timings)
+                                   (topo, stacked, nc, rp_stack, ql, rl),
+                                   (stacked, nc, rp_stack, ql, rl), (topo,),
+                                   timings)
         else:
             finals, steps = _timed(_run_scan_batch_jit,
-                                   (cfg, stacked, num_cycles, ql, rl),
-                                   (stacked, ql, rl), (cfg, num_cycles),
-                                   timings)
+                                   (topo, stacked, num_cycles, rp_stack,
+                                    ql, rl),
+                                   (stacked, rp_stack, ql, rl),
+                                   (topo, num_cycles), timings)
         if timings is not None:
             timings["steps"] = int(np.max(np.asarray(steps)))
         host = jax.device_get(finals)
@@ -607,8 +697,12 @@ def simulate_batch(cfg: MemSimConfig,
 
     results = []
     for i in range(lanes):
-        lane_cfg = dataclasses.replace(cfg, queue_size=qs[i],
-                                       resp_queue_size=rs[i])
+        if lane_cfgs is not None:
+            lane_cfg = lane_cfgs[i]
+        else:
+            lane_cfg = dataclasses.replace(rps[i].apply_to(cfg),
+                                           queue_size=qs[i],
+                                           resp_queue_size=rs[i])
         results.append(SimResult(
             cfg=lane_cfg,
             num_cycles=num_cycles,
@@ -635,16 +729,87 @@ def sweep_queue_sizes(cfg: MemSimConfig, trace: Trace,
                       timings: Optional[dict] = None) -> List[SimResult]:
     """The paper's queue sweep as one compile + one batched device program.
 
-    ``capacity`` (default ``max(queue_sizes)``) sizes the static buffers;
-    pass the largest depth you will ever sweep so later sweeps with the same
-    trace shape and lane count reuse the compiled program (``num_cycles`` is
-    already a runtime value for the skipping engine).
+    A one-axis special case of :func:`sweep_grid`. ``capacity`` (default
+    ``max(queue_sizes)``) sizes the static buffers; pass the largest depth
+    you will ever sweep so later sweeps with the same trace shape and lane
+    count reuse the compiled program (``num_cycles`` is already a runtime
+    value for the skipping engine).
     """
-    cap = max(queue_sizes) if capacity is None else capacity
-    if cap < max(queue_sizes):
+    return sweep_grid(cfg, trace, {"queue_size": list(queue_sizes)},
+                      num_cycles, capacity=capacity, cycle_skip=cycle_skip,
+                      batch_mode=batch_mode, timings=timings)
+
+
+#: grid axes resolvable by :func:`sweep_grid`: every RuntimeParams field
+#: (policies given as their config strings) plus the runtime queue depths.
+GRID_AXES = tuple(RuntimeParams._fields) + ("queue_size", "resp_queue_size")
+
+
+def grid_points(grid: Mapping[str, Sequence]) -> List[Dict]:
+    """Expand an axis dict into the Cartesian product of override dicts,
+    last axis fastest (``itertools.product`` order, deterministic)."""
+    keys = list(grid)
+    for k in keys:
+        if k not in GRID_AXES:
+            raise ValueError(f"unknown grid axis {k!r}; valid: {GRID_AXES}")
+        if len(grid[k]) == 0:
+            raise ValueError(f"grid axis {k!r} is empty")
+    return [dict(zip(keys, vals))
+            for vals in itertools.product(*(grid[k] for k in keys))]
+
+
+def sweep_grid(cfg: MemSimConfig, trace: Trace,
+               grid: Mapping[str, Sequence],
+               num_cycles: int = 100_000,
+               *, capacity: Optional[int] = None,
+               resp_capacity: Optional[int] = None,
+               cycle_skip: bool = True,
+               shard: bool = True,
+               batch_mode: str = "auto",
+               timings: Optional[dict] = None) -> List[SimResult]:
+    """Run a full runtime-parameter grid through ONE compiled program.
+
+    ``grid`` maps axis names to value lists; axes may be any Table-1
+    timing parameter (``tRP``, ``tREFI``, ...), ``page_policy`` /
+    ``sched_policy`` (config strings, lowered to flags), ``sref_idle_cycles``
+    and the runtime queue depths ``queue_size`` / ``resp_queue_size``. One
+    batch lane runs per point of the Cartesian product (:func:`grid_points`
+    order); every lane is bit-exact vs an individual :func:`simulate` run
+    of its config, and the whole grid — timings x policies x refresh x
+    depth — shares a single compiled XLA program because all axes are
+    traced data.
+
+    ``capacity`` / ``resp_capacity`` (defaults: the largest swept depth,
+    falling back to ``cfg``) size the static queue buffers. Returns one
+    :class:`SimResult` per point with ``result.cfg`` set to that point's
+    full ``MemSimConfig``.
+
+    Example::
+
+        sweep_grid(MemSimConfig(), trace, {
+            "tCL": [14, 18],
+            "page_policy": ["closed", "open"],
+            "sched_policy": ["fcfs", "frfcfs"],
+            "queue_size": [16, 64],
+        })
+    """
+    points = grid_points(grid)
+    # per-point full configs: __post_init__ validates the policy strings,
+    # validate() the cross-field constraints (e.g. tREFI > tRFC) the seed
+    # path would enforce — a bad grid point fails here, not silently in-trace
+    lane_cfgs = [dataclasses.replace(cfg, **ov).validate() for ov in points]
+    qs = [c.queue_size for c in lane_cfgs]
+    rs = [c.resp_queue_size for c in lane_cfgs]
+    cap = max(qs) if capacity is None else capacity
+    rcap = max(rs) if resp_capacity is None else resp_capacity
+    if cap < max(qs):
         raise ValueError("capacity below largest swept queue size")
-    cfg_cap = dataclasses.replace(cfg, queue_size=cap)
+    if rcap < max(rs):
+        raise ValueError("resp_capacity below largest swept resp queue size")
+    cfg_cap = dataclasses.replace(cfg, queue_size=cap, resp_queue_size=rcap)
     return simulate_batch(cfg_cap, trace, num_cycles,
-                          queue_sizes=list(queue_sizes),
-                          cycle_skip=cycle_skip, batch_mode=batch_mode,
-                          timings=timings)
+                          queue_sizes=qs, resp_queue_sizes=rs,
+                          params=[c.runtime() for c in lane_cfgs],
+                          lane_cfgs=lane_cfgs,
+                          cycle_skip=cycle_skip, shard=shard,
+                          batch_mode=batch_mode, timings=timings)

@@ -29,7 +29,7 @@ import numpy as np
 from jax import Array
 
 from repro.core.dram_model import decode_address
-from repro.core.params import MemSimConfig
+from repro.core.params import MemSimConfig, RuntimeParams, Topology
 from repro.core.simulator import Trace
 
 
@@ -48,22 +48,23 @@ class _Carry(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run(cfg: MemSimConfig, trace: Trace) -> IdealResult:
+def _run(topo: Topology, trace: Trace, rp: RuntimeParams) -> IdealResult:
     n = trace.num_requests
-    b = cfg.num_banks
+    b = topo.num_banks
 
     init = _Carry(
         bank_free=jnp.zeros((b,), jnp.int32),
         open_row=jnp.full((b,), -1, jnp.int32),
-        next_refresh=jnp.full((b,), cfg.tREFI, jnp.int32),
-        mem=jnp.zeros((cfg.mem_words,), jnp.int32),
+        next_refresh=jnp.broadcast_to(
+            jnp.asarray(rp.tREFI, jnp.int32), (b,)),
+        mem=jnp.zeros((topo.mem_words,), jnp.int32),
         t_complete=jnp.full((n,), -1, jnp.int32),
         rdata=jnp.zeros((n,), jnp.int32),
     )
 
     def step(c: _Carry, i: Array) -> tuple[_Carry, None]:
         addr = trace.addr[i]
-        bank, _, row = decode_address(cfg, addr)
+        bank, _, row = decode_address(topo, addr)
         arrive = trace.t[i]
         is_wr = trace.is_write[i] == 1
 
@@ -71,21 +72,21 @@ def _run(cfg: MemSimConfig, trace: Trace) -> IdealResult:
         # refresh: catch up any deadlines passed before service begins
         nref = c.next_refresh[bank]
         do_ref = ready >= nref
-        ready = jnp.where(do_ref, jnp.maximum(ready, nref + cfg.tRFC), ready)
-        nref = jnp.where(do_ref, nref + cfg.tREFI, nref)
+        ready = jnp.where(do_ref, jnp.maximum(ready, nref + rp.tRFC), ready)
+        nref = jnp.where(do_ref, nref + rp.tREFI, nref)
 
         cur_row = c.open_row[bank]
         hit = cur_row == row
         closed = cur_row < 0
-        tRCD = jnp.where(is_wr, cfg.tRCDWR, cfg.tRCDRD)
+        tRCD = jnp.where(is_wr, rp.tRCDWR, rp.tRCDRD)
         service = jnp.where(
             hit,
-            cfg.tCL + cfg.tCCDL,
-            jnp.where(closed, tRCD + cfg.tCL, cfg.tRP + tRCD + cfg.tCL),
+            rp.tCL + rp.tCCDL,
+            jnp.where(closed, tRCD + rp.tCL, rp.tRP + tRCD + rp.tCL),
         )
         done = ready + service
 
-        maddr = addr & (cfg.mem_words - 1)
+        maddr = addr & (topo.mem_words - 1)
         rdata_i = c.mem[maddr]
         mem = jnp.where(is_wr, c.mem.at[maddr].set(trace.wdata[i]), c.mem)
 
@@ -105,9 +106,15 @@ def _run(cfg: MemSimConfig, trace: Trace) -> IdealResult:
     return IdealResult(t_complete=final.t_complete, rdata=final.rdata)
 
 
-def simulate_ideal(cfg: MemSimConfig, trace: Trace) -> IdealResult:
-    """Run the open-page reference; returns per-request completion cycles."""
-    return _run(cfg, trace)
+def simulate_ideal(cfg: MemSimConfig, trace: Trace,
+                   *, params: RuntimeParams = None) -> IdealResult:
+    """Run the open-page reference; returns per-request completion cycles.
+
+    Compiled once per ``cfg.topology()``; timing values (``params``,
+    default lifted from ``cfg``) are traced data shared with the RTL
+    engine's sweep grids."""
+    rp = cfg.runtime() if params is None else params
+    return _run(cfg.topology(), trace, rp)
 
 
 def ideal_latencies(cfg: MemSimConfig, trace: Trace) -> np.ndarray:

@@ -1,4 +1,22 @@
-"""MemorySim configuration: topology + JEDEC timing parameters (paper Table 1).
+"""MemorySim configuration: static topology vs runtime parameters.
+
+The configuration layer is split along the compile boundary:
+
+* :class:`Topology` — everything that determines array *shapes* or the
+  *structure* of the compiled program (channel/rank/bankgroup/bank counts,
+  queue capacities, backing-store size, FSM backend). Frozen + hashable, it
+  is the only static ``jax.jit`` argument; two configs with the same
+  topology share one compiled XLA program.
+
+* :class:`RuntimeParams` — every JEDEC timing parameter of the paper's
+  Table 1 plus the page policy and scheduling policy, lowered from strings
+  to int flags. It is a NamedTuple *pytree* of traced int32 scalars, so a
+  whole (timing x policy x refresh x queue-depth) sweep grid runs through a
+  single compiled program — only the data changes per lane.
+
+* :class:`MemSimConfig` — the historical facade (Topology + all runtime
+  fields in one frozen dataclass). Every existing call site keeps working;
+  ``cfg.topology()`` / ``cfg.runtime()`` perform the split at the API edge.
 
 The paper's Table 1 gives the timing parameters MemorySim implements; values
 here default to the paper's published numbers. Two parameters the paper's
@@ -25,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import NamedTuple
 
 
 def _log2(x: int) -> int:
@@ -32,11 +51,23 @@ def _log2(x: int) -> int:
     return int(math.log2(x))
 
 
-@dataclasses.dataclass(frozen=True)
-class MemSimConfig:
-    """Static configuration for a MemorySim instance.
+# Policy flags: RuntimeParams lowers the policy strings to int32 data so a
+# single compiled program selects behaviour with jnp.where/lax.cond.
+PAGE_CLOSED, PAGE_OPEN = 0, 1
+SCHED_FCFS, SCHED_FRFCFS = 0, 1
+PAGE_POLICIES = {"closed": PAGE_CLOSED, "open": PAGE_OPEN}
+SCHED_POLICIES = {"fcfs": SCHED_FCFS, "frfcfs": SCHED_FRFCFS}
+FSM_BACKENDS = ("jnp", "pallas")
 
-    Frozen + hashable so it can be a static argument to ``jax.jit``.
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Static shape-determining configuration — the only ``jax.jit`` static.
+
+    Frozen + hashable; everything here sets an array shape (bank counts,
+    queue capacities, backing-store size) or the op structure of the
+    compiled program (FSM backend). All timing values and policies live in
+    :class:`RuntimeParams` and are traced.
     """
 
     # ---- topology -------------------------------------------------------
@@ -46,41 +77,10 @@ class MemSimConfig:
     banks_per_group: int = 4
     column_bits: int = 6          # low "remaining" bits that index within a row
 
-    # ---- queueing (paper: queueSize controls ALL controller queues) -----
+    # ---- queue capacities (static buffer shapes; the *runtime* depth is a
+    # traced limit — see repro.core.queues) --------------------------------
     queue_size: int = 128         # global reqQueue depth == per-bank queue depth
     resp_queue_size: int = 64
-
-    # ---- timing parameters (paper Table 1 values) ------------------------
-    tRP: int = 14                 # precharge period
-    tFAW: int = 30                # four-activation window
-    tRRDL: int = 6                # min cycles between two ACTs (same rank)
-    tRCDRD: int = 14              # ACTIVATE -> READ delay
-    tRCDWR: int = 14              # ACTIVATE -> WRITE delay
-    tCCDL: int = 2                # gap between consecutive column commands
-    tWTR: int = 8                 # WRITE -> READ turnaround
-    tRFC: int = 260               # refresh cycle time / "deadline to start"
-    tREFI: int = 3600             # refresh interval
-    # ---- additions documented in the module docstring -------------------
-    tCL: int = 14                 # column command data-return latency
-    tXS: int = 10                 # self-refresh exit latency
-    tRTW: int = 2                 # read -> write turnaround
-
-    # ---- self refresh (paper §5.2.3) -------------------------------------
-    sref_idle_cycles: int = 1000  # idle cycles before SREF entry
-
-    # ---- page policy -------------------------------------------------------
-    # "closed" = the paper's policy (every request ACT->RW->PRE).
-    # "open"   = the paper's stated future work ("per-bank read caching"):
-    # rows stay open, row hits skip ACT+PRE, conflicts precharge first.
-    page_policy: str = "closed"
-
-    # ---- scheduling policy ---------------------------------------------------
-    # "fcfs"   = in-order per-bank queues (the paper's scheduler).
-    # "frfcfs" = first-ready FCFS (the DRAMSim3 feature the paper compares
-    # against): the oldest row-hit is promoted to the head of each bank
-    # queue, with a same-address dependency guard. Meaningful with
-    # page_policy="open".
-    sched_policy: str = "fcfs"
 
     # ---- data correctness -------------------------------------------------
     mem_words: int = 1 << 16      # word-addressable backing store size
@@ -90,6 +90,11 @@ class MemSimConfig:
     # repro.kernels.bank_fsm (interpret mode on CPU — slow inside long scans,
     # meant for TPU deployment; equivalence is enforced by the kernel tests).
     fsm_backend: str = "jnp"
+
+    def __post_init__(self):
+        if self.fsm_backend not in FSM_BACKENDS:
+            raise ValueError(
+                f"fsm_backend={self.fsm_backend!r} not in {FSM_BACKENDS}")
 
     # ---- derived ----------------------------------------------------------
     @property
@@ -131,12 +136,168 @@ class MemSimConfig:
         """Bits consumed by {channel, rank, bankgroup, bank}."""
         return self.bank_bits + self.bankgroup_bits + self.rank_bits + self.channel_bits
 
-    def validate(self) -> "MemSimConfig":
+    def topology(self) -> "Topology":
+        """The pure static slice (identity for a plain Topology; strips the
+        runtime fields off a :class:`MemSimConfig` facade so jit caching
+        keys on shapes only)."""
+        return Topology(**{f.name: getattr(self, f.name)
+                           for f in dataclasses.fields(Topology)})
+
+    def validate(self) -> "Topology":
         for f in ("channels", "ranks", "bankgroups", "banks_per_group"):
             v = getattr(self, f)
             assert v > 0 and (v & (v - 1)) == 0, f"{f}={v} must be a power of two"
         assert self.queue_size >= 1
-        assert self.tREFI > self.tRFC, "refresh interval must exceed refresh time"
+        return self
+
+
+class RuntimeParams(NamedTuple):
+    """Traced runtime parameters: paper Table-1 timings + policy flags.
+
+    A pytree of int32 scalars (or Python ints — coerced on trace). Because
+    these are *data*, not static jit arguments, a whole parameter grid
+    (timings x page policy x scheduler x refresh interval) shares one
+    compiled XLA program; batch lanes simply carry different values. Policy
+    strings are lowered to the ``PAGE_*`` / ``SCHED_*`` int flags.
+    """
+
+    tRP: int = 14                 # precharge period
+    tFAW: int = 30                # four-activation window
+    tRRDL: int = 6                # min cycles between two ACTs (same rank)
+    tRCDRD: int = 14              # ACTIVATE -> READ delay
+    tRCDWR: int = 14              # ACTIVATE -> WRITE delay
+    tCCDL: int = 2                # gap between consecutive column commands
+    tWTR: int = 8                 # WRITE -> READ turnaround
+    tRFC: int = 260               # refresh cycle time / "deadline to start"
+    tREFI: int = 3600             # refresh interval
+    tCL: int = 14                 # column command data-return latency
+    tXS: int = 10                 # self-refresh exit latency
+    tRTW: int = 2                 # read -> write turnaround
+    sref_idle_cycles: int = 1000  # idle cycles before SREF entry
+    page_policy: int = PAGE_CLOSED
+    sched_policy: int = SCHED_FCFS
+
+    @classmethod
+    def from_config(cls, cfg: "MemSimConfig") -> "RuntimeParams":
+        # field-name driven (policies lowered to flags) so a parameter
+        # added to both RuntimeParams and MemSimConfig is picked up
+        # automatically instead of silently falling back to the default
+        kw = {f: getattr(cfg, f) for f in cls._fields
+              if f not in ("page_policy", "sched_policy")}
+        return cls(page_policy=PAGE_POLICIES[cfg.page_policy],
+                   sched_policy=SCHED_POLICIES[cfg.sched_policy], **kw)
+
+    def pack(self):
+        """Flatten to an int32 ``[NUM_RUNTIME_PARAMS, 1]`` column vector —
+        the kernel-ABI form the Pallas bank-FSM backend consumes."""
+        import jax.numpy as jnp
+
+        return jnp.stack(
+            [jnp.asarray(v, jnp.int32).reshape(()) for v in self]
+        ).reshape(len(self._fields), 1)
+
+    @classmethod
+    def unpack(cls, vec) -> "RuntimeParams":
+        """Inverse of :meth:`pack` (``vec`` int32 [NP, 1] or [NP])."""
+        flat = vec.reshape(len(cls._fields))
+        return cls(*[flat[i] for i in range(len(cls._fields))])
+
+    @classmethod
+    def stack(cls, rps) -> "RuntimeParams":
+        """Stack a sequence of RuntimeParams on a leading batch axis (the
+        vmap-lane form used by the batched engine)."""
+        import jax.numpy as jnp
+
+        return cls(*[
+            jnp.asarray([jnp.asarray(getattr(rp, f), jnp.int32) for rp in rps])
+            for f in cls._fields])
+
+    def apply_to(self, cfg: "MemSimConfig") -> "MemSimConfig":
+        """Inverse of :meth:`from_config`: ``cfg`` with this parameter
+        point substituted (flags raised back to the policy strings), so
+        results simulated under a ``params=`` override carry an accurate
+        config label. Returns ``cfg`` unchanged if any leaf is traced."""
+        import dataclasses as _dc
+
+        try:
+            vals = {f: int(getattr(self, f)) for f in self._fields}
+        except Exception:  # traced leaves cannot be concretized host-side
+            return cfg
+        vals["page_policy"] = {v: k for k, v in
+                               PAGE_POLICIES.items()}[vals["page_policy"]]
+        vals["sched_policy"] = {v: k for k, v in
+                                SCHED_POLICIES.items()}[vals["sched_policy"]]
+        return _dc.replace(cfg, **vals)
+
+
+NUM_RUNTIME_PARAMS = len(RuntimeParams._fields)
+#: field -> row index of the packed kernel-ABI vector
+RP_INDEX = {name: i for i, name in enumerate(RuntimeParams._fields)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MemSimConfig(Topology):
+    """Back-compat facade: Topology + runtime parameters in one object.
+
+    Frozen + hashable so legacy call sites can still pass it as a static
+    ``jax.jit`` argument; the engines split it at the API edge via
+    :meth:`topology` / :meth:`runtime` so the compiled programs key on the
+    static slice only.
+    """
+
+    # ---- timing parameters (paper Table 1 values) ------------------------
+    tRP: int = 14                 # precharge period
+    tFAW: int = 30                # four-activation window
+    tRRDL: int = 6                # min cycles between two ACTs (same rank)
+    tRCDRD: int = 14              # ACTIVATE -> READ delay
+    tRCDWR: int = 14              # ACTIVATE -> WRITE delay
+    tCCDL: int = 2                # gap between consecutive column commands
+    tWTR: int = 8                 # WRITE -> READ turnaround
+    tRFC: int = 260               # refresh cycle time / "deadline to start"
+    tREFI: int = 3600             # refresh interval
+    # ---- additions documented in the module docstring -------------------
+    tCL: int = 14                 # column command data-return latency
+    tXS: int = 10                 # self-refresh exit latency
+    tRTW: int = 2                 # read -> write turnaround
+
+    # ---- self refresh (paper §5.2.3) -------------------------------------
+    sref_idle_cycles: int = 1000  # idle cycles before SREF entry
+
+    # ---- page policy -------------------------------------------------------
+    # "closed" = the paper's policy (every request ACT->RW->PRE).
+    # "open"   = the paper's stated future work ("per-bank read caching"):
+    # rows stay open, row hits skip ACT+PRE, conflicts precharge first.
+    page_policy: str = "closed"
+
+    # ---- scheduling policy ---------------------------------------------------
+    # "fcfs"   = in-order per-bank queues (the paper's scheduler).
+    # "frfcfs" = first-ready FCFS (the DRAMSim3 feature the paper compares
+    # against): the oldest row-hit is promoted to the head of each bank
+    # queue, with a same-address dependency guard. Meaningful with
+    # page_policy="open".
+    sched_policy: str = "fcfs"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.page_policy not in PAGE_POLICIES:
+            raise ValueError(
+                f"page_policy={self.page_policy!r} not in "
+                f"{sorted(PAGE_POLICIES)}")
+        if self.sched_policy not in SCHED_POLICIES:
+            raise ValueError(
+                f"sched_policy={self.sched_policy!r} not in "
+                f"{sorted(SCHED_POLICIES)}")
+
+    def runtime(self) -> RuntimeParams:
+        """The traced slice (policies lowered to int flags)."""
+        return RuntimeParams.from_config(self)
+
+    def validate(self) -> "MemSimConfig":
+        Topology.validate(self)
+        if self.tREFI <= self.tRFC:
+            raise ValueError(
+                f"tREFI={self.tREFI} (refresh interval) must exceed "
+                f"tRFC={self.tRFC} (refresh cycle time)")
         return self
 
 
@@ -171,3 +332,11 @@ CMD_SREF_EXIT = 7
 NUM_CMDS = 8
 
 DEFAULT_CONFIG = MemSimConfig()
+
+# The Table-1 defaults are declared on both RuntimeParams (bare pytree
+# construction) and the MemSimConfig facade; fail at import time if they
+# ever drift apart instead of silently simulating with stale values.
+if RuntimeParams() != RuntimeParams.from_config(DEFAULT_CONFIG):
+    raise RuntimeError(
+        "RuntimeParams field defaults drifted from MemSimConfig defaults: "
+        f"{RuntimeParams()} != {RuntimeParams.from_config(DEFAULT_CONFIG)}")

@@ -31,7 +31,14 @@ from jax import Array
 from repro.core import power as power_lib
 from repro.core.bank_fsm import BankState, compute_bids, fsm_update
 from repro.core.dram_model import TimingState, check_issue, decode_address, record_issue
-from repro.core.params import CMD_NOP, MemSimConfig, S_RESP_PEND
+from repro.core.params import (
+    CMD_NOP,
+    SCHED_FRFCFS,
+    MemSimConfig,
+    RuntimeParams,
+    S_RESP_PEND,
+    Topology,
+)
 from repro.core.queues import BankedFifo, Fifo, rr_arbiter, rr_arbiter_grouped
 
 
@@ -125,41 +132,44 @@ class SimResult:
         return np.where(self.completed, self.t_complete - self.t_intended, -1)
 
 
-def init_state(cfg: MemSimConfig, num_requests: int,
+def init_state(topo: Topology, rp: RuntimeParams, num_requests: int,
                queue_limit=None, resp_queue_limit=None) -> SimState:
     """Initial register file.
 
-    ``queue_limit`` / ``resp_queue_limit`` are optional *runtime* occupancy
-    caps (traced scalars) on the statically-sized queues: the paper's
-    ``queueSize`` becomes a data value instead of a compiled shape, so a
-    queue-depth sweep reuses one XLA program (see ``repro.core.engine``).
-    Defaults reproduce the static behaviour (limit == capacity).
+    Shapes come from the static ``topo``; the only runtime value consumed
+    here is ``rp.tREFI`` (initial refresh deadlines). ``queue_limit`` /
+    ``resp_queue_limit`` are optional *runtime* occupancy caps (traced
+    scalars) on the statically-sized queues: the paper's ``queueSize``
+    becomes a data value instead of a compiled shape, so a queue-depth
+    sweep reuses one XLA program (see ``repro.core.engine``). Defaults
+    reproduce the static behaviour (limit == capacity).
     """
     neg = jnp.full((num_requests,), -1, jnp.int32)
     return SimState(
         next_arrival=jnp.int32(0),
-        req_q=Fifo.make(cfg.queue_size, limit=queue_limit),
-        bank_q=BankedFifo.make(cfg.num_banks, cfg.queue_size, limit=queue_limit),
-        bank=BankState.make(cfg),
-        timing=TimingState.make(cfg),
-        cmd_rr=jnp.zeros((cfg.channels,), jnp.int32),
+        req_q=Fifo.make(topo.queue_size, limit=queue_limit),
+        bank_q=BankedFifo.make(topo.num_banks, topo.queue_size, limit=queue_limit),
+        bank=BankState.make(topo, rp),
+        timing=TimingState.make(topo),
+        cmd_rr=jnp.zeros((topo.channels,), jnp.int32),
         resp_rr=jnp.int32(0),
-        resp_q=Fifo.make(cfg.resp_queue_size, limit=resp_queue_limit),
-        mem=jnp.zeros((cfg.mem_words,), jnp.int32),
+        resp_q=Fifo.make(topo.resp_queue_size, limit=resp_queue_limit),
+        mem=jnp.zeros((topo.mem_words,), jnp.int32),
         t_admit=neg,
         t_dispatch=neg,
         t_start=neg,
         t_complete=neg,
         rdata=jnp.zeros((num_requests,), jnp.int32),
-        counters=power_lib.make_counters(cfg.num_banks),
+        counters=power_lib.make_counters(topo.num_banks),
         blocked_arrival=jnp.int32(0),
         blocked_dispatch=jnp.int32(0),
     )
 
 
-def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -> SimState:
+def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
+               state: SimState, cycle: Array) -> SimState:
     n = trace.num_requests
-    b = cfg.num_banks
+    b = topo.num_banks
 
     # ---- phase 1: front-end arrival into reqQueue (1 request / cycle) -----
     idx = jnp.minimum(state.next_arrival, n - 1)
@@ -177,7 +187,7 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
 
     # ---- phase 2: dispatch reqQueue head -> bank scheduler queue -----------
     head = req_q.peek()
-    tgt_bank, _, _ = decode_address(cfg, head[0])
+    tgt_bank, _, _ = decode_address(topo, head[0])
     have_req = ~req_q.empty()
     tgt_full = state.bank_q.full()[tgt_bank]
     do_dispatch = have_req & ~tgt_full
@@ -189,19 +199,19 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
     blocked_dispatch = state.blocked_dispatch + (have_req & tgt_full).astype(jnp.int32)
 
     # ---- phase 3: command bids, timing legality, per-channel RR grant ------
-    bids, cmds = compute_bids(cfg, state.bank.st, state.bank.cur_write)
-    rank_of_bank = (jnp.arange(b, dtype=jnp.int32) // cfg.banks_per_rank)
-    legal = check_issue(cfg, state.timing, cycle, cmds, rank_of_bank)
+    bids, cmds = compute_bids(state.bank.st, state.bank.cur_write)
+    rank_of_bank = (jnp.arange(b, dtype=jnp.int32) // topo.banks_per_rank)
+    legal = check_issue(rp, state.timing, cycle, cmds, rank_of_bank)
     eligible = bids & legal
-    grant_mask, winners, cmd_rr = rr_arbiter_grouped(eligible, state.cmd_rr, cfg.channels)
+    grant_mask, winners, cmd_rr = rr_arbiter_grouped(eligible, state.cmd_rr, topo.channels)
 
     timing = state.timing
     issued_cmds = []
-    for ch in range(cfg.channels):  # static unroll; channels is small
-        flat_w = ch * cfg.banks_per_channel + winners[ch]
-        granted = eligible.reshape(cfg.channels, -1)[ch].any()
+    for ch in range(topo.channels):  # static unroll; channels is small
+        flat_w = ch * topo.banks_per_channel + winners[ch]
+        granted = eligible.reshape(topo.channels, -1)[ch].any()
         cmd_w = jnp.where(granted, cmds[flat_w], CMD_NOP)
-        timing = record_issue(cfg, timing, cycle, cmd_w, rank_of_bank[flat_w], granted)
+        timing = record_issue(timing, cycle, cmd_w, rank_of_bank[flat_w], granted)
         issued_cmds.append(cmd_w)
     issued_cmds = jnp.stack(issued_cmds)
 
@@ -220,17 +230,25 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
     resp_q = state.resp_q.push(resp_item, any_resp)
 
     # ---- phase 5: synchronous FSM update + bank queue pops -----------------
-    if cfg.sched_policy == "frfcfs":
-        # FR-FCFS: promote the oldest row-hit to each bank queue's head
-        from repro.core.bank_fsm import row_of
+    # FR-FCFS (a traced policy flag): promote the oldest row-hit to each
+    # bank queue's head. lax.cond keeps the promotion network off the
+    # runtime path for FCFS lanes on the single-lane engines (under vmap it
+    # lowers to a select, which is the price of a shared program).
+    from repro.core.bank_fsm import row_of
 
+    def _promoted_buf():
         q = bank_q.capacity
         offs = (bank_q.head[:, None] + jnp.arange(q)[None, :]) % q
         addrs = jnp.take_along_axis(bank_q.buf[..., 0], offs, axis=1)
-        bank_q = bank_q.promote_rowhit(state.bank.open_row, row_of(cfg, addrs))
+        return bank_q.promote_rowhit(state.bank.open_row,
+                                     row_of(topo, addrs)).buf
+
+    bank_q = bank_q._replace(buf=jax.lax.cond(
+        jnp.asarray(rp.sched_policy) == SCHED_FRFCFS,
+        _promoted_buf, lambda: bank_q.buf))
     queue_nonempty = ~bank_q.empty()
     pop_items = bank_q.peek()
-    if cfg.fsm_backend == "pallas":
+    if topo.fsm_backend == "pallas":
         from repro.kernels.bank_fsm.ops import bank_fsm_step
         from repro.kernels.bank_fsm.ref import pack_state, unpack_state
         from repro.core.bank_fsm import FsmOutputs
@@ -241,7 +259,7 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
              queue_nonempty.astype(jnp.int32)]
         )
         new_packed, flags = bank_fsm_step(
-            cfg, packed, ins, pop_items.T, cycle, True, True
+            topo, packed, ins, pop_items.T, cycle, True, True, params=rp
         )
         new_bank = unpack_state(new_packed)
         outs = FsmOutputs(
@@ -250,7 +268,8 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
         )
     else:
         new_bank, outs = fsm_update(
-            cfg, state.bank, grant_mask, resp_accept, queue_nonempty, pop_items, cycle
+            topo, rp, state.bank, grant_mask, resp_accept, queue_nonempty,
+            pop_items, cycle
         )
     bank_q, popped = bank_q.pop_mask(outs.want_pop)
     t_start = state.t_start.at[
@@ -258,9 +277,9 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
     ].set(cycle.astype(jnp.int32), mode="drop")
 
     # ---- phase 6: bit-true memory access on column completion --------------
-    maddr = state.bank.cur_addr & (cfg.mem_words - 1)
+    maddr = state.bank.cur_addr & (topo.mem_words - 1)
     is_wr = state.bank.cur_write == 1
-    widx = jnp.where(outs.rw_done & is_wr, maddr, cfg.mem_words)
+    widx = jnp.where(outs.rw_done & is_wr, maddr, topo.mem_words)
     mem = state.mem.at[widx].set(state.bank.cur_data, mode="drop")
     rvals = state.mem[maddr]  # pre-write image; banks never alias a word in-cycle
     ridx = jnp.where(outs.rw_done & ~is_wr, state.bank.cur_id, n)
@@ -301,11 +320,15 @@ def cycle_step(cfg: MemSimConfig, trace: Trace, state: SimState, cycle: Array) -
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def _simulate_jit(cfg: MemSimConfig, trace: Trace, num_cycles: int) -> SimState:
-    state = init_state(cfg, trace.num_requests)
+def _simulate_jit(topo: Topology, trace: Trace, num_cycles: int,
+                  rp: RuntimeParams) -> SimState:
+    """Reference per-cycle scan. Static on the Topology only: every timing
+    value and policy flag is traced, so all runtime-parameter points of one
+    topology share this compiled program."""
+    state = init_state(topo, rp, trace.num_requests)
 
     def step(carry, cycle):
-        return cycle_step(cfg, trace, carry, cycle), None
+        return cycle_step(topo, rp, trace, carry, cycle), None
 
     final, _ = jax.lax.scan(step, state, jnp.arange(num_cycles, dtype=jnp.int32))
     return final
@@ -331,14 +354,22 @@ def state_to_result(cfg: MemSimConfig, trace: Trace, final: SimState,
     )
 
 
-def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000) -> SimResult:
+def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
+             *, params: RuntimeParams = None) -> SimResult:
     """Run MemorySim for ``num_cycles`` over ``trace``; returns host stats.
 
-    This is the reference per-cycle engine: one ``lax.scan`` step per clock,
-    ``queue_size`` baked into the compiled program. The high-throughput
-    engine in :mod:`repro.core.engine` (compile-once sweeps, batching,
+    This is the reference per-cycle engine: one ``lax.scan`` step per
+    clock. The compiled program is keyed on ``cfg.topology()`` only; the
+    timing parameters and policy flags (``params``, default lifted from
+    ``cfg``) are traced data. The high-throughput engine in
+    :mod:`repro.core.engine` (compile-once sweeps, batching,
     cycle-skipping) is bit-exact against this function.
     """
+    if params is None:
+        rp = cfg.runtime()
+    else:
+        rp = params
+        cfg = params.apply_to(cfg)  # label the result with the real point
     cfg.validate()
-    final = _simulate_jit(cfg, trace, num_cycles)
+    final = _simulate_jit(cfg.topology(), trace, num_cycles, rp)
     return state_to_result(cfg, trace, final, num_cycles)

@@ -5,15 +5,18 @@ every bank scheduler + DRAM timing state is pure data-parallel int32 logic,
 so it runs on the TPU VPU with banks laid out along lanes. One grid step
 processes ``block_b`` banks; the whole update is branchless ``where`` logic
 — exactly the combinational network the Chisel module would synthesize to.
-Supports both page policies (closed = paper; open = future-work extension)
-as compile-time variants.
+Timing parameters and the page-policy flag arrive as a packed
+``RuntimeParams`` vector (traced data, not compile-time constants), so one
+compiled kernel serves every Table-1 parameter point and both page
+policies; lanes of a sweep grid differ only in the vector they pass.
 
 ABI (see ref.py): state int32[10, B], inputs int32[3, B], pop int32[4, B],
-cycle int32[1, 1] -> new_state int32[10, B], flags int32[3, B].
+rp int32[NP, 1], cycle int32[1, 1]
+-> new_state int32[10, B], flags int32[3, B].
 
 VMEM footprint per grid step: (10 + 3 + 4 + 10 + 3) rows x block_b x 4B
-= 30 * block_b * 4B  ->  15 KiB at block_b = 128, far under the ~16 MiB
-VMEM budget; block_b can scale to 2048+ lanes for large topologies.
++ NP x 4B  ->  ~15 KiB at block_b = 128, far under the ~16 MiB VMEM
+budget; block_b can scale to 2048+ lanes for large topologies.
 """
 
 from __future__ import annotations
@@ -26,7 +29,9 @@ from jax.experimental import pallas as pl
 
 from repro.core.bank_fsm import P_NONE, P_REF, P_RW, P_SREF
 from repro.core.params import (
-    MemSimConfig,
+    NUM_RUNTIME_PARAMS,
+    PAGE_OPEN,
+    RP_INDEX,
     S_ACT_ISSUE,
     S_ACT_WAIT,
     S_IDLE,
@@ -41,13 +46,18 @@ from repro.core.params import (
     S_SREF_EXIT_ISSUE,
     S_SREF_EXIT_WAIT,
     S_SREF_ISSUE,
+    Topology,
 )
 
 
-def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
+def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, cycle_ref,
             new_state_ref, flags_ref):
-    open_pol = cfg.page_policy == "open"
-    row_shift = cfg.addr_low_bits + cfg.column_bits
+    row_shift = topo.addr_low_bits + topo.column_bits
+
+    def rp(name):
+        return rp_ref[RP_INDEX[name], 0]
+
+    is_open = rp("page_policy") == PAGE_OPEN  # traced scalar flag
 
     # rows as (1, bb) int32 vectors
     st = state_ref[0:1, :]
@@ -66,7 +76,7 @@ def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
     queue_nonempty = inputs_ref[2:3, :] == 1
     cycle = cycle_ref[0, 0]
 
-    refresh_needed = cycle >= (refresh_due - cfg.tRFC)
+    refresh_needed = cycle >= (refresh_due - rp("tRFC"))
 
     # WAIT states: tick, transition on expiry
     in_wait = (
@@ -80,18 +90,16 @@ def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
     nxt = jnp.where(expired & (st == S_ACT_WAIT), S_RW_ISSUE, nxt)
     open_row = jnp.where(expired & (st == S_ACT_WAIT), cur_addr >> row_shift,
                          open_row)
-    if open_pol:
-        nxt = jnp.where(expired & (st == S_RW_WAIT), S_RESP_PEND, nxt)
-        pre_done = expired & (st == S_PRE_WAIT)
-        nxt = jnp.where(pre_done & (pending == P_RW), S_ACT_ISSUE, nxt)
-        nxt = jnp.where(pre_done & (pending == P_REF), S_REF_ISSUE, nxt)
-        nxt = jnp.where(pre_done & (pending == P_SREF), S_SREF_ISSUE, nxt)
-        open_row = jnp.where(pre_done, -1, open_row)
-        pending = jnp.where(pre_done, P_NONE, pending)
-    else:
-        nxt = jnp.where(expired & (st == S_RW_WAIT), S_PRE_ISSUE, nxt)
-        nxt = jnp.where(expired & (st == S_PRE_WAIT), S_RESP_PEND, nxt)
-        open_row = jnp.where(expired & (st == S_PRE_WAIT), -1, open_row)
+    # RW_WAIT expiry: open page responds directly, closed page precharges
+    nxt = jnp.where(expired & (st == S_RW_WAIT),
+                    jnp.where(is_open, S_RESP_PEND, S_PRE_ISSUE), nxt)
+    pre_done = expired & (st == S_PRE_WAIT)
+    nxt = jnp.where(pre_done & ~is_open, S_RESP_PEND, nxt)
+    nxt = jnp.where(pre_done & is_open & (pending == P_RW), S_ACT_ISSUE, nxt)
+    nxt = jnp.where(pre_done & is_open & (pending == P_REF), S_REF_ISSUE, nxt)
+    nxt = jnp.where(pre_done & is_open & (pending == P_SREF), S_SREF_ISSUE, nxt)
+    open_row = jnp.where(pre_done, -1, open_row)
+    pending = jnp.where(pre_done, P_NONE, pending)
     nxt = jnp.where(expired & (st == S_REF_WAIT), S_IDLE, nxt)
     nxt = jnp.where(expired & (st == S_SREF_EXIT_WAIT), S_IDLE, nxt)
     rw_done = expired & (st == S_RW_WAIT)
@@ -99,18 +107,18 @@ def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
 
     # ISSUE states: on (timing-checked, arbitrated) grant, enter WAIT
     is_wr = cur_write == 1
-    act_dur = jnp.where(is_wr, cfg.tRCDWR, cfg.tRCDRD)
+    act_dur = jnp.where(is_wr, rp("tRCDWR"), rp("tRCDRD"))
     nxt = jnp.where(grant & (st == S_ACT_ISSUE), S_ACT_WAIT, nxt)
     timer2 = jnp.where(grant & (st == S_ACT_ISSUE), act_dur, timer2)
     nxt = jnp.where(grant & (st == S_RW_ISSUE), S_RW_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_RW_ISSUE), cfg.tCL, timer2)
+    timer2 = jnp.where(grant & (st == S_RW_ISSUE), rp("tCL"), timer2)
     nxt = jnp.where(grant & (st == S_PRE_ISSUE), S_PRE_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_PRE_ISSUE), cfg.tRP, timer2)
+    timer2 = jnp.where(grant & (st == S_PRE_ISSUE), rp("tRP"), timer2)
     nxt = jnp.where(grant & (st == S_REF_ISSUE), S_REF_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_REF_ISSUE), cfg.tRFC, timer2)
+    timer2 = jnp.where(grant & (st == S_REF_ISSUE), rp("tRFC"), timer2)
     nxt = jnp.where(grant & (st == S_SREF_ISSUE), S_SREF, nxt)
     nxt = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), S_SREF_EXIT_WAIT, nxt)
-    timer2 = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), cfg.tXS, timer2)
+    timer2 = jnp.where(grant & (st == S_SREF_EXIT_ISSUE), rp("tXS"), timer2)
 
     # RESP_PEND drained by the response arbiter
     completed = resp_accept & (st == S_RESP_PEND)
@@ -120,44 +128,35 @@ def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
     idle = st == S_IDLE
     row_is_open = open_row >= 0
     go_ref = idle & refresh_needed
-    if open_pol:
-        nxt = jnp.where(go_ref & row_is_open, S_PRE_ISSUE, nxt)
-        pending = jnp.where(go_ref & row_is_open, P_REF, pending)
-        nxt = jnp.where(go_ref & ~row_is_open, S_REF_ISSUE, nxt)
-    else:
-        nxt = jnp.where(go_ref, S_REF_ISSUE, nxt)
+    ref_pre = is_open & row_is_open
+    nxt = jnp.where(go_ref, jnp.where(ref_pre, S_PRE_ISSUE, S_REF_ISSUE), nxt)
+    pending = jnp.where(go_ref & ref_pre, P_REF, pending)
 
     want_pop = idle & ~refresh_needed & queue_nonempty
-    if open_pol:
-        pop_row = pop_ref[0:1, :] >> row_shift
-        hit = want_pop & row_is_open & (open_row == pop_row)
-        conflict = want_pop & row_is_open & (open_row != pop_row)
-        closed_row = want_pop & ~row_is_open
-        nxt = jnp.where(hit, S_RW_ISSUE, nxt)
-        nxt = jnp.where(closed_row, S_ACT_ISSUE, nxt)
-        nxt = jnp.where(conflict, S_PRE_ISSUE, nxt)
-        pending = jnp.where(conflict, P_RW, pending)
-    else:
-        nxt = jnp.where(want_pop, S_ACT_ISSUE, nxt)
+    pop_row = pop_ref[0:1, :] >> row_shift
+    hit = is_open & want_pop & row_is_open & (open_row == pop_row)
+    conflict = is_open & want_pop & row_is_open & (open_row != pop_row)
+    nxt = jnp.where(want_pop, S_ACT_ISSUE, nxt)
+    nxt = jnp.where(hit, S_RW_ISSUE, nxt)
+    nxt = jnp.where(conflict, S_PRE_ISSUE, nxt)
+    pending = jnp.where(conflict, P_RW, pending)
 
     truly_idle = idle & ~refresh_needed & ~queue_nonempty
     idle_ctr2 = jnp.where(truly_idle, idle_ctr + 1, jnp.zeros_like(idle_ctr))
-    go_sref = truly_idle & (idle_ctr2 >= cfg.sref_idle_cycles)
-    if open_pol:
-        nxt = jnp.where(go_sref & row_is_open, S_PRE_ISSUE, nxt)
-        pending = jnp.where(go_sref & row_is_open, P_SREF, pending)
-        nxt = jnp.where(go_sref & ~row_is_open, S_SREF_ISSUE, nxt)
-    else:
-        nxt = jnp.where(go_sref, S_SREF_ISSUE, nxt)
+    go_sref = truly_idle & (idle_ctr2 >= rp("sref_idle_cycles"))
+    sref_pre = is_open & row_is_open
+    nxt = jnp.where(go_sref,
+                    jnp.where(sref_pre, S_PRE_ISSUE, S_SREF_ISSUE), nxt)
+    pending = jnp.where(go_sref & sref_pre, P_SREF, pending)
 
     # SREF wake
     wake = (st == S_SREF) & queue_nonempty
     nxt = jnp.where(wake, S_SREF_EXIT_ISSUE, nxt)
 
     # refresh bookkeeping
-    refresh_due2 = jnp.where(ref_done, refresh_due + cfg.tREFI, refresh_due)
+    refresh_due2 = jnp.where(ref_done, refresh_due + rp("tREFI"), refresh_due)
     exiting = expired & (st == S_SREF_EXIT_WAIT)
-    refresh_due2 = jnp.where(exiting, cycle + cfg.tREFI, refresh_due2)
+    refresh_due2 = jnp.where(exiting, cycle + rp("tREFI"), refresh_due2)
 
     # latch popped request
     cur_addr2 = jnp.where(want_pop, pop_ref[0:1, :], cur_addr)
@@ -180,13 +179,13 @@ def _kernel(cfg: MemSimConfig, state_ref, inputs_ref, pop_ref, cycle_ref,
     flags_ref[2:3, :] = completed.astype(jnp.int32)
 
 
-def bank_fsm_step_pallas(cfg: MemSimConfig, state, inputs, pop, cycle,
+def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_vec, cycle,
                          block_b: int = 128, interpret: bool = True):
     """Invoke the FSM kernel; B must be a multiple of ``block_b`` (ops.py pads)."""
     b = state.shape[1]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
     grid = (b // block_b,)
-    kernel = functools.partial(_kernel, cfg)
+    kernel = functools.partial(_kernel, topo)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -194,6 +193,7 @@ def bank_fsm_step_pallas(cfg: MemSimConfig, state, inputs, pop, cycle,
             pl.BlockSpec((10, block_b), lambda i: (0, i)),
             pl.BlockSpec((3, block_b), lambda i: (0, i)),
             pl.BlockSpec((4, block_b), lambda i: (0, i)),
+            pl.BlockSpec((NUM_RUNTIME_PARAMS, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=[
@@ -205,4 +205,4 @@ def bank_fsm_step_pallas(cfg: MemSimConfig, state, inputs, pop, cycle,
             jax.ShapeDtypeStruct((3, b), jnp.int32),
         ],
         interpret=interpret,
-    )(state, inputs, pop, cycle)
+    )(state, inputs, pop, rp_vec, cycle)

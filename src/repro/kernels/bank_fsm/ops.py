@@ -3,13 +3,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core.params import MemSimConfig, S_IDLE
+from repro.core.params import MemSimConfig, RuntimeParams, S_IDLE, Topology
 from repro.kernels.bank_fsm.bank_fsm import bank_fsm_step_pallas
 from repro.kernels.bank_fsm.ref import bank_fsm_step_ref
 
@@ -37,28 +37,40 @@ def _pad_banks(state: Array, inputs: Array, pop: Array, padded_b: int):
 
 @functools.partial(jax.jit, static_argnums=(0, 5, 6))
 def bank_fsm_step(
-    cfg: MemSimConfig,
+    cfg: Topology,   # Topology or the MemSimConfig facade (static)
     state: Array,    # [10, B] int32
     inputs: Array,   # [3, B] int32 0/1
     pop: Array,      # [4, B] int32
     cycle: Array,    # scalar or [1,1] int32
     use_pallas: bool = False,
     interpret: bool = True,
+    params: Optional[RuntimeParams] = None,
 ) -> Tuple[Array, Array]:
     """One FSM clock edge. Returns (new_state [10,B], flags [3,B]).
 
     ``use_pallas=False`` runs the pure-jnp oracle (the simulator's default on
     CPU); ``use_pallas=True`` runs the Pallas kernel (``interpret=True`` for
     CPU validation, ``False`` on real TPUs).
+
+    ``params`` carries the traced timing/policy values; when omitted they
+    are lifted from ``cfg`` (which must then be the full
+    :class:`MemSimConfig` facade). Passing them explicitly keeps them
+    runtime data, so one compiled kernel serves a whole parameter sweep.
     """
+    if params is None:
+        if not isinstance(cfg, MemSimConfig):
+            raise ValueError("params required when cfg is a bare Topology")
+        params = cfg.runtime()
+    topo = cfg.topology()
     cycle2d = jnp.asarray(cycle, jnp.int32).reshape(1, 1)
+    rp_vec = params.pack()
     if not use_pallas:
-        return bank_fsm_step_ref(cfg, state, inputs, pop, cycle2d)
+        return bank_fsm_step_ref(topo, state, inputs, pop, rp_vec, cycle2d)
     b = state.shape[1]
     block_b = 128
     padded_b = ((b + block_b - 1) // block_b) * block_b
     ps, pi, pp = _pad_banks(state, inputs, pop, padded_b)
     new_state, flags = bank_fsm_step_pallas(
-        cfg, ps, pi, pp, cycle2d, block_b=block_b, interpret=interpret
+        topo, ps, pi, pp, rp_vec, cycle2d, block_b=block_b, interpret=interpret
     )
     return new_state[:, :b], flags[:, :b]

@@ -7,6 +7,9 @@ Packed layout (kernel ABI):
                                    open_row, pending)
   inputs : int32[NI=3, B]  rows = (grant, resp_accept, queue_nonempty) as 0/1
   pop    : int32[4,  B]    head items (addr, is_write, data, id)
+  rp     : int32[NP, 1]    packed RuntimeParams (timings + policy flags,
+                           see ``RuntimeParams.pack`` — traced data, so one
+                           compiled kernel serves every parameter point)
   cycle  : int32[1, 1]
 
   -> new_state int32[10, B], flags int32[3, B] rows = (want_pop, rw_done,
@@ -25,7 +28,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.bank_fsm import BankState, fsm_update
-from repro.core.params import MemSimConfig
+from repro.core.params import RuntimeParams, Topology
 
 NS = 10  # state rows
 NI = 3  # input rows
@@ -49,15 +52,17 @@ def unpack_state(s: Array) -> BankState:
 
 
 def bank_fsm_step_ref(
-    cfg: MemSimConfig,
+    topo: Topology,
     state: Array,   # [10, B] int32
     inputs: Array,  # [3, B] int32 0/1
     pop: Array,     # [4, B] int32
+    rp_vec: Array,  # [NP, 1] int32 packed RuntimeParams
     cycle: Array,   # [1, 1] int32
 ) -> Tuple[Array, Array]:
     bank = unpack_state(state)
     new_bank, outs = fsm_update(
-        cfg,
+        topo,
+        RuntimeParams.unpack(rp_vec),
         bank,
         grant=inputs[0] == 1,
         resp_accept=inputs[1] == 1,

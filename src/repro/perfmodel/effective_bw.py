@@ -11,16 +11,24 @@ the RTL-level simulator and the ideal model over it, and reports
 
 so the roofline memory term can be divided by that efficiency — the
 beyond-paper integration recorded in EXPERIMENTS.md §Perf-beyond.
+
+:func:`grid_study` closes the ROADMAP "LLM workload loop": the decode /
+prefill / train streams of one architecture run against a whole runtime
+parameter grid (timings x page policy x scheduler x refresh x queue depth)
+as batch lanes of ONE compiled program (``repro.core.engine``), yielding
+an effective-bandwidth-efficiency row per (stream, config) cell.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import itertools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import MemSimConfig, simulate, simulate_ideal
+from repro.core import MemSimConfig, simulate, simulate_batch, simulate_ideal
+from repro.core.engine import grid_points
 from repro.traces import llm_workload
 
 
@@ -36,18 +44,10 @@ class EffectiveBW:
     refresh_share: float
 
 
-def measure(name: str, traffic: llm_workload.WorkloadTraffic,
-            cfg: MemSimConfig = MemSimConfig(),
-            target_requests: int = 8000, seed: int = 0) -> EffectiveBW:
-    trace, bpr = llm_workload.synthesize(traffic, target_requests, seed=seed)
-    n = trace.num_requests
-    horizon = int(np.asarray(trace.t).max()) + 200_000
-    res = simulate(cfg, trace, num_cycles=horizon)
-    ideal = simulate_ideal(cfg, trace)
-
+def _row_from_result(name: str, res, ideal_span: int, bpr: float,
+                     horizon: int) -> EffectiveBW:
     done = res.completed
     sim_span = int(res.t_complete[done].max()) if done.any() else horizon
-    ideal_span = int(np.asarray(ideal.t_complete).max())
     lat = res.latency[done & (res.is_write == 0)]
     counts = res.counters["cmd_counts"]
     total_cmds = max(int(counts[1:6].sum()), 1)
@@ -61,6 +61,99 @@ def measure(name: str, traffic: llm_workload.WorkloadTraffic,
         read_latency_mean=float(lat.mean()) if lat.size else float("nan"),
         refresh_share=float(counts[5]) / total_cmds,
     )
+
+
+def measure(name: str, traffic: llm_workload.WorkloadTraffic,
+            cfg: MemSimConfig = MemSimConfig(),
+            target_requests: int = 8000, seed: int = 0) -> EffectiveBW:
+    trace, bpr = llm_workload.synthesize(traffic, target_requests, seed=seed)
+    horizon = int(np.asarray(trace.t).max()) + 200_000
+    res = simulate(cfg, trace, num_cycles=horizon)
+    ideal = simulate_ideal(cfg, trace)
+    ideal_span = int(np.asarray(ideal.t_complete).max())
+    return _row_from_result(name, res, ideal_span, bpr, horizon)
+
+
+def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
+               grid: Mapping[str, Sequence],
+               cfg: MemSimConfig = MemSimConfig(),
+               target_requests: int = 4000, seed: int = 0,
+               tail_cycles: int = 50_000,
+               batch_mode: str = "auto",
+               timings: Optional[dict] = None) -> List[Dict]:
+    """Effective bandwidth of every (stream x config) cell, one compile.
+
+    ``streams`` are named traffic splits (decode / prefill / train — see
+    :mod:`repro.traces.llm_workload`); ``grid`` is a :func:`sweep_grid`
+    axis dict over runtime parameters. All ``len(streams) * len(points)``
+    lanes run through ONE compiled batched program on the cycle-skipping
+    engine (the drained tail collapses, so the shared horizon costs ~zero);
+    the ideal reference reuses one compiled scan across all lanes since its
+    timing values are traced too. Returns one dict per cell:
+    ``{stream, config, efficiency, read_latency_mean, refresh_share, ...}``.
+    """
+    points = grid_points(grid)
+    lane_cfgs = [dataclasses.replace(cfg, **ov)
+                 for _ in streams for ov in points]
+    traces, bprs = [], []
+    for name, traffic in streams:
+        tr, bpr = llm_workload.synthesize(traffic, target_requests, seed=seed)
+        traces.append(tr)
+        bprs.append(bpr)
+    horizon = max(int(np.asarray(tr.t).max()) for tr in traces) + tail_cycles
+
+    cap = max(c.queue_size for c in lane_cfgs)
+    rcap = max(c.resp_queue_size for c in lane_cfgs)
+    cfg_cap = dataclasses.replace(cfg, queue_size=cap, resp_queue_size=rcap)
+    lane_traces = [traces[si] for si in range(len(streams)) for _ in points]
+    results = simulate_batch(
+        cfg_cap, lane_traces, num_cycles=horizon,
+        queue_sizes=[c.queue_size for c in lane_cfgs],
+        resp_queue_sizes=[c.resp_queue_size for c in lane_cfgs],
+        params=[c.runtime() for c in lane_cfgs], lane_cfgs=lane_cfgs,
+        batch_mode=batch_mode, timings=timings)
+
+    # the ideal reference ignores policies and queue depths, so cache its
+    # span per (stream, timing-relevant parameter subset) — a policy/depth
+    # grid costs one ideal scan per stream, not one per cell
+    _IDEAL_FIELDS = ("tRP", "tRCDRD", "tRCDWR", "tCCDL", "tCL", "tRFC",
+                     "tREFI")
+    ideal_spans: Dict[tuple, int] = {}
+
+    def ideal_span_for(si: int, c: MemSimConfig) -> int:
+        key = (si,) + tuple(getattr(c, f) for f in _IDEAL_FIELDS)
+        if key not in ideal_spans:
+            ideal = simulate_ideal(c, traces[si])
+            ideal_spans[key] = int(np.asarray(ideal.t_complete).max())
+        return ideal_spans[key]
+
+    rows = []
+    for (si, (sname, _)), (pi, ov) in itertools.product(
+            enumerate(streams), enumerate(points)):
+        li = si * len(points) + pi
+        res = results[li]
+        bw = _row_from_result(sname, res, ideal_span_for(si, lane_cfgs[li]),
+                              bprs[si], horizon)
+        rows.append({"stream": sname, "config": dict(ov),
+                     **dataclasses.asdict(bw)})
+    return rows
+
+
+def llm_grid_study(arch_name: str, params_bytes_per_dev: float,
+                   kv_bytes_per_dev: float, act_bytes_per_dev: float,
+                   grid: Mapping[str, Sequence], **kw) -> List[Dict]:
+    """The ROADMAP LLM-workload loop: decode + prefill + train streams of
+    one architecture through a runtime-parameter grid sweep."""
+    streams = [
+        ("decode", llm_workload.decode_step_traffic(
+            arch_name, params_bytes_per_dev, kv_bytes_per_dev)),
+        ("prefill", llm_workload.prefill_step_traffic(
+            arch_name, params_bytes_per_dev, act_bytes_per_dev,
+            kv_bytes_per_dev * 0.5)),
+        ("train", llm_workload.train_step_traffic(
+            arch_name, params_bytes_per_dev, act_bytes_per_dev)),
+    ]
+    return grid_study(streams, grid, **kw)
 
 
 def decode_efficiency(arch_name: str, params_bytes_per_dev: float,

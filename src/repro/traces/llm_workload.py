@@ -156,3 +156,18 @@ def train_step_traffic(name: str, params_bytes_per_device: float,
         kv_read=0.0,
         kv_write=0.0,
     )
+
+
+def prefill_step_traffic(name: str, params_bytes_per_device: float,
+                         act_bytes_per_device: float,
+                         kv_bytes_per_device: float = 0.0) -> WorkloadTraffic:
+    """Prompt prefill: weights read once, activations streamed per layer,
+    the KV cache written as it is built (read side negligible)."""
+    return WorkloadTraffic(
+        name=name,
+        weight_read=params_bytes_per_device,
+        act_read=act_bytes_per_device * 0.5,
+        act_write=act_bytes_per_device,
+        kv_read=0.0,
+        kv_write=kv_bytes_per_device,
+    )

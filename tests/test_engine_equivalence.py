@@ -9,6 +9,7 @@ the static capacity. Cycle-skipping must also genuinely skip on sparse
 traces while preserving that contract.
 """
 
+import dataclasses
 import os
 
 import numpy as np
@@ -16,13 +17,15 @@ import pytest
 
 from repro.core import (
     MemSimConfig,
+    RuntimeParams,
     Trace,
     simulate,
     simulate_batch,
     simulate_fast,
+    sweep_grid,
     sweep_queue_sizes,
 )
-from repro.core.engine import stack_traces
+from repro.core.engine import grid_points, stack_traces
 from repro.traces import BENCHMARKS
 
 # MEMSIM_SMOKE=1 (the CI profile) halves the simulated horizon here, same
@@ -163,6 +166,121 @@ def test_sweep_queue_sizes_compile_once_bit_exact():
     sweep_queue_sizes(MemSimConfig(), tr, qs, num_cycles=CYCLES // 2,
                       capacity=64, timings=timings2)
     assert timings2["compile_s"] == 0.0, "horizon change must not recompile"
+
+
+def test_sweep_grid_one_compile_bit_exact():
+    """The tentpole acceptance grid: (2 timing values x 2 page policies x
+    2 schedulers x 2 queue depths) through ONE compiled program, every lane
+    bit-identical to a per-config seed ``simulate`` run."""
+    tr = small_trace("trace_example")
+    grid = {
+        "tCL": [14, 18],
+        "page_policy": ["closed", "open"],
+        "sched_policy": ["fcfs", "frfcfs"],
+        "queue_size": [8, 32],
+    }
+    import jax
+
+    from repro.core import engine as engine_mod
+
+    engine_mod._aot_cache.clear()  # count this grid's compiles from zero
+    timings = {}
+    results = sweep_grid(MemSimConfig(), tr, grid, num_cycles=CYCLES,
+                         timings=timings)
+    points = grid_points(grid)
+    assert len(results) == 16 == len(points)
+    # one program for the whole grid: at most one executable per device
+    # (lanes mode compiles the identical program once per device it uses)
+    assert 1 <= timings["compiles"] <= len(jax.devices())
+    for ov, res in zip(points, results):
+        assert res.cfg == dataclasses.replace(MemSimConfig(), **ov)
+        ref = simulate(res.cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"grid {ov}")
+    # a second grid at different points/horizon reuses the executables
+    timings2 = {}
+    sweep_grid(MemSimConfig(), tr,
+               {"tCL": [15, 19], "page_policy": ["open", "closed"],
+                "sched_policy": ["frfcfs", "fcfs"], "queue_size": [4, 16]},
+               num_cycles=CYCLES // 2, capacity=32, timings=timings2)
+    assert timings2["compiles"] == 0, "grid change must not recompile"
+
+
+def test_sweep_grid_timing_axes_bit_exact():
+    """Non-default Table-1 timings and refresh/SREF intervals as grid axes
+    (the parameters PR 1 could not vary at runtime)."""
+    tr = small_trace("conv2d")
+    grid = {
+        "tRP": [14, 22],
+        "tRFC": [130, 260],
+        "tREFI": [1800, 3600],
+        "sref_idle_cycles": [400, 1000],
+    }
+    results = sweep_grid(MemSimConfig(queue_size=16), tr, grid,
+                         num_cycles=CYCLES)
+    assert len(results) == 16
+    # spot-check the corners plus two interior points
+    for i in (0, 3, 6, 9, 12, 15):
+        ref = simulate(results[i].cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, results[i], f"timing grid lane {i}")
+
+
+@pytest.mark.parametrize("batch_mode", ["lanes", "vmap"])
+def test_random_runtime_params_batch_bit_exact(batch_mode):
+    """Randomized RuntimeParams draws (timings, policies, refresh, queue
+    depth) as heterogeneous batch lanes, each vs its seed run."""
+    rng = np.random.default_rng(0)
+    tr = small_trace("trace_example")
+    lane_cfgs = []
+    for _ in range(4):
+        tRFC = int(rng.integers(30, 300))
+        lane_cfgs.append(MemSimConfig(
+            queue_size=int(rng.integers(4, 32)),
+            tRP=int(rng.integers(5, 30)),
+            tRCDRD=int(rng.integers(5, 30)),
+            tRCDWR=int(rng.integers(5, 30)),
+            tCL=int(rng.integers(5, 30)),
+            tWTR=int(rng.integers(1, 12)),
+            tCCDL=int(rng.integers(1, 8)),
+            tRFC=tRFC,
+            tREFI=int(rng.integers(tRFC * 4, tRFC * 20)),
+            sref_idle_cycles=int(rng.integers(200, 2000)),
+            page_policy=str(rng.choice(["closed", "open"])),
+            sched_policy=str(rng.choice(["fcfs", "frfcfs"])),
+        ))
+    batch = simulate_batch(
+        MemSimConfig(queue_size=64), tr, num_cycles=CYCLES,
+        queue_sizes=[c.queue_size for c in lane_cfgs],
+        params=[c.runtime() for c in lane_cfgs],
+        lane_cfgs=lane_cfgs, batch_mode=batch_mode)
+    for c, res in zip(lane_cfgs, batch):
+        ref = simulate(c, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"{batch_mode} random rp {c.tCL}")
+
+
+def test_simulate_fast_params_override_bit_exact():
+    """Explicit RuntimeParams on the single-lane engine: one compiled
+    program serves arbitrary parameter points of one topology."""
+    tr = small_trace("trace_example")
+    cfg = MemSimConfig(queue_size=32)
+    override = MemSimConfig(queue_size=32, tCL=21, tRP=9,
+                            page_policy="open")
+    timings1, timings2 = {}, {}
+    fast1 = simulate_fast(cfg, tr, num_cycles=CYCLES, timings=timings1)
+    fast2 = simulate_fast(cfg, tr, num_cycles=CYCLES,
+                          params=override.runtime(), timings=timings2)
+    assert timings2["compiles"] == 0, "parameter change must not recompile"
+    assert_bit_identical(simulate(cfg, tr, num_cycles=CYCLES), fast1, "base")
+    assert_bit_identical(simulate(override, tr, num_cycles=CYCLES), fast2,
+                         "override")
+
+
+def test_sweep_grid_rejects_unknown_axis():
+    tr = small_trace("trace_example")
+    with pytest.raises(ValueError):
+        sweep_grid(MemSimConfig(), tr, {"tTYPO": [1, 2]}, num_cycles=100)
+    with pytest.raises(ValueError):
+        sweep_grid(MemSimConfig(), tr, {"page_policy": ["bogus"]},
+                   num_cycles=100)
 
 
 def test_stack_traces_padding_is_inert():

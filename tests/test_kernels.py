@@ -21,6 +21,13 @@ from repro.models.blocked_attention import blocked_attention
     dict(ranks=1, bankgroups=2, banks_per_group=2),   # 4 banks (padding path)
     dict(channels=2, ranks=2, bankgroups=4, banks_per_group=4),  # 64 banks
     dict(page_policy="open"),                   # open-page variant
+    # pairwise-DISTINCT timings: the defaults collide (tRP == tRCD* == tCL,
+    # tCCDL == tRTW), so a swapped row in the kernel's packed RuntimeParams
+    # vector would be invisible at defaults — this point pins every index
+    dict(tRP=5, tRCDRD=7, tRCDWR=11, tCL=13, tXS=17, tRFC=50, tREFI=900,
+         tCCDL=3, tWTR=9, tRTW=4, sref_idle_cycles=333, page_policy="open"),
+    dict(tRP=6, tRCDRD=8, tRCDWR=12, tCL=15, tXS=19, tRFC=60, tREFI=800,
+         sref_idle_cycles=123),                 # distinct timings, closed page
 ])
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_bank_fsm_kernel_matches_ref(topology, seed):

@@ -255,3 +255,53 @@ class TestFrFcfsScheduling:
         assert res.completed.all()
         assert res.rdata[2] == 111
         assert res.rdata[4] == 222
+
+
+class TestConfigValidation:
+    """Bad policy/backend strings fail fast in __post_init__ (not deep
+    inside a trace), and the static/runtime split is coherent."""
+
+    def test_bad_page_policy_raises(self):
+        with pytest.raises(ValueError, match="page_policy"):
+            MemSimConfig(page_policy="opne")
+
+    def test_bad_sched_policy_raises(self):
+        with pytest.raises(ValueError, match="sched_policy"):
+            MemSimConfig(sched_policy="fr-fcfs")
+
+    def test_bad_fsm_backend_raises(self):
+        from repro.core import Topology
+
+        with pytest.raises(ValueError, match="fsm_backend"):
+            MemSimConfig(fsm_backend="cuda")
+        with pytest.raises(ValueError, match="fsm_backend"):
+            Topology(fsm_backend="cuda")
+
+    def test_topology_strips_runtime_fields(self):
+        from repro.core import Topology
+
+        a = MemSimConfig(tCL=20, page_policy="open", queue_size=8)
+        b = MemSimConfig(tCL=14, sched_policy="frfcfs", queue_size=8)
+        assert a.topology() == b.topology()  # same compiled program
+        assert isinstance(a.topology(), Topology)
+        assert a.topology() != MemSimConfig(queue_size=16).topology()
+
+    def test_runtime_lowers_policies_to_flags(self):
+        from repro.core.params import (
+            PAGE_CLOSED, PAGE_OPEN, SCHED_FCFS, SCHED_FRFCFS,
+        )
+
+        rp = MemSimConfig(page_policy="open").runtime()
+        assert rp.page_policy == PAGE_OPEN
+        assert rp.sched_policy == SCHED_FCFS
+        rp2 = MemSimConfig(sched_policy="frfcfs").runtime()
+        assert rp2.page_policy == PAGE_CLOSED
+        assert rp2.sched_policy == SCHED_FRFCFS
+        assert rp2.tCL == 14
+
+    def test_runtime_params_pack_roundtrip(self):
+        from repro.core import RuntimeParams
+
+        rp = MemSimConfig(tCL=19, tRP=7, page_policy="open").runtime()
+        back = RuntimeParams.unpack(rp.pack())
+        assert tuple(int(v) for v in back) == tuple(rp)

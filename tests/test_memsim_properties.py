@@ -95,3 +95,73 @@ def test_monotone_completion_per_bank(tr):
         idx = np.nonzero(bank == b)[0]
         tc = res.t_complete[idx]
         assert (np.diff(tc) > 0).all(), f"bank {b} reordered requests"
+
+
+# ---- runtime-parameter lowering: sweep_grid lanes == seed simulate --------
+
+def runtime_param_draws():
+    """Random RuntimeParams points: Table-1 timings, policies, refresh and
+    self-refresh intervals, queue depth — everything the engine now treats
+    as traced data. tREFI is drawn above the largest possible tRFC so every
+    cross-product of two draws stays a valid config."""
+    @st.composite
+    def _p(draw):
+        return dict(
+            tRP=draw(st.integers(4, 28)),
+            tRRDL=draw(st.integers(2, 10)),
+            tRCDRD=draw(st.integers(4, 28)),
+            tRCDWR=draw(st.integers(4, 28)),
+            tCCDL=draw(st.integers(1, 6)),
+            tWTR=draw(st.integers(1, 12)),
+            tRTW=draw(st.integers(1, 6)),
+            tCL=draw(st.integers(4, 28)),
+            tXS=draw(st.integers(2, 20)),
+            tRFC=draw(st.integers(30, 300)),
+            tREFI=draw(st.integers(1300, 5000)),
+            sref_idle_cycles=draw(st.integers(100, 3000)),
+            page_policy=draw(st.sampled_from(["closed", "open"])),
+            sched_policy=draw(st.sampled_from(["fcfs", "frfcfs"])),
+            queue_size=draw(st.sampled_from([4, 8, 16])),
+        )
+    return _p()
+
+
+#: axes varied *between* the two draws per example (bounds the lane count
+#: at 2^4 = 16); the remaining drawn fields are fixed from the first draw.
+_VARIED = ("tCL", "tREFI", "page_policy", "queue_size")
+
+
+@settings(max_examples=8, deadline=None)
+@given(runtime_param_draws(), runtime_param_draws())
+def test_sweep_grid_lanes_match_seed_simulate(p1, p2):
+    """Field-for-field identity between sweep_grid lanes carrying random
+    RuntimeParams draws and per-config seed ``simulate`` runs. The grid
+    lanes share ONE compiled program across all hypothesis examples (the
+    topology never changes); the reference compiles per distinct queue
+    capacity only (cached across examples)."""
+    import dataclasses
+
+    from repro.core import sweep_grid
+    from repro.traces import trace_example
+
+    tr = trace_example(n=40, gap=8)
+    base = MemSimConfig(queue_size=16, mem_words=1 << 12,
+                        **{k: p1[k] for k in p1 if k not in _VARIED
+                           and k != "queue_size"})
+    grid = {k: sorted({p1[k], p2[k]}, key=str) for k in _VARIED}
+    results = sweep_grid(base, tr, grid, num_cycles=6_000, capacity=16)
+    # bound per-example work: check the two drawn corners + one mixed point
+    picks = {0, len(results) - 1, len(results) // 2}
+    for i in sorted(picks):
+        res = results[i]
+        ref = simulate(res.cfg, tr, num_cycles=6_000)
+        for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+            np.testing.assert_array_equal(
+                getattr(ref, f), getattr(res, f),
+                err_msg=f"{dataclasses.asdict(res.cfg)}: {f}")
+        for k in ref.counters:
+            np.testing.assert_array_equal(
+                np.asarray(ref.counters[k]), np.asarray(res.counters[k]),
+                err_msg=f"counter {k}")
+        assert ref.blocked_arrival == res.blocked_arrival
+        assert ref.blocked_dispatch == res.blocked_dispatch
