@@ -40,8 +40,10 @@ def main() -> None:
     print("|---|---|---|---|---|---|---|")
     for name, d, _ in rows:
         pr = PAPER[name]
-        print(f"| {name} | {d.read_diff_avg:.0f} | {d.read_diff_std:.0f} "
-              f"| {d.write_diff_avg:.0f} | {d.write_diff_std:.0f} "
+        print(f"| {name} | {stats.fmt_diff(d.read_diff_avg, d.n_read)} "
+              f"| {stats.fmt_diff(d.read_diff_std, d.n_read)} "
+              f"| {stats.fmt_diff(d.write_diff_avg, d.n_write)} "
+              f"| {stats.fmt_diff(d.write_diff_std, d.n_write)} "
               f"| {pr[0]}±{pr[1]} | {pr[2]}±{pr[3]} |")
     reads = [d.read_diff_avg for _, d, _ in rows]
     writes = [d.write_diff_avg for _, d, _ in rows]

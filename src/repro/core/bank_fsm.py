@@ -128,6 +128,47 @@ def wait_mask(st: Array) -> Array:
     )
 
 
+#: sentinel bound for banks that only an external event can unblock (plain
+#: int on purpose: a module-level jnp constant materialized during tracing
+#: would leak that trace's context into later traces)
+EVENT_INF = 0x3FFFFFFF
+
+
+def cycles_until_actionable(rp: RuntimeParams, bank: BankState,
+                            cycle: Array) -> Array:
+    """Branchless per-bank bound: cycles from ``cycle`` until this bank's
+    FSM would do anything besides count (WAIT timer decrement / idle
+    counter increment), absent external events.
+
+    * WAIT states transition when the timer expires — during cycle
+      ``cycle + timer - 1`` (the ``timer - 1`` convention: the per-cycle
+      engine decrements first, then fires on ``timer2 == 0``).
+    * IDLE banks act when the refresh window opens (cycle
+      ``refresh_due - tRFC``) or the self-refresh threshold is crossed
+      (``idle_ctr + 1`` reaches ``sref_idle_cycles``), whichever first.
+    * SREF banks wake only on external queue activity: ``EVENT_INF``.
+    * ISSUE / RESP_PEND banks are actionable now (0) from the FSM's view;
+      command-bus legality is the timing model's domain
+      (:func:`repro.core.dram_model.legal_issue_cycle`).
+
+    This is the FSM-local half of the event-horizon bound the skipping
+    engine takes a vectorized min over. The Pallas backend has a packed-ABI
+    twin (``repro.kernels.bank_fsm``) that must agree bank-for-bank — the
+    kernel tests enforce it.
+    """
+    st = bank.st
+    in_wait = wait_mask(st)
+    is_idle = st == S_IDLE
+    is_sref = st == S_SREF
+    refresh_in = bank.refresh_due - rp.tRFC - cycle
+    sref_in = rp.sref_idle_cycles - 1 - bank.idle_ctr
+    bound = jnp.zeros_like(st)
+    bound = jnp.where(in_wait, bank.timer - 1, bound)
+    bound = jnp.where(is_idle, jnp.minimum(refresh_in, sref_in), bound)
+    bound = jnp.where(is_sref, EVENT_INF, bound)
+    return bound.astype(jnp.int32)
+
+
 def compute_bids(st: Array, cur_write: Array) -> Tuple[Array, Array]:
     """Current-state command bids for the shared command bus.
 

@@ -63,17 +63,26 @@ def bank_to_rank(topo: Topology, bank_idx: Array) -> Array:
     return bank_idx // topo.banks_per_rank
 
 
-def check_issue(
+def legal_issue_cycle(
     rp: RuntimeParams,
     timing: TimingState,
-    cycle: Array,
     cmd: Array,          # [B] int32 command each bank wants to issue
     rank_of_bank: Array,  # [B] int32
 ) -> Array:
-    """Per-bank legality of the command it is bidding, under rank constraints.
+    """Earliest cycle at which each bank's bid command satisfies the rank
+    constraints (tRRDL/tFAW for ACT, tCCDL/tWTR/tRTW for column commands).
 
-    Returns bool[B]. Non-column, non-ACT commands (PRE/REF/SREF*) have no
-    rank-level constraint here — their bank-level sequencing is structural.
+    Returns int32[B] absolute cycles. Non-column, non-ACT commands
+    (PRE/REF/SREF*) have no rank-level constraint here — their bank-level
+    sequencing is structural — and report "legal since long ago" (``_NEG``).
+
+    This is the ONE definition of command-bus readiness: the per-cycle
+    stepper's :func:`repro.core.simulator.issue_eligibility` grants on
+    ``cycle >= legal_issue_cycle(...)``, and the event-horizon engine uses
+    the same value as the "cycles until the queue head becomes issuable"
+    bound — the two can never disagree.
+    The windows only move when a command is granted (:func:`record_issue`),
+    so between grants the returned cycle is a constant of the state.
     """
     la = timing.last_act[rank_of_bank]           # [B]
     aw = timing.act_win[rank_of_bank]            # [B, 4]
@@ -81,15 +90,17 @@ def check_issue(
     lw = timing.last_wr[rank_of_bank]
 
     oldest_act = aw.min(axis=-1)
-    act_ok = ((cycle - la) >= rp.tRRDL) & ((cycle - oldest_act) >= rp.tFAW)
-    rd_ok = ((cycle - lr) >= rp.tCCDL) & ((cycle - lw) >= rp.tWTR)
-    wr_ok = ((cycle - lw) >= rp.tCCDL) & ((cycle - lr) >= rp.tRTW)
+    act_at = jnp.maximum(la + rp.tRRDL, oldest_act + rp.tFAW)
+    rd_at = jnp.maximum(lr + rp.tCCDL, lw + rp.tWTR)
+    wr_at = jnp.maximum(lw + rp.tCCDL, lr + rp.tRTW)
 
-    ok = jnp.ones_like(cmd, dtype=bool)
-    ok = jnp.where(cmd == CMD_ACT, act_ok, ok)
-    ok = jnp.where(cmd == CMD_RD, rd_ok, ok)
-    ok = jnp.where(cmd == CMD_WR, wr_ok, ok)
-    return ok
+    at = jnp.full_like(cmd, _NEG)
+    at = jnp.where(cmd == CMD_ACT, act_at, at)
+    at = jnp.where(cmd == CMD_RD, rd_at, at)
+    at = jnp.where(cmd == CMD_WR, wr_at, at)
+    return at.astype(jnp.int32)
+
+
 
 
 def record_issue(

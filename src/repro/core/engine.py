@@ -23,19 +23,27 @@ those bottlenecks while staying **bit-exact** against the reference:
    batch across CPU cores, and a shared clock would hold every lane to the
    busiest lane's pace).
 
-3. **Cycle-skipping** — when every bank sits in a timed WAIT countdown,
-   self-refresh, or truly-idle state, and no arrival, refresh deadline, or
-   queue activity is due, the clock jumps by
-   ``delta = min(timers - 1, next_arrival, refresh_due, sref_entry, horizon)``
-   in a single step: timers are decremented by ``delta``, idle counters and
-   per-state cycle counters advance by ``delta``. Every cycle in which *any*
-   state element would change is still executed normally, so results
-   (``t_complete``, ``rdata``, counters, blocked-cycle totals — the full
-   ``SimState``) are bit-identical to the per-cycle engine; only inert
-   cycles are collapsed. The skip check runs every ``_CHUNK`` cycles (the
-   chunk interior is the plain per-cycle loop, so saturated phases pay no
-   skip overhead), collapsing bursty gaps and the post-drain tail of finite
-   traces.
+3. **Event-horizon cycle-skipping** — after every executed cycle the
+   engine computes the next-event cycle as a vectorized min over *per-bank*
+   bounds and jumps straight to it: WAIT timer expiries (``timer - 1``),
+   blocked command-bus bids becoming legal (the tRRDL/tFAW/tCCDL/tWTR/tRTW
+   windows from ``RuntimeParams``, via the same
+   :func:`repro.core.simulator.issue_eligibility` predicate the stepper
+   grants from), idle banks' refresh windows (``refresh_due - tRFC``) and
+   SREF-entry thresholds, the next trace arrival, and the horizon. A cycle
+   is provably inert — skippable — when every bank is mid-WAIT, parked in
+   SREF, idle with an empty scheduler queue, or bidding a command that is
+   not yet legal, and the global request/response queues are empty; unlike
+   the PR-1 engine this holds *during* active phases, while banks sit in
+   staggered WAIT states or blocked bids, not just when the whole system
+   has drained. ``_apply_skip`` advances timers, idle counters and the
+   power/state cycle counters by exactly the skipped delta (closed form of
+   ``delta`` per-cycle updates), so results (``t_complete``, ``rdata``,
+   counters, blocked-cycle totals — the full ``SimState``) are
+   bit-identical to the per-cycle engine; only inert cycles are collapsed.
+   One ``cycle_step`` executes per event, one skip evaluation per executed
+   cycle — WAIT-heavy phases (LLM decode traffic) collapse to their event
+   count.
 
 4. **Runtime parameter grids** — every Table-1 timing value, the page
    policy and the scheduler are a traced :class:`RuntimeParams` pytree (the
@@ -68,7 +76,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from repro.core.bank_fsm import wait_mask
+from repro.core import power as power_lib
+from repro.core.bank_fsm import cycles_until_actionable, wait_mask
 from repro.core.params import (
     CMD_NOP,
     MemSimConfig,
@@ -83,6 +92,7 @@ from repro.core.simulator import (
     Trace,
     cycle_step,
     init_state,
+    issue_eligibility,
     state_to_result,
 )
 
@@ -91,60 +101,87 @@ _PAD_T = 0x3FFFFFFF  # arrival time for padded trace slots: never due
 
 
 # --------------------------------------------------------------------------
-# cycle-skipping
+# event-horizon cycle-skipping
 # --------------------------------------------------------------------------
 
-def _skip_delta(rp: RuntimeParams, trace: Trace, state: SimState,
-                nxt: Array, horizon: Array) -> Array:
-    """Number of provably-inert cycles starting at cycle ``nxt``.
+def _next_event(topo: Topology, rp: RuntimeParams, trace: Trace,
+                state: SimState, nxt: Array, horizon: Array) -> Array:
+    """Number of provably-inert cycles starting at cycle ``nxt`` — the
+    distance to the event horizon.
 
     A cycle is inert when executing it would change nothing but countdown
-    timers, idle counters and per-cycle statistics: every bank is in a WAIT
-    state, parked in SREF, or idle with an empty scheduler queue; the global
-    request and response queues are empty; and no arrival or refresh window
-    opens. The returned delta never swallows a cycle in which a timer
-    expires, an arrival lands, a refresh window opens, or a self-refresh
-    entry threshold is crossed — those cycles run through ``cycle_step``.
+    timers, idle counters and per-cycle statistics. Per bank that means one
+    of: a timed WAIT state (timer merely decrements), parked in SREF, idle
+    with an empty scheduler queue, or holding an ISSUE-state bid whose
+    command is not yet legal under the rank timing windows
+    (tRRDL/tFAW/tCCDL/tWTR/tRTW) — judged by the same
+    :func:`issue_eligibility` predicate ``cycle_step`` grants from, so
+    "blocked" here and "not granted" there can never disagree. Globally the
+    request and response queues must be empty (a dispatch, admission or ack
+    would change state) and no RESP_PEND bank may exist (the response
+    arbiter would drain it).
+
+    The returned delta is a vectorized min over every upcoming event, so it
+    never swallows a cycle in which a timer expires, a blocked bid becomes
+    legal, an arrival lands, a refresh window opens, or a self-refresh
+    threshold is crossed — those cycles run through ``cycle_step``. All
+    bounds are data (traced ``RuntimeParams``), so one compiled program
+    serves every parameter point. FR-FCFS head promotion needs no bound:
+    it is idempotent on a frozen queue/open-row state, so deferring it to
+    the next executed cycle is observationally identical.
     """
-    st = state.bank.st
-    in_wait = wait_mask(st)
-    is_idle = st == S_IDLE
-    is_sref = st == S_SREF
+    def bound(_):
+        bank = state.bank
+        st = bank.st
+        in_wait = wait_mask(st)
+        is_idle = st == S_IDLE
+        is_sref = st == S_SREF
 
-    # gate: nothing can happen at cycle `nxt` except timer/counter ticks
-    inert_states = (in_wait | is_idle | is_sref).all()
-    bq_empty = state.bank_q.empty()
-    no_local_work = jnp.where(is_idle | is_sref, bq_empty, True).all()
-    gate = (inert_states & no_local_work
-            & state.req_q.empty() & state.resp_q.empty())
+        eligible, cmds, legal_at = issue_eligibility(topo, rp, state.timing,
+                                                     bank, nxt)
+        blocked_bid = (cmds != CMD_NOP) & ~eligible
 
-    # bounds: cycles nxt .. nxt+delta-1 must all stay inert
-    n = trace.num_requests
-    idx = jnp.minimum(state.next_arrival, n - 1)
-    arrival = jnp.where(state.next_arrival < n, trace.t[idx] - nxt, _INF)
-    # a WAIT bank with timer k expires during cycle nxt + k - 1
-    timers = jnp.where(in_wait, state.bank.timer - 1, _INF).min()
-    # an idle bank enters its refresh window at cycle refresh_due - tRFC
-    # (both traced RuntimeParams values, so the bound itself is data)
-    refresh = jnp.where(is_idle, state.bank.refresh_due - rp.tRFC - nxt,
-                        _INF).min()
-    # an idle bank crosses the SREF threshold when idle_ctr+1 reaches it
-    sref_in = jnp.where(is_idle,
-                        rp.sref_idle_cycles - 1 - state.bank.idle_ctr,
-                        _INF).min()
-    bound = jnp.minimum(jnp.minimum(arrival, timers),
-                        jnp.minimum(refresh, sref_in))
-    bound = jnp.minimum(bound, horizon - nxt)
-    return jnp.where(gate, jnp.maximum(bound, 0), 0).astype(jnp.int32)
+        # gate: nothing can happen at cycle `nxt` except timer/counter ticks
+        _, bq_valid = state.bank_q.peek_valid()
+        inert = in_wait | blocked_bid | ((is_idle | is_sref) & ~bq_valid)
+        gate = inert.all()
+
+        # per-bank FSM-local bound: WAIT expiry, refresh window, SREF entry
+        # (the Pallas backend computes it with the packed-ABI kernel twin so
+        # both backends share one definition each, validated against the
+        # other)
+        if topo.fsm_backend == "pallas":
+            from repro.kernels.bank_fsm.ops import bank_event_bound
+            from repro.kernels.bank_fsm.ref import pack_state
+
+            local = bank_event_bound(pack_state(bank), nxt, rp, True, True)
+        else:
+            local = cycles_until_actionable(rp, bank, nxt)
+        # a blocked bid becomes actionable the cycle its command turns legal
+        per_bank = jnp.where(blocked_bid, legal_at - nxt, local).min()
+
+        n = trace.num_requests
+        idx = jnp.minimum(state.next_arrival, n - 1)
+        arrival = jnp.where(state.next_arrival < n, trace.t[idx] - nxt, _INF)
+        b = jnp.minimum(jnp.minimum(per_bank, arrival), horizon - nxt)
+        return jnp.where(gate, jnp.maximum(b, 0), 0).astype(jnp.int32)
+
+    # cheap scalar necessary conditions first: with work in the global
+    # queues no cycle is inert, so saturated phases pay two scalar compares
+    # per executed cycle and the full bound (eligibility gathers, vectorized
+    # mins) only runs when a skip is possible. Under vmap the cond lowers to
+    # a select — the price of the shared batch program, same as the stepper.
+    maybe = state.req_q.empty() & state.resp_q.empty()
+    return jax.lax.cond(maybe, bound, lambda _: jnp.int32(0), None)
 
 
 def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
     """Fast-forward ``delta`` inert cycles, replicating exactly what the
-    per-cycle engine would have accumulated over them."""
+    per-cycle engine would have accumulated over them (identity at
+    ``delta == 0``)."""
     st = state.bank.st
     in_wait = wait_mask(st)
     is_idle = st == S_IDLE
-    is_sref = st == S_SREF
     skipped = delta > 0
 
     timer = jnp.where(in_wait, state.bank.timer - delta, state.bank.timer)
@@ -156,20 +193,8 @@ def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
     ).astype(jnp.int32)
     bank = state.bank._replace(timer=timer.astype(jnp.int32),
                                idle_ctr=idle_ctr)
-
-    b = st.shape[0]
-    n_sref = is_sref.sum().astype(jnp.int32)
-    n_idle = is_idle.sum().astype(jnp.int32)
-    c = state.counters
-    counters = dict(c)
-    # each skipped cycle issues CMD_NOP on every channel (junk slot, but we
-    # keep it bit-identical to the per-cycle engine)
-    counters["cmd_counts"] = c["cmd_counts"].at[CMD_NOP].add(
-        delta * topo.channels)
-    counters["sref_cycles"] = c["sref_cycles"] + delta * n_sref
-    counters["idle_cycles"] = c["idle_cycles"] + delta * n_idle
-    counters["active_cycles"] = c["active_cycles"] + delta * (
-        b - n_sref - n_idle)
+    counters = power_lib.skip_counters(state.counters, st, delta,
+                                       topo.channels)
     return state._replace(bank=bank, counters=counters)
 
 
@@ -177,21 +202,14 @@ def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
 # single-lane runners
 # --------------------------------------------------------------------------
 
-#: cycles executed between skip checks. Inside a chunk the engine is a
-#: plain per-cycle loop (same op stream as the reference scan — no skip
-#: overhead per cycle); at chunk boundaries one exact skip may fire. Small
-#: enough that quiescent tails collapse, large enough that the skip logic
-#: is amortized to noise during saturated phases.
-_CHUNK = 128
-
-
 def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
                    rp: RuntimeParams, queue_limit: Array, resp_limit: Array
                    ) -> Tuple[SimState, Array]:
-    """Chunked while-loop engine with cycle-skipping; ``num_cycles`` and
-    every RuntimeParams value are traced, so one compiled program serves
-    every horizon and parameter point. Returns (final state, number of
-    cycle_step executions actually performed).
+    """Event-driven while-loop engine: execute one ``cycle_step`` per
+    event, then jump the clock to the next event horizon. ``num_cycles``
+    and every RuntimeParams value are traced, so one compiled program
+    serves every horizon and parameter point. Returns (final state, number
+    of cycle_step executions actually performed).
 
     The loop condition is a scalar, so XLA keeps the carried buffers
     in-place — no per-iteration state copies (this is why the batched
@@ -203,70 +221,60 @@ def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
 
     def cond(carry):
         _, t, _ = carry
-        return t + _CHUNK <= num_cycles
+        return t < num_cycles
 
     def body(carry):
         state, t, steps = carry
-        state = jax.lax.fori_loop(
-            0, _CHUNK, lambda i, s: cycle_step(topo, rp, trace, s, t + i),
-            state)
-        delta = _skip_delta(rp, trace, state, t + _CHUNK, num_cycles)
+        state = cycle_step(topo, rp, trace, state, t)
+        delta = _next_event(topo, rp, trace, state, t + 1, num_cycles)
         state = _apply_skip(topo, state, delta)
-        return (state, t + _CHUNK + delta, steps + _CHUNK)
+        return (state, t + 1 + delta, steps + 1)
 
-    state, t, steps = jax.lax.while_loop(
+    state, _, steps = jax.lax.while_loop(
         cond, body, (state0, jnp.int32(0), jnp.int32(0)))
-    # remainder: fewer than _CHUNK cycles left, plain per-cycle loop
-    state = jax.lax.fori_loop(
-        t, num_cycles, lambda c, s: cycle_step(topo, rp, trace, s, c), state)
-    return state, steps + (num_cycles - t)
+    return state, steps
 
 
 def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
                          rps: RuntimeParams, queue_limits: Array,
                          resp_limits: Array) -> Tuple[SimState, Array]:
-    """Batched cycle-skipping on a SHARED clock (vmap mode).
+    """Batched event-horizon skipping on a SHARED clock (vmap mode).
 
     Lanes carry heterogeneous RuntimeParams (``rps`` has a leading batch
     axis on every field): timings, policies, refresh intervals and queue
     limits all differ per lane inside ONE device program. All lanes see
-    the same cycle counter; the clock jumps by the *joint* skip ``delta =
-    min over lanes`` of each lane's inert bound, so a jump happens only
-    when every lane is provably quiescent and each lane's skipped cycles
-    are inert for it — per-lane exactness is untouched. Sharing the clock
-    keeps the while condition scalar: no per-lane live-masking of the
-    carry (which would copy every queue/memory buffer each step) and
-    in-place buffer updates survive."""
+    the same cycle counter; after each jointly-executed cycle the clock
+    jumps by the *joint* event horizon ``delta = min over lanes`` of each
+    lane's inert bound, so a jump happens only when every lane is provably
+    quiescent and each lane's skipped cycles are inert for it — per-lane
+    exactness is untouched. Sharing the clock keeps the while condition
+    scalar: no per-lane live-masking of the carry (which would copy every
+    queue/memory buffer each step) and in-place buffer updates survive."""
     states = jax.vmap(
         lambda tr, rp, ql, rl: init_state(topo, rp, tr.num_requests, ql, rl)
     )(traces, rps, queue_limits, resp_limits)
     num_cycles = jnp.asarray(num_cycles, jnp.int32)
 
-    def step_all(states, cycle):
-        return jax.vmap(
-            lambda tr, rp, st: cycle_step(topo, rp, tr, st, cycle)
-        )(traces, rps, states)
-
     def cond(carry):
         _, t, _ = carry
-        return t + _CHUNK <= num_cycles
+        return t < num_cycles
 
     def body(carry):
         states, t, steps = carry
-        states = jax.lax.fori_loop(
-            0, _CHUNK, lambda i, s: step_all(s, t + i), states)
+        states = jax.vmap(
+            lambda tr, rp, st: cycle_step(topo, rp, tr, st, t)
+        )(traces, rps, states)
         deltas = jax.vmap(
-            lambda tr, rp, st: _skip_delta(rp, tr, st, t + _CHUNK, num_cycles)
+            lambda tr, rp, st: _next_event(topo, rp, tr, st, t + 1,
+                                           num_cycles)
         )(traces, rps, states)
         delta = deltas.min()
         states = jax.vmap(lambda st: _apply_skip(topo, st, delta))(states)
-        return (states, t + _CHUNK + delta, steps + _CHUNK)
+        return (states, t + 1 + delta, steps + 1)
 
-    states, t, steps = jax.lax.while_loop(
+    states, _, steps = jax.lax.while_loop(
         cond, body, (states, jnp.int32(0), jnp.int32(0)))
-    states = jax.lax.fori_loop(
-        t, num_cycles, lambda c, s: step_all(s, c), states)
-    return states, steps + (num_cycles - t)
+    return states, steps
 
 
 def _run_scan_core(topo: Topology, trace: Trace, num_cycles: int,
@@ -317,8 +325,17 @@ def _run_scan_batch_jit(topo, traces, num_cycles, rps, queue_limits,
 def _pad_trace(tr: Trace, n_max: int) -> Trace:
     """Pad one trace to ``n_max`` requests with inert slots: arrival time
     ``_PAD_T`` is never due inside any horizon, so padded requests are
-    never admitted and their records stay -1."""
+    never admitted and their records stay -1 (padding with 0 would alias a
+    real cycle-0 arrival and corrupt every shorter lane of the batch).
+
+    Rejects traces whose real arrivals reach the sentinel: such a request
+    would be indistinguishable from padding (``t`` is sorted, so checking
+    the last entry suffices)."""
     n = int(tr.num_requests)
+    if n and int(np.asarray(tr.t)[n - 1]) >= _PAD_T:
+        raise ValueError(
+            f"trace arrival t={int(np.asarray(tr.t)[n - 1])} reaches the "
+            f"padding sentinel {_PAD_T}; arrivals must stay below it")
     if n == n_max:
         return tr
 

@@ -66,6 +66,38 @@ def update_counters(
     }
 
 
+def skip_counters(
+    counters: Dict[str, Array],
+    st: Array,             # int32[B] bank states (frozen over the skip)
+    delta: Array,          # scalar int32 number of inert cycles skipped
+    channels: int,
+) -> Dict[str, Array]:
+    """Delta-aware twin of :func:`update_counters`: exactly ``delta``
+    applications of the per-cycle update under an all-NOP issue slate and
+    frozen bank states — what every inert cycle contributes.
+
+    Used by the event-horizon engine's ``_apply_skip``; keeping it next to
+    :func:`update_counters` pins the SREF / idle / active-standby
+    attribution (and the per-channel NOP accounting) to one place, so the
+    energy_report of a skipped run is field-for-field identical to the
+    per-cycle engine's. A ``delta`` of 0 is the identity.
+    """
+    from repro.core.params import CMD_NOP, S_IDLE, S_SREF
+
+    sref = (st == S_SREF).sum().astype(jnp.int32)
+    idle = (st == S_IDLE).sum().astype(jnp.int32)
+    b = st.shape[0]
+    delta = jnp.asarray(delta, jnp.int32)
+    return {
+        # each skipped cycle issues CMD_NOP on every channel (junk slot,
+        # but bit-identical to the per-cycle engine's one_hot accumulation)
+        "cmd_counts": counters["cmd_counts"].at[CMD_NOP].add(delta * channels),
+        "sref_cycles": counters["sref_cycles"] + delta * sref,
+        "idle_cycles": counters["idle_cycles"] + delta * idle,
+        "active_cycles": counters["active_cycles"] + delta * (b - sref - idle),
+    }
+
+
 def energy_report(counters: Dict[str, Array], pcfg: PowerConfig) -> Dict[str, float]:
     """Derive energy (µJ) and average power (mW) from raw counters."""
     from repro.core.params import CMD_ACT, CMD_PRE, CMD_RD, CMD_REF, CMD_WR

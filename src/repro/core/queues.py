@@ -61,6 +61,16 @@ class Fifo(NamedTuple):
         """Head item [F]; garbage if empty (callers must mask)."""
         return self.buf[self.head]
 
+    def peek_valid(self) -> Tuple[Array, Array]:
+        """Masked head-of-queue peek without pop: ``(item [F], valid)``.
+
+        ``valid`` is the occupancy bit the raw :meth:`peek` leaves to the
+        caller; the item is garbage when ``valid`` is False. The cycle
+        stepper and the event-horizon bound both read queue heads through
+        this, so "is there a request to act on" has one definition.
+        """
+        return self.peek(), ~self.empty()
+
     def push(self, item: Array, enable: Array) -> "Fifo":
         q = self.capacity
         idx = (self.head + self.count) % q
@@ -116,6 +126,11 @@ class BankedFifo(NamedTuple):
         """Per-bank head items [B, F]; garbage where empty."""
         b = self.buf.shape[0]
         return self.buf[jnp.arange(b), self.head]
+
+    def peek_valid(self) -> Tuple[Array, Array]:
+        """Masked per-bank head peek without pop: ``(items [B, F],
+        valid bool[B])``. Items are garbage where ``valid`` is False."""
+        return self.peek(), ~self.empty()
 
     def push_at(self, bank: Array, item: Array, enable: Array) -> "BankedFifo":
         """Push ``item`` [F] into queue ``bank`` (scalar index), masked."""

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,12 @@ from jax import Array
 
 from repro.core import power as power_lib
 from repro.core.bank_fsm import BankState, compute_bids, fsm_update
-from repro.core.dram_model import TimingState, check_issue, decode_address, record_issue
+from repro.core.dram_model import (
+    TimingState,
+    decode_address,
+    legal_issue_cycle,
+    record_issue,
+)
 from repro.core.params import (
     CMD_NOP,
     SCHED_FRFCFS,
@@ -166,6 +171,27 @@ def init_state(topo: Topology, rp: RuntimeParams, num_requests: int,
     )
 
 
+def issue_eligibility(topo: Topology, rp: RuntimeParams,
+                      timing: TimingState, bank: BankState, cycle: Array
+                      ) -> Tuple[Array, Array, Array]:
+    """The ONE issue-eligibility predicate: which banks may be granted the
+    command bus this cycle.
+
+    Returns ``(eligible bool[B], cmds int32[B], legal_at int32[B])`` where
+    ``eligible = bidding & (cycle >= legal_at)``. ``cycle_step`` feeds
+    ``eligible`` to the per-channel arbiters; the event-horizon engine
+    (:mod:`repro.core.engine`) reuses ``legal_at`` as the "cycles until the
+    queue head becomes issuable" bound — sharing this definition is what
+    makes skipping through blocked ISSUE states provably exact.
+    """
+    bids, cmds = compute_bids(bank.st, bank.cur_write)
+    rank_of_bank = (jnp.arange(topo.num_banks, dtype=jnp.int32)
+                    // topo.banks_per_rank)
+    legal_at = legal_issue_cycle(rp, timing, cmds, rank_of_bank)
+    eligible = bids & (cycle >= legal_at)
+    return eligible, cmds, legal_at
+
+
 def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
                state: SimState, cycle: Array) -> SimState:
     n = trace.num_requests
@@ -199,10 +225,9 @@ def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
     blocked_dispatch = state.blocked_dispatch + (have_req & tgt_full).astype(jnp.int32)
 
     # ---- phase 3: command bids, timing legality, per-channel RR grant ------
-    bids, cmds = compute_bids(state.bank.st, state.bank.cur_write)
+    eligible, cmds, _ = issue_eligibility(topo, rp, state.timing, state.bank,
+                                          cycle)
     rank_of_bank = (jnp.arange(b, dtype=jnp.int32) // topo.banks_per_rank)
-    legal = check_issue(rp, state.timing, cycle, cmds, rank_of_bank)
-    eligible = bids & legal
     grant_mask, winners, cmd_rr = rr_arbiter_grouped(eligible, state.cmd_rr, topo.channels)
 
     timing = state.timing
@@ -246,8 +271,7 @@ def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
     bank_q = bank_q._replace(buf=jax.lax.cond(
         jnp.asarray(rp.sched_policy) == SCHED_FRFCFS,
         _promoted_buf, lambda: bank_q.buf))
-    queue_nonempty = ~bank_q.empty()
-    pop_items = bank_q.peek()
+    pop_items, queue_nonempty = bank_q.peek_valid()
     if topo.fsm_backend == "pallas":
         from repro.kernels.bank_fsm.ops import bank_fsm_step
         from repro.kernels.bank_fsm.ref import pack_state, unpack_state

@@ -12,7 +12,15 @@ from repro.core.simulator import SimResult
 
 @dataclasses.dataclass
 class DiffSummary:
-    """Paper Table 2 row: MemSimCycles - DRAMSimCycles per request class."""
+    """Paper Table 2 row: MemSimCycles - DRAMSimCycles per request class.
+
+    A class with zero completed requests (a degenerate lane: tiny horizon,
+    read-only / write-only trace, empty record slice) carries NaN averages
+    with its count field as the explicit flag — ``n_read`` / ``n_write``
+    say how many requests the statistics summarize, and rendering helpers
+    (:func:`fmt_diff`, :func:`format_table2`) print ``n/a`` instead of
+    leaking ``nan`` into Table-2 rows.
+    """
 
     read_diff_avg: float
     read_diff_std: float
@@ -20,6 +28,15 @@ class DiffSummary:
     write_diff_std: float
     n_read: int
     n_write: int
+
+
+def _mean_std(x: np.ndarray) -> Tuple[float, float]:
+    """(mean, std) with an explicit empty-slice guard: no numpy
+    mean-of-empty RuntimeWarning, no 0/0 — just the NaN sentinel the count
+    flags explain."""
+    if x.size == 0:
+        return float("nan"), float("nan")
+    return float(np.mean(x)), float(np.std(x))
 
 
 def cycle_diffs(result: SimResult, ideal_complete: np.ndarray) -> DiffSummary:
@@ -31,25 +48,31 @@ def cycle_diffs(result: SimResult, ideal_complete: np.ndarray) -> DiffSummary:
     rd = done & (result.is_write == 0)
     wr = done & (result.is_write == 1)
 
-    def _ms(x: np.ndarray) -> Tuple[float, float]:
-        if x.size == 0:
-            return float("nan"), float("nan")
-        return float(np.mean(x)), float(np.std(x))
-
-    r_avg, r_std = _ms(diff[rd])
-    w_avg, w_std = _ms(diff[wr])
+    r_avg, r_std = _mean_std(diff[rd])
+    w_avg, w_std = _mean_std(diff[wr])
     return DiffSummary(r_avg, r_std, w_avg, w_std, int(rd.sum()), int(wr.sum()))
 
 
 def latency_summary(result: SimResult) -> Dict[str, float]:
+    """Latency statistics of the completed requests.
+
+    Degenerate lanes are first-class: with zero completed requests (or
+    zero of one request class) every affected statistic is NaN and the
+    ``completed`` / ``total`` counts are the explicit flag — callers render
+    or filter on the counts, never on NaN comparisons. No empty-slice
+    warning or divide-by-zero escapes.
+    """
     done = result.completed
     lat = result.latency[done]
     rd = result.is_write[done] == 0
+    mean, std = _mean_std(lat)
+    read_mean, _ = _mean_std(lat[rd])
+    write_mean, _ = _mean_std(lat[~rd])
     return {
-        "mean": float(lat.mean()) if lat.size else float("nan"),
-        "std": float(lat.std()) if lat.size else float("nan"),
-        "read_mean": float(lat[rd].mean()) if rd.any() else float("nan"),
-        "write_mean": float(lat[~rd].mean()) if (~rd).any() else float("nan"),
+        "mean": mean,
+        "std": std,
+        "read_mean": read_mean,
+        "write_mean": write_mean,
         "p50": float(np.percentile(lat, 50)) if lat.size else float("nan"),
         "p99": float(np.percentile(lat, 99)) if lat.size else float("nan"),
         "completed": int(done.sum()),
@@ -151,12 +174,21 @@ def records_at_horizon(result: SimResult, horizon: int) -> SimResult:
     )
 
 
+def fmt_diff(value: float, n: int) -> str:
+    """Render one Table-2 statistic: ``n/a`` for a class with no completed
+    requests (the NaN-with-flag convention of :class:`DiffSummary`) instead
+    of leaking the string ``nan`` into the table."""
+    return f"{value:.0f}" if n > 0 else "n/a"
+
+
 def format_table2(rows: List[Tuple[str, DiffSummary]]) -> str:
     out = ["| Benchmark | Read Diff Avg | Read StdDev | Write Diff Avg | Write StdDev |",
            "|---|---|---|---|---|"]
     for name, d in rows:
         out.append(
-            f"| {name} | {d.read_diff_avg:.0f} | {d.read_diff_std:.0f} "
-            f"| {d.write_diff_avg:.0f} | {d.write_diff_std:.0f} |"
+            f"| {name} | {fmt_diff(d.read_diff_avg, d.n_read)} "
+            f"| {fmt_diff(d.read_diff_std, d.n_read)} "
+            f"| {fmt_diff(d.write_diff_avg, d.n_write)} "
+            f"| {fmt_diff(d.write_diff_std, d.n_write)} |"
         )
     return "\n".join(out)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.bank_fsm import P_NONE, P_REF, P_RW, P_SREF
+from repro.core.bank_fsm import EVENT_INF, P_NONE, P_REF, P_RW, P_SREF
 from repro.core.params import (
     NUM_RUNTIME_PARAMS,
     PAGE_OPEN,
@@ -177,6 +177,56 @@ def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, cycle_ref,
     flags_ref[0:1, :] = want_pop.astype(jnp.int32)
     flags_ref[1:2, :] = rw_done.astype(jnp.int32)
     flags_ref[2:3, :] = completed.astype(jnp.int32)
+
+
+def _event_bound_kernel(state_ref, rp_ref, cycle_ref, out_ref):
+    """Cycles-until-actionable per bank (the FSM-local half of the
+    event-horizon bound): identical where-chain to
+    :func:`repro.core.bank_fsm.cycles_until_actionable` on the packed ABI."""
+
+    def rp(name):
+        return rp_ref[RP_INDEX[name], 0]
+
+    st = state_ref[0:1, :]
+    timer = state_ref[1:2, :]
+    idle_ctr = state_ref[2:3, :]
+    refresh_due = state_ref[3:4, :]
+    cycle = cycle_ref[0, 0]
+
+    in_wait = (
+        (st == S_ACT_WAIT) | (st == S_RW_WAIT) | (st == S_PRE_WAIT)
+        | (st == S_REF_WAIT) | (st == S_SREF_EXIT_WAIT)
+    )
+    is_idle = st == S_IDLE
+    is_sref = st == S_SREF
+    refresh_in = refresh_due - rp("tRFC") - cycle
+    sref_in = rp("sref_idle_cycles") - 1 - idle_ctr
+    bound = jnp.zeros_like(st)
+    bound = jnp.where(in_wait, timer - 1, bound)
+    bound = jnp.where(is_idle, jnp.minimum(refresh_in, sref_in), bound)
+    bound = jnp.where(is_sref, EVENT_INF, bound)
+    out_ref[0:1, :] = bound.astype(jnp.int32)
+
+
+def bank_event_bound_pallas(state, rp_vec, cycle, block_b: int = 128,
+                            interpret: bool = True):
+    """Invoke the event-bound kernel; B must be a multiple of ``block_b``
+    (ops.py pads). Returns int32[1, B] cycles-until-actionable."""
+    b = state.shape[1]
+    assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _event_bound_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((10, block_b), lambda i: (0, i)),
+            pl.BlockSpec((NUM_RUNTIME_PARAMS, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, block_b), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, b), jnp.int32)],
+        interpret=interpret,
+    )(state, rp_vec, cycle)[0]
 
 
 def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_vec, cycle,

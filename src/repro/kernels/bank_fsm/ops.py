@@ -10,8 +10,11 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.params import MemSimConfig, RuntimeParams, S_IDLE, Topology
-from repro.kernels.bank_fsm.bank_fsm import bank_fsm_step_pallas
-from repro.kernels.bank_fsm.ref import bank_fsm_step_ref
+from repro.kernels.bank_fsm.bank_fsm import (
+    bank_event_bound_pallas,
+    bank_fsm_step_pallas,
+)
+from repro.kernels.bank_fsm.ref import bank_event_bound_ref, bank_fsm_step_ref
 
 # plain int, not a jnp array: this module is imported lazily from inside
 # traced cycle loops, and a module-level jnp constant materialized during
@@ -33,6 +36,33 @@ def _pad_banks(state: Array, inputs: Array, pop: Array, padded_b: int):
     inputs = jnp.concatenate([inputs, jnp.zeros((3, extra), jnp.int32)], axis=1)
     pop = jnp.concatenate([pop, jnp.zeros((4, extra), jnp.int32)], axis=1)
     return state, inputs, pop
+
+
+def bank_event_bound(
+    state: Array,    # [10, B] int32 packed BankState
+    cycle: Array,    # scalar or [1,1] int32
+    params: RuntimeParams,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> Array:
+    """Per-bank cycles-until-actionable on the packed ABI; returns
+    int32[B]. The Pallas path pads the bank axis like :func:`bank_fsm_step`
+    and slices the padded lanes back off, so both backends agree
+    bank-for-bank with :func:`repro.core.bank_fsm.cycles_until_actionable`
+    (enforced by the kernel tests). Callable from inside traced loops —
+    no jit wrapper of its own, it inlines into the caller's program."""
+    cycle2d = jnp.asarray(cycle, jnp.int32).reshape(1, 1)
+    rp_vec = params.pack()
+    if not use_pallas:
+        return bank_event_bound_ref(state, rp_vec, cycle2d)[0]
+    b = state.shape[1]
+    block_b = 128
+    padded_b = ((b + block_b - 1) // block_b) * block_b
+    ps, _, _ = _pad_banks(state, jnp.zeros((3, b), jnp.int32),
+                          jnp.zeros((4, b), jnp.int32), padded_b)
+    bound = bank_event_bound_pallas(ps, rp_vec, cycle2d, block_b=block_b,
+                                    interpret=interpret)
+    return bound[0, :b]
 
 
 @functools.partial(jax.jit, static_argnums=(0, 5, 6))

@@ -51,6 +51,21 @@ def unpack_state(s: Array) -> BankState:
     )
 
 
+def bank_event_bound_ref(
+    state: Array,   # [10, B] int32
+    rp_vec: Array,  # [NP, 1] int32 packed RuntimeParams
+    cycle: Array,   # [1, 1] int32
+) -> Array:
+    """Packed-ABI oracle for the event-bound kernel: adapts the simulator's
+    :func:`repro.core.bank_fsm.cycles_until_actionable`. Returns int32[1, B].
+    """
+    from repro.core.bank_fsm import cycles_until_actionable
+
+    bound = cycles_until_actionable(
+        RuntimeParams.unpack(rp_vec), unpack_state(state), cycle[0, 0])
+    return bound[None, :]
+
+
 def bank_fsm_step_ref(
     topo: Topology,
     state: Array,   # [10, B] int32

@@ -48,6 +48,37 @@ def test_bank_fsm_kernel_matches_ref(topology, seed):
     np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_pal))
 
 
+@pytest.mark.parametrize("topology", [
+    dict(),
+    dict(ranks=1, bankgroups=2, banks_per_group=2),   # 4 banks (padding path)
+    dict(tRFC=50, tREFI=900, sref_idle_cycles=333),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bank_event_bound_kernel_matches_ref(topology, seed):
+    """The event-horizon engine's per-bank cycles-until-actionable: the
+    Pallas kernel twin must agree bank-for-bank with the simulator's
+    ``cycles_until_actionable`` on random packed states (WAIT timers,
+    idle counters, refresh deadlines, SREF parking all drawn)."""
+    from repro.core.bank_fsm import cycles_until_actionable
+    from repro.kernels.bank_fsm.ops import bank_event_bound
+    from repro.kernels.bank_fsm.ref import unpack_state
+
+    cfg = MemSimConfig(**topology)
+    rng = np.random.default_rng(seed)
+    b = cfg.num_banks
+    state = jnp.asarray(rng.integers(0, 14, size=(10, b)), jnp.int32)
+    state = state.at[1].set(jnp.asarray(rng.integers(0, 40, (b,)), jnp.int32))
+    state = state.at[2].set(jnp.asarray(rng.integers(0, 1200, (b,)), jnp.int32))
+    state = state.at[3].set(jnp.asarray(rng.integers(0, 8000, (b,)), jnp.int32))
+    cycle = jnp.int32(int(rng.integers(0, 5000)))
+    rp = cfg.runtime()
+    ref = bank_event_bound(state, cycle, rp, False)
+    pal = bank_event_bound(state, cycle, rp, True, True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    direct = cycles_until_actionable(rp, unpack_state(state), cycle)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(direct))
+
+
 def test_bank_fsm_kernel_multi_cycle_rollout():
     """Kernel == ref over a 200-cycle closed-loop rollout."""
     cfg = MemSimConfig()

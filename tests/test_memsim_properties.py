@@ -131,6 +131,84 @@ def runtime_param_draws():
 _VARIED = ("tCL", "tREFI", "page_policy", "queue_size")
 
 
+def bursty_traces(max_bursts=6, max_burst=12):
+    """Bursty request streams — the WAIT-heavy regime the event-horizon
+    engine skips through: back-to-back bursts striped across banks,
+    separated by long quiet gaps (SREF entries, refresh windows, staggered
+    WAIT drains all land inside the horizon)."""
+    @st.composite
+    def _t(draw):
+        n_bursts = draw(st.integers(1, max_bursts))
+        t, addrs, writes = [], [], []
+        clock = 0
+        for bi in range(n_bursts):
+            burst = draw(st.integers(1, max_burst))
+            base = draw(st.integers(0, 1 << 10))
+            stride = draw(st.sampled_from([1, 3, 17]))
+            wr = draw(st.integers(0, 1))
+            for i in range(burst):
+                t.append(clock)
+                addrs.append(base + i * stride)
+                writes.append(wr if i % 3 else 0)
+                clock += 1
+            clock += draw(st.integers(40, 700))  # compute gap
+        n = len(t)
+        return Trace.from_numpy(np.asarray(t), np.asarray(addrs),
+                                np.asarray(writes),
+                                np.arange(n) & 0x7FFFF)
+    return _t()
+
+
+@settings(max_examples=8, deadline=None)
+@given(runtime_param_draws(), bursty_traces())
+def test_event_horizon_engine_matches_seed_bit_for_bit(p, tr):
+    """The event-horizon acceptance property: for random RuntimeParams
+    draws and bursty WAIT-heavy traces, ``simulate_fast`` (event mode)
+    reproduces the seed per-cycle ``simulate`` bit-for-bit — records, read
+    data, every power/state counter and the blocked totals."""
+    from repro.core import simulate_fast
+
+    q = p.pop("queue_size")
+    cfg = MemSimConfig(queue_size=q, mem_words=1 << 12, **p)
+    ref = simulate(cfg, tr, num_cycles=6_000)
+    fast = simulate_fast(
+        MemSimConfig(queue_size=16, mem_words=1 << 12, **p), tr,
+        num_cycles=6_000, queue_size=q)
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(getattr(ref, f), getattr(fast, f),
+                                      err_msg=f"{p}: {f}")
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{p}: counter {k}")
+    assert ref.blocked_arrival == fast.blocked_arrival
+    assert ref.blocked_dispatch == fast.blocked_dispatch
+
+
+@settings(max_examples=3, deadline=None)
+@given(runtime_param_draws(), bursty_traces(max_bursts=3, max_burst=6))
+def test_event_horizon_engine_pallas_backend_bit_for_bit(p, tr):
+    """Same property through the Pallas FSM kernel path (interpret mode on
+    CPU — fewer, smaller examples; the jnp/pallas kernel identity is
+    additionally pinned per-step by tests/test_kernels.py)."""
+    from repro.core import simulate_fast
+
+    q = p.pop("queue_size")
+    cfg = MemSimConfig(queue_size=q, mem_words=1 << 12, **p)
+    ref = simulate(cfg, tr, num_cycles=2_500)
+    fast = simulate_fast(
+        MemSimConfig(queue_size=16, mem_words=1 << 12,
+                     fsm_backend="pallas", **p),
+        tr, num_cycles=2_500, queue_size=q)
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(getattr(ref, f), getattr(fast, f),
+                                      err_msg=f"{p}: {f}")
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{p}: counter {k}")
+
+
 @settings(max_examples=8, deadline=None)
 @given(runtime_param_draws(), runtime_param_draws())
 def test_sweep_grid_lanes_match_seed_simulate(p1, p2):
