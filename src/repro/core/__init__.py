@@ -13,12 +13,15 @@ from repro.core.params import (
 )
 from repro.core.simulator import SimResult, Trace, simulate
 from repro.core.engine import (
+    TopoGridResult,
     grid_points,
     simulate_fast,
     simulate_batch,
     stack_traces,
     sweep_grid,
     sweep_queue_sizes,
+    sweep_topologies,
+    topo_grid_points,
 )
 from repro.core.ideal import simulate_ideal, ideal_latencies
 from repro.core import stats
@@ -37,6 +40,9 @@ __all__ = [
     "grid_points",
     "sweep_grid",
     "sweep_queue_sizes",
+    "sweep_topologies",
+    "topo_grid_points",
+    "TopoGridResult",
     "simulate_ideal",
     "ideal_latencies",
     "stats",

@@ -51,6 +51,15 @@ those bottlenecks while staying **bit-exact** against the reference:
    runs a whole (timing x page-policy x scheduler x refresh x queue-depth)
    Cartesian grid as batch lanes of ONE compiled XLA program.
 
+5. **Multi-topology sweeps** — the one axis that genuinely forces new
+   programs (the hardware *shape*: channels/ranks/bankgroups/banks) is
+   orchestrated by :func:`sweep_topologies`: the (topology x runtime) grid
+   is grouped by distinct :class:`Topology`, one batched program per shape
+   is AOT-compiled **concurrently** on a thread pool (compile wall-clock
+   overlaps instead of summing), the per-topology programs run round-robin
+   across visible devices, and the per-lane results merge into one
+   :class:`TopoGridResult` table keyed by the full config point.
+
 Exactness contract: for any ``cfg`` with capacity ``C``, trace, horizon and
 runtime limit ``q <= C``,
 
@@ -68,6 +77,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import threading
 import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
@@ -348,13 +358,26 @@ def _pad_trace(tr: Trace, n_max: int) -> Trace:
                  is_write=pad(tr.is_write, 0), wdata=pad(tr.wdata, 0))
 
 
-def stack_traces(traces: Sequence[Trace]) -> Tuple[Trace, List[int]]:
+def _sentinel_trace(n_max: int) -> Trace:
+    """An all-padding lane: every arrival sits at the ``_PAD_T`` sentinel,
+    so no request is ever due and the lane idles bit-inertly for the whole
+    horizon. Used to pad a batch up to a device multiple so awkward grid
+    sizes still shard (the padding lanes are dropped on the way out)."""
+    zeros = jnp.zeros((n_max,), jnp.int32)
+    return Trace(t=jnp.full((n_max,), _PAD_T, jnp.int32), addr=zeros,
+                 is_write=zeros, wdata=zeros)
+
+
+def stack_traces(traces: Sequence[Trace],
+                 pad_lanes: int = 0) -> Tuple[Trace, List[int]]:
     """Pad traces to a common length (see :func:`_pad_trace`) and stack on
-    a leading batch axis. Returns the stacked trace and the real per-lane
-    request counts."""
+    a leading batch axis, appending ``pad_lanes`` all-sentinel lanes (see
+    :func:`_sentinel_trace`). Returns the stacked trace and the real
+    per-lane request counts (padding lanes excluded)."""
     ns = [int(tr.num_requests) for tr in traces]
     n_max = max(ns)
     padded = [_pad_trace(tr, n_max) for tr in traces]
+    padded += [_sentinel_trace(n_max)] * pad_lanes
     stacked = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *padded)
     return stacked, ns
@@ -375,7 +398,8 @@ def _lane_executable(topo: Topology, n_max: int, num_cycles: int,
     sharding = SingleDeviceSharding(device)
     key = ("lane", topo, n_max, None if cycle_skip else num_cycles,
            cycle_skip, device.id)
-    cached = _aot_cache.get(key)
+    with _aot_lock:
+        cached = _aot_cache.get(key)
     if cached is not None:
         return cached, 0.0
 
@@ -394,7 +418,8 @@ def _lane_executable(topo: Topology, n_max: int, num_cycles: int,
         compiled = _run_scan_jit.lower(topo, tr_s, num_cycles, rp_s, scal,
                                        scal).compile()
     compile_s = time.perf_counter() - t0
-    _aot_cache[key] = compiled
+    with _aot_lock:
+        _aot_cache[key] = compiled
     return compiled, compile_s
 
 
@@ -456,11 +481,28 @@ def _run_lanes(topo: Topology, trace_list: List[Trace], num_cycles: int,
     return [o[0] for o in outs], [o[1] for o in outs]
 
 
-def _maybe_shard(tree, batch: int):
-    """Shard the leading batch axis across visible devices, best-effort."""
+def _shard_pad(batch: int) -> int:
+    """Sentinel lanes needed to round ``batch`` up to a device multiple.
+
+    GSPMD can only split an evenly-divisible batch axis, so without padding
+    any ``batch % len(devices) != 0`` sweep would silently fall back to ONE
+    device; callers append this many :func:`_sentinel_trace` lanes before
+    stacking and drop them on the way out."""
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return 0
+    return (-batch) % len(devices)
+
+
+def _maybe_shard(tree, batch: int) -> Tuple[object, bool]:
+    """Shard the leading batch axis across visible devices.
+
+    Returns ``(tree, sharded)``. Callers are expected to have padded
+    ``batch`` to a device multiple via :func:`_shard_pad`; a non-multiple
+    batch (or a single device) is left unsharded."""
     devices = jax.devices()
     if len(devices) <= 1 or batch % len(devices) != 0:
-        return tree
+        return tree, False
     try:
         from jax.sharding import Mesh
 
@@ -470,9 +512,9 @@ def _maybe_shard(tree, batch: int):
         with shard_lib.use_mesh(mesh):
             sharding = shard_lib.named(mesh, "data")
         return jax.tree_util.tree_map(
-            lambda x: jax.device_put(x, sharding), tree)
+            lambda x: jax.device_put(x, sharding), tree), True
     except Exception:  # pragma: no cover - single-device fallback
-        return tree
+        return tree, False
 
 
 # --------------------------------------------------------------------------
@@ -480,47 +522,93 @@ def _maybe_shard(tree, batch: int):
 # --------------------------------------------------------------------------
 
 _aot_cache: Dict[tuple, object] = {}
+#: guards _aot_cache: sweep_topologies compiles distinct-topology programs
+#: from worker threads, and _run_lanes/_timed may race with them.
+_aot_lock = threading.Lock()
 
 
 def _rp_i32(rp: RuntimeParams) -> RuntimeParams:
     """Coerce every RuntimeParams leaf to a committed int32 scalar so AOT
     cache keys and lowered signatures are stable regardless of whether the
-    caller passed Python ints or device arrays. Cross-field constraints the
-    seed path enforces are checked here too (skipped only for traced
-    leaves, which cannot be inspected host-side)."""
-    try:
-        if int(rp.tREFI) <= int(rp.tRFC):
-            raise ValueError(
-                f"tREFI={int(rp.tREFI)} must exceed tRFC={int(rp.tRFC)}")
-    except (jax.errors.TracerIntegerConversionError,
-            jax.errors.ConcretizationTypeError):
-        pass  # traced values: the caller owns validation
+    caller passed Python ints or device arrays. The cross-field constraints
+    the seed config path enforces (``MemSimConfig.validate``) are checked
+    here through the same shared predicate, so a bad ``params=`` override
+    fails with the same clear error as config construction — checked per
+    leaf, skipping only traced leaves, which cannot be inspected
+    host-side (the caller inside the trace owns those)."""
+    from repro.core.params import runtime_constraint_violations
+
+    vals = {}
+    for f in RuntimeParams._fields:
+        try:
+            vals[f] = int(getattr(rp, f))
+        except (TypeError, jax.errors.TracerIntegerConversionError,
+                jax.errors.ConcretizationTypeError):
+            vals[f] = None  # traced leaf
+    bad = runtime_constraint_violations(vals)
+    if bad:
+        raise ValueError("; ".join(bad))
     return RuntimeParams(*[jnp.asarray(v, jnp.int32) for v in rp])
+
+
+def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
+    """Phase one of the split AOT pipeline: trace + lower (holds the GIL,
+    so callers run it sequentially). Returns ``(key, lowered, lower_s)``;
+    ``lowered`` is None on a cache hit."""
+    shapes = tuple((tuple(x.shape), str(x.dtype))
+                   for x in jax.tree_util.tree_leaves(dyn_args))
+    key = (id(jitted), static_key, shapes)
+    with _aot_lock:
+        if key in _aot_cache:
+            return key, None, 0.0
+    t0 = time.perf_counter()
+    lowered = jitted.lower(*all_args)
+    return key, lowered, time.perf_counter() - t0
+
+
+def _aot_finish(key: tuple, lowered) -> Tuple[object, float]:
+    """Phase two: XLA compilation (releases the GIL — safe and profitable
+    to run from worker threads), then publish to the cache."""
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    with _aot_lock:
+        _aot_cache[key] = compiled
+    return compiled, compile_s
+
+
+def _aot_compile(jitted, all_args: tuple, dyn_args: tuple,
+                 static_key: tuple) -> Tuple[object, float, int]:
+    """Lower + compile a jitted runner ahead of time, cached.
+
+    ``all_args`` is the full positional argument list (statics interleaved,
+    as the jit signature expects; dynamic slots may be ShapeDtypeStructs);
+    ``dyn_args`` the dynamic subset the compiled executable takes. The
+    cache key is (fn, statics, dynamic-arg shapes), so re-requesting the
+    same program returns instantly with ``compile_s == 0``. Thread-safe:
+    concurrent requests for *distinct* keys compile in parallel (XLA
+    releases the GIL during compilation — this is what lets
+    :func:`sweep_topologies` overlap one compile per topology; it splits
+    the two phases via :func:`_aot_lower` / :func:`_aot_finish`, which
+    this composes). Returns ``(compiled, compile_seconds, fresh)``."""
+    key, lowered, lower_s = _aot_lower(jitted, all_args, dyn_args,
+                                       static_key)
+    if lowered is None:
+        with _aot_lock:
+            return _aot_cache[key], 0.0, 0
+    compiled, compile_s = _aot_finish(key, lowered)
+    return compiled, lower_s + compile_s, 1
 
 
 def _timed(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple,
            timings: Optional[dict]):
     """Invoke a jitted runner, optionally splitting compile vs run wall time
-    via AOT lowering. ``all_args`` is the full positional argument list
-    (statics interleaved, as the jit signature expects); ``dyn_args`` the
-    dynamic subset an AOT-compiled executable takes. Compiled executables
-    are cached by (fn, statics, dynamic-arg shapes) so re-timing the same
-    program records ``compile_s == 0`` instead of recompiling. ``timings``
-    (if given) gains ``compile_s`` / ``run_s``."""
+    via AOT lowering (see :func:`_aot_compile` for the cache contract).
+    ``timings`` (if given) gains ``compile_s`` / ``run_s`` / ``compiles``."""
     if timings is None:
         return jitted(*all_args)
-    shapes = tuple((x.shape, str(x.dtype))
-                   for x in jax.tree_util.tree_leaves(dyn_args))
-    key = (id(jitted), static_key, shapes)
-    compiled = _aot_cache.get(key)
-    compile_s = 0.0
-    fresh = 0
-    if compiled is None:
-        t0 = time.perf_counter()
-        compiled = jitted.lower(*all_args).compile()
-        compile_s = time.perf_counter() - t0
-        _aot_cache[key] = compiled
-        fresh = 1
+    compiled, compile_s, fresh = _aot_compile(jitted, all_args, dyn_args,
+                                              static_key)
     t1 = time.perf_counter()
     out = compiled(*dyn_args)
     jax.block_until_ready(out)
@@ -679,13 +767,24 @@ def simulate_batch(cfg: MemSimConfig,
         def lane_scalar(i, name):
             return int(getattr(hosts[i], name))
     else:
-        stacked, _ = stack_traces(trace_list)
-        rp_stack = RuntimeParams.stack(rps)
-        ql = jnp.asarray(qs, jnp.int32)
-        rl = jnp.asarray(rs, jnp.int32)
+        # pad the batch to a device multiple with sentinel lanes so awkward
+        # grid sizes still shard (GSPMD cannot split a ragged batch axis;
+        # without padding a 5-lane sweep on 4 devices would silently run on
+        # ONE device). Sentinel lanes are inert by construction and dropped
+        # below: the result loop reads lanes [0, lanes) only.
+        pad_lanes = _shard_pad(lanes) if shard else 0
+        stacked, _ = stack_traces(trace_list, pad_lanes=pad_lanes)
+        rp_stack = RuntimeParams.stack(rps + [rps[0]] * pad_lanes)
+        ql = jnp.asarray(qs + [qs[0]] * pad_lanes, jnp.int32)
+        rl = jnp.asarray(rs + [rs[0]] * pad_lanes, jnp.int32)
+        sharded = False
         if shard:
-            stacked, rp_stack, ql, rl = _maybe_shard(
-                (stacked, rp_stack, ql, rl), lanes)
+            (stacked, rp_stack, ql, rl), sharded = _maybe_shard(
+                (stacked, rp_stack, ql, rl), lanes + pad_lanes)
+        if timings is not None:
+            timings["pad_lanes"] = timings.get("pad_lanes", 0) + pad_lanes
+            timings["sharded"] = sharded
+            timings["devices"] = len(jax.devices())
 
         if cycle_skip:
             nc = jnp.int32(num_cycles)
@@ -830,3 +929,307 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
                           lane_cfgs=lane_cfgs,
                           cycle_skip=cycle_skip, shard=shard,
                           batch_mode=batch_mode, timings=timings)
+
+
+# --------------------------------------------------------------------------
+# multi-topology sweeps: one concurrent compile per hardware shape
+# --------------------------------------------------------------------------
+
+#: structural grid axes resolvable by :func:`sweep_topologies` on top of the
+#: runtime ``GRID_AXES``: every shape-determining :class:`Topology` field.
+#: Each distinct topology in a grid costs one compile (overlapped on a
+#: thread pool); ``queue_size`` / ``resp_queue_size`` stay *runtime* depths
+#: against a grid-wide static capacity, so a depth value never forces its
+#: own program.
+TOPO_AXES = tuple(f.name for f in dataclasses.fields(Topology)
+                  if f.name not in ("queue_size", "resp_queue_size"))
+
+
+def topo_grid_points(grid: Mapping[str, Sequence]) -> List[Dict]:
+    """Expand a mixed (topology x runtime) axis dict into the Cartesian
+    product of override dicts, last axis fastest (:func:`grid_points`
+    order). Valid axes are :data:`TOPO_AXES` (structural — channels, ranks,
+    bankgroups, banks_per_group, column_bits, mem_words, fsm_backend) plus
+    every runtime axis of :data:`GRID_AXES`."""
+    keys = list(grid)
+    for k in keys:
+        if k not in TOPO_AXES and k not in GRID_AXES:
+            raise ValueError(
+                f"unknown grid axis {k!r}; valid: {TOPO_AXES + GRID_AXES}")
+        if len(grid[k]) == 0:
+            raise ValueError(f"grid axis {k!r} is empty")
+    return [dict(zip(keys, vals))
+            for vals in itertools.product(*(grid[k] for k in keys))]
+
+
+@dataclasses.dataclass
+class TopoGridResult:
+    """Merged result table of a multi-topology sweep, keyed by the full
+    config point.
+
+    Per-lane :class:`SimResult`\\ s of different topologies carry different
+    bank counts (and therefore different per-bank internals); the merge is
+    on the shape-independent surface every lane shares — per-request
+    records, power/state counters, blocked totals — with each result's
+    ``cfg`` labelling its exact grid point. ``points[i]`` is the axis
+    override dict of ``results[i]`` (grid order);
+    ``topologies[topo_of_point[i]]`` its compiled hardware shape.
+    ``timings`` records per-topology compile/run seconds plus the
+    concurrent (``compile_s_wall``) vs sequential-sum (``compile_s``)
+    compile wall-clock."""
+
+    points: List[Dict]
+    results: List[SimResult]
+    topologies: List[Topology]
+    topo_of_point: List[int]
+    timings: Dict
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, i: int) -> SimResult:
+        return self.results[i]
+
+    def table(self) -> List[Dict]:
+        """One row per grid point: ``{point, topology, result}``."""
+        return [{"point": dict(p), "topology": self.topologies[ti],
+                 "result": r}
+                for p, ti, r in zip(self.points, self.topo_of_point,
+                                    self.results)]
+
+    def result_at(self, **axes) -> SimResult:
+        """The unique grid point matching every given axis value."""
+        hits = [i for i, p in enumerate(self.points)
+                if all(p.get(k) == v for k, v in axes.items())]
+        if len(hits) != 1:
+            raise KeyError(
+                f"{axes} matches {len(hits)} grid points (need exactly 1)")
+        return self.results[hits[0]]
+
+
+def sweep_topologies(cfg: MemSimConfig,
+                     trace: Union[Trace, Sequence[Trace]],
+                     grid: Mapping[str, Sequence],
+                     num_cycles: int = 100_000,
+                     *, capacity: Optional[int] = None,
+                     resp_capacity: Optional[int] = None,
+                     cycle_skip: bool = True,
+                     max_workers: Optional[int] = None,
+                     timings: Optional[dict] = None) -> TopoGridResult:
+    """Run a full (topology x runtime-params x policy x depth) grid with
+    ONE overlapped compile per distinct hardware shape.
+
+    Runtime axes batch as lanes of a shared program (exactly
+    :func:`sweep_grid`); the structural :data:`TOPO_AXES` cannot — each
+    distinct :class:`Topology` sets array shapes, so it needs its own XLA
+    program. This orchestrator makes that cost scale with the number of
+    *shapes*, not points, and overlaps it:
+
+    1. expand the grid (:func:`topo_grid_points`) and group points by the
+       distinct ``Topology`` they resolve to (queue depths are unified to a
+       grid-wide static capacity first, so depth values never split a
+       group);
+    2. AOT-lower each topology's batched event-horizon program
+       sequentially (tracing holds the GIL), then compile them
+       **concurrently** on a thread pool — XLA releases the GIL, so the
+       compile wall-clock overlaps instead of summing
+       (``timings["compile_s_wall"]`` vs the sequential sum
+       ``timings["compile_s"]``);
+    3. dispatch each topology's lanes through its compiled batch runner,
+       topologies round-robin across visible devices
+       (``repro.distributed.shard.round_robin_devices``) and concurrent
+       from worker threads;
+    4. merge the per-lane results into one :class:`TopoGridResult` keyed
+       by the full config point.
+
+    Every lane is bit-exact vs a per-config seed :func:`simulate` run of
+    its point. ``trace`` is one Trace broadcast to every point, or a
+    sequence with one Trace per point. ``capacity`` / ``resp_capacity``
+    (defaults: the largest swept depth, falling back to ``cfg``) size the
+    static queue buffers of every topology. ``max_workers`` bounds both
+    thread pools — concurrent compiles and concurrent dispatches —
+    (default: enough to cover the host cores and the visible devices;
+    pass 1 for fully sequential execution). Re-invoking with the same
+    shapes reuses every compiled program (``timings["compiles"] == 0``).
+
+    Example::
+
+        sweep_topologies(MemSimConfig(), trace, {
+            "channels": [1, 2],
+            "banks_per_group": [2, 4],      # 4 distinct topologies
+            "tREFI": [3600, 7200],          # runtime lanes within each
+            "queue_size": [16, 64],
+        })
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    from jax.sharding import SingleDeviceSharding
+
+    from repro.distributed.shard import round_robin_devices
+
+    points = topo_grid_points(grid)
+    lane_cfgs = [dataclasses.replace(cfg, **ov).validate() for ov in points]
+    n_points = len(points)
+    if isinstance(trace, Trace):
+        trace_list = [trace] * n_points
+    else:
+        trace_list = list(trace)
+        if len(trace_list) != n_points:
+            raise ValueError(
+                f"got {len(trace_list)} traces for {n_points} grid points")
+
+    qs = [c.queue_size for c in lane_cfgs]
+    rs = [c.resp_queue_size for c in lane_cfgs]
+    cap = max(qs) if capacity is None else capacity
+    rcap = max(rs) if resp_capacity is None else resp_capacity
+    if cap < max(qs):
+        raise ValueError("capacity below largest swept queue size")
+    if rcap < max(rs):
+        raise ValueError("resp_capacity below largest swept resp queue size")
+    rps = [_rp_i32(c.runtime()) for c in lane_cfgs]
+
+    # group grid points by the distinct static topology they compile to
+    topologies: List[Topology] = []
+    topo_of_point: List[int] = []
+    for c in lane_cfgs:
+        t = dataclasses.replace(c, queue_size=cap,
+                                resp_queue_size=rcap).topology()
+        if t not in topologies:
+            topologies.append(t)
+        topo_of_point.append(topologies.index(t))
+    n_topos = len(topologies)
+    groups = [[i for i, ti in enumerate(topo_of_point) if ti == gi]
+              for gi in range(n_topos)]
+    devices = round_robin_devices(n_topos)
+    if max_workers is None:
+        # one knob bounds both thread pools: compiles are CPU-bound
+        # (cores), dispatches device-bound (distinct devices) — cover both
+        import os
+        n_dev = len({d.id for d in devices})
+        max_workers = max(1, min(n_topos, max(os.cpu_count() or 1, n_dev)))
+
+    # ---- phase 1: one batched program per topology, compiles overlapped --
+    t_c0 = time.perf_counter()
+    lowered = []
+    for gi, topo in enumerate(topologies):
+        idxs = groups[gi]
+        n_max_g = max(int(trace_list[i].num_requests) for i in idxs)
+        sharding = SingleDeviceSharding(devices[gi])
+
+        def sds(shape):
+            return jax.ShapeDtypeStruct(shape, jnp.int32, sharding=sharding)
+
+        tr_s = Trace(t=sds((len(idxs), n_max_g)),
+                     addr=sds((len(idxs), n_max_g)),
+                     is_write=sds((len(idxs), n_max_g)),
+                     wdata=sds((len(idxs), n_max_g)))
+        scal, vec = sds(()), sds((len(idxs),))
+        rp_s = RuntimeParams(*([vec] * len(RuntimeParams._fields)))
+        if cycle_skip:
+            lowered.append(_aot_lower(
+                _run_skip_batch_jit, (topo, tr_s, scal, rp_s, vec, vec),
+                (tr_s, scal, rp_s, vec, vec), (topo, devices[gi].id)))
+        else:
+            lowered.append(_aot_lower(
+                _run_scan_batch_jit, (topo, tr_s, num_cycles, rp_s, vec,
+                                      vec),
+                (tr_s, rp_s, vec, vec), (topo, num_cycles, devices[gi].id)))
+
+    def finish(gi: int) -> Tuple[object, float, int]:
+        key, low, lower_s = lowered[gi]
+        if low is None:
+            with _aot_lock:
+                return _aot_cache[key], 0.0, 0
+        compiled, c_s = _aot_finish(key, low)
+        return compiled, lower_s + c_s, 1
+
+    if n_topos > 1 and max_workers > 1:
+        with ThreadPoolExecutor(max_workers=max_workers) as pool:
+            built = list(pool.map(finish, range(n_topos)))
+    else:
+        built = [finish(gi) for gi in range(n_topos)]
+    compile_wall = time.perf_counter() - t_c0
+    compiled = [b[0] for b in built]
+    compile_seq = [b[1] for b in built]
+    fresh_total = sum(b[2] for b in built)
+
+    # ---- phase 2: stage + dispatch each topology's lanes concurrently ----
+    def run_group(gi: int):
+        idxs = groups[gi]
+        dev = devices[gi]
+        stacked, _ = stack_traces([trace_list[i] for i in idxs])
+        rp_stack = RuntimeParams.stack([rps[i] for i in idxs])
+        ql = jnp.asarray([qs[i] for i in idxs], jnp.int32)
+        rl = jnp.asarray([rs[i] for i in idxs], jnp.int32)
+        stacked, rp_stack, ql, rl = jax.device_put(
+            (stacked, rp_stack, ql, rl), dev)
+        t0 = time.perf_counter()
+        if cycle_skip:
+            nc = jax.device_put(jnp.int32(num_cycles), dev)
+            finals, steps = compiled[gi](stacked, nc, rp_stack, ql, rl)
+        else:
+            finals, steps = compiled[gi](stacked, rp_stack, ql, rl)
+        jax.block_until_ready(finals)
+        return finals, int(np.max(np.asarray(steps))), \
+            time.perf_counter() - t0
+
+    t_r0 = time.perf_counter()
+    if n_topos > 1 and max_workers > 1:
+        with ThreadPoolExecutor(max_workers=min(n_topos, max_workers)) \
+                as pool:
+            outs = list(pool.map(run_group, range(n_topos)))
+    else:
+        outs = [run_group(gi) for gi in range(n_topos)]
+    run_wall = time.perf_counter() - t_r0
+
+    # ---- merge: one result table keyed by the full config point ----------
+    results: List[Optional[SimResult]] = [None] * n_points
+    for gi, (finals, _, _) in enumerate(outs):
+        host = jax.device_get(finals)
+        for k, i in enumerate(groups[gi]):
+            n_i = int(trace_list[i].num_requests)
+            results[i] = SimResult(
+                cfg=lane_cfgs[i],
+                num_cycles=num_cycles,
+                t_intended=np.asarray(trace_list[i].t),
+                is_write=np.asarray(trace_list[i].is_write),
+                t_admit=np.asarray(host.t_admit)[k, :n_i],
+                t_dispatch=np.asarray(host.t_dispatch)[k, :n_i],
+                t_start=np.asarray(host.t_start)[k, :n_i],
+                t_complete=np.asarray(host.t_complete)[k, :n_i],
+                rdata=np.asarray(host.rdata)[k, :n_i],
+                counters={c: np.asarray(v)[k]
+                          for c, v in host.counters.items()},
+                blocked_arrival=int(np.asarray(host.blocked_arrival)[k]),
+                blocked_dispatch=int(np.asarray(host.blocked_dispatch)[k]),
+            )
+
+    own = {
+        "compiles": fresh_total,
+        "compile_s": sum(compile_seq),
+        "compile_s_wall": compile_wall,
+        "run_s": run_wall,
+        "steps": max(o[1] for o in outs),
+        "topologies": n_topos,
+        "per_topology": [
+            {"topology": dataclasses.asdict(topologies[gi]),
+             "lanes": len(groups[gi]),
+             "compile_s": compile_seq[gi],
+             "run_s": outs[gi][2],
+             "steps": outs[gi][1],
+             "device": devices[gi].id}
+            for gi in range(n_topos)],
+    }
+    if timings is not None:
+        for k in ("compiles", "topologies"):
+            timings[k] = timings.get(k, 0) + own[k]
+        for k in ("compile_s", "compile_s_wall", "run_s"):
+            timings[k] = timings.get(k, 0.0) + own[k]
+        timings["steps"] = max(timings.get("steps", 0), own["steps"])
+        timings.setdefault("per_topology", []).extend(own["per_topology"])
+    return TopoGridResult(points=points, results=results,
+                          topologies=topologies,
+                          topo_of_point=topo_of_point, timings=own)

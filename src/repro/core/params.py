@@ -146,8 +146,13 @@ class Topology:
     def validate(self) -> "Topology":
         for f in ("channels", "ranks", "bankgroups", "banks_per_group"):
             v = getattr(self, f)
-            assert v > 0 and (v & (v - 1)) == 0, f"{f}={v} must be a power of two"
-        assert self.queue_size >= 1
+            if v <= 0 or (v & (v - 1)) != 0:
+                raise ValueError(f"{f}={v} must be a power of two")
+        if self.queue_size < 1:
+            raise ValueError(f"queue_size={self.queue_size} must be >= 1")
+        if self.resp_queue_size < 1:
+            raise ValueError(
+                f"resp_queue_size={self.resp_queue_size} must be >= 1")
         return self
 
 
@@ -234,6 +239,53 @@ NUM_RUNTIME_PARAMS = len(RuntimeParams._fields)
 #: field -> row index of the packed kernel-ABI vector
 RP_INDEX = {name: i for i, name in enumerate(RuntimeParams._fields)}
 
+#: runtime fields that must be strictly positive: a zero or negative timing
+#: value would make a WAIT state instantaneous (or run its timer negative)
+#: and break every closed-form skip bound in the engine.
+POSITIVE_RUNTIME_FIELDS = tuple(
+    f for f in RuntimeParams._fields if f not in ("page_policy",
+                                                  "sched_policy"))
+
+
+def runtime_constraint_violations(vals) -> list:
+    """Cross-field constraints on a runtime parameter point, shared by
+    :meth:`MemSimConfig.validate` (config construction) and the engine's
+    ``params=`` override path (``engine._rp_i32``), so both fail with the
+    same message for the same bad point.
+
+    ``vals`` maps every :class:`RuntimeParams` field (policies as int
+    flags) to an int, or to ``None`` for a traced leaf that cannot be
+    inspected host-side — constraints with an unknown operand are skipped
+    (the caller inside the trace owns those). Returns the list of
+    violation messages, empty when the point is valid.
+    """
+    def known(*fields):
+        return all(vals.get(f) is not None for f in fields)
+
+    out = []
+    for f in POSITIVE_RUNTIME_FIELDS:
+        if known(f) and vals[f] < 1:
+            out.append(f"{f}={vals[f]} must be >= 1")
+    if known("tREFI", "tRFC") and vals["tREFI"] <= vals["tRFC"]:
+        out.append(
+            f"tREFI={vals['tREFI']} (refresh interval) must exceed "
+            f"tRFC={vals['tRFC']} (refresh cycle time)")
+    if known("tFAW", "tRRDL") and vals["tFAW"] < vals["tRRDL"]:
+        out.append(
+            f"tFAW={vals['tFAW']} (four-activation window) must be >= "
+            f"tRRDL={vals['tRRDL']} (ACT-to-ACT gap)")
+    if known("page_policy") and vals["page_policy"] not in (PAGE_CLOSED,
+                                                            PAGE_OPEN):
+        out.append(
+            f"page_policy flag {vals['page_policy']} not in "
+            f"{{{PAGE_CLOSED} (closed), {PAGE_OPEN} (open)}}")
+    if known("sched_policy") and vals["sched_policy"] not in (SCHED_FCFS,
+                                                              SCHED_FRFCFS):
+        out.append(
+            f"sched_policy flag {vals['sched_policy']} not in "
+            f"{{{SCHED_FCFS} (fcfs), {SCHED_FRFCFS} (frfcfs)}}")
+    return out
+
 
 @dataclasses.dataclass(frozen=True)
 class MemSimConfig(Topology):
@@ -294,10 +346,14 @@ class MemSimConfig(Topology):
 
     def validate(self) -> "MemSimConfig":
         Topology.validate(self)
-        if self.tREFI <= self.tRFC:
-            raise ValueError(
-                f"tREFI={self.tREFI} (refresh interval) must exceed "
-                f"tRFC={self.tRFC} (refresh cycle time)")
+        vals = {f: getattr(self, f) for f in RuntimeParams._fields
+                if f not in ("page_policy", "sched_policy")}
+        # __post_init__ guarantees the policy strings resolve
+        vals["page_policy"] = PAGE_POLICIES[self.page_policy]
+        vals["sched_policy"] = SCHED_POLICIES[self.sched_policy]
+        bad = runtime_constraint_violations(vals)
+        if bad:
+            raise ValueError("; ".join(bad))
         return self
 
 

@@ -72,6 +72,11 @@ class Fifo(NamedTuple):
         return self.peek(), ~self.empty()
 
     def push(self, item: Array, enable: Array) -> "Fifo":
+        # RTL ready & valid commitment: a push into a full queue does not
+        # commit, even if the caller forgot to gate its enable — otherwise
+        # ``count`` would exceed ``limit`` and the write index would wrap
+        # onto the head entry, corrupting the oldest in-flight request.
+        enable = jnp.logical_and(enable, ~self.full())
         q = self.capacity
         idx = (self.head + self.count) % q
         cur = self.buf[idx]
@@ -133,7 +138,12 @@ class BankedFifo(NamedTuple):
         return self.peek(), ~self.empty()
 
     def push_at(self, bank: Array, item: Array, enable: Array) -> "BankedFifo":
-        """Push ``item`` [F] into queue ``bank`` (scalar index), masked."""
+        """Push ``item`` [F] into queue ``bank`` (scalar index), masked.
+
+        Like :meth:`Fifo.push`, the enable is gated on the target bank not
+        being at its runtime limit (RTL ready & valid), so an ungated push
+        can never overrun the queue and wrap onto its head entry."""
+        enable = jnp.logical_and(enable, ~self.full()[bank])
         q = self.capacity
         idx = (self.head[bank] + self.count[bank]) % q
         cur = self.buf[bank, idx]
@@ -218,8 +228,17 @@ def rr_arbiter_grouped(bids: Array, ptrs: Array, groups: int) -> Tuple[Array, Ar
 
     ``bids`` bool[B] flattened channel-major; ``ptrs`` int32[groups].
     Returns (grant_mask bool[B], winners int32[groups], new_ptrs).
+
+    ``B`` must divide evenly into ``groups``: the reshape below would
+    otherwise silently truncate the trailing ``B % groups`` banks out of
+    arbitration (those banks could bid forever and never be granted), so a
+    non-divisible shape is a configuration error, not a best-effort case.
     """
     b = bids.shape[0]
+    if b % groups != 0:
+        raise ValueError(
+            f"rr_arbiter_grouped: {b} banks do not divide into {groups} "
+            f"groups; the trailing {b % groups} banks would never arbitrate")
     per = b // groups
     bids2 = bids.reshape(groups, per)
     rot = (jnp.arange(per, dtype=jnp.int32)[None, :] - ptrs[:, None]) % per

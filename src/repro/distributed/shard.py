@@ -70,3 +70,20 @@ def constrain(x: Array, *logical: Union[str, None, tuple]) -> Array:
 def named(mesh: Mesh, *logical: Union[str, None, tuple]) -> NamedSharding:
     with use_mesh(mesh, data_axes()):
         return NamedSharding(mesh, resolve(*logical))
+
+
+def round_robin_devices(n: int, devices: Optional[Sequence] = None) -> list:
+    """Device assignment for ``n`` concurrent whole-program dispatches.
+
+    Where :func:`named` shards ONE program's batch axis across the mesh,
+    this places ``n`` *independent* programs (e.g. one compiled executable
+    per distinct ``Topology`` in a multi-topology sweep) round-robin over
+    the visible devices, so their compiles and runs overlap instead of
+    queueing on device 0. Returns a list of ``n`` devices, ``devices[i %
+    D]`` for program ``i``."""
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if not devices:
+        raise ValueError("no devices visible")
+    return [devices[i % len(devices)] for i in range(n)]

@@ -74,6 +74,11 @@ def measure(name: str, traffic: llm_workload.WorkloadTraffic,
     return _row_from_result(name, res, ideal_span, bpr, horizon)
 
 
+#: timing fields the ideal open-page reference consumes (it ignores
+#: policies and queue depths) — the cache key subset for its spans.
+_IDEAL_FIELDS = ("tRP", "tRCDRD", "tRCDWR", "tCCDL", "tCL", "tRFC", "tREFI")
+
+
 def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
                grid: Mapping[str, Sequence],
                cfg: MemSimConfig = MemSimConfig(),
@@ -116,8 +121,6 @@ def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
     # the ideal reference ignores policies and queue depths, so cache its
     # span per (stream, timing-relevant parameter subset) — a policy/depth
     # grid costs one ideal scan per stream, not one per cell
-    _IDEAL_FIELDS = ("tRP", "tRCDRD", "tRCDWR", "tCCDL", "tCL", "tRFC",
-                     "tREFI")
     ideal_spans: Dict[tuple, int] = {}
 
     def ideal_span_for(si: int, c: MemSimConfig) -> int:
@@ -137,6 +140,73 @@ def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
         rows.append({"stream": sname, "config": dict(ov),
                      **dataclasses.asdict(bw)})
     return rows
+
+
+#: shape fields the ideal open-page reference is additionally sensitive to
+#: on a topology grid (bank counts change its per-bank recurrence); joined
+#: with ``_IDEAL_FIELDS`` to key its cached spans per stream.
+_IDEAL_TOPO_FIELDS = ("channels", "ranks", "bankgroups", "banks_per_group",
+                      "column_bits", "mem_words")
+
+
+def topo_grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
+                    grid: Mapping[str, Sequence],
+                    cfg: MemSimConfig = MemSimConfig(),
+                    target_requests: int = 4000, seed: int = 0,
+                    tail_cycles: int = 50_000,
+                    timings: Optional[dict] = None) -> List[Dict]:
+    """Effective bandwidth across *hardware shapes*: every (stream x
+    topology x runtime) cell via :func:`repro.core.engine.sweep_topologies`
+    — one overlapped compile per distinct :class:`Topology`, runtime axes
+    batched as lanes within each.
+
+    ``grid`` may mix structural axes (``channels``, ``banks_per_group``,
+    ...) with runtime axes (timings, policies, queue depths). Returns one
+    dict per cell: ``{stream, config, num_banks, efficiency,
+    read_latency_mean, refresh_share, ...}`` — the design-space table the
+    paper motivates (how much effective bandwidth does another channel or
+    doubled banks actually buy this workload?).
+    """
+    from repro.core.engine import sweep_topologies
+
+    rows = []
+    ideal_spans: Dict[tuple, int] = {}
+    for sname, traffic in streams:
+        tr, bpr = llm_workload.synthesize(traffic, target_requests,
+                                          seed=seed)
+        horizon = int(np.asarray(tr.t).max()) + tail_cycles
+        sweep = sweep_topologies(cfg, tr, grid, num_cycles=horizon,
+                                 timings=timings)
+        for point, res in zip(sweep.points, sweep.results):
+            c = res.cfg
+            key = ((sname,)
+                   + tuple(getattr(c, f) for f in _IDEAL_FIELDS)
+                   + tuple(getattr(c, f) for f in _IDEAL_TOPO_FIELDS))
+            if key not in ideal_spans:
+                ideal = simulate_ideal(c, tr)
+                ideal_spans[key] = int(np.asarray(ideal.t_complete).max())
+            bw = _row_from_result(sname, res, ideal_spans[key], bpr,
+                                  horizon)
+            rows.append({"stream": sname, "config": dict(point),
+                         "num_banks": c.num_banks,
+                         **dataclasses.asdict(bw)})
+    return rows
+
+
+def topo_llm_grid_study(arch_name: str, params_bytes_per_dev: float,
+                        kv_bytes_per_dev: float, act_bytes_per_dev: float,
+                        grid: Mapping[str, Sequence], **kw) -> List[Dict]:
+    """The ISSUE-4 topology loop: decode + prefill streams of one
+    architecture against a hardware-shape grid — effective bandwidth vs
+    channels/banks for the two serving-critical streams."""
+    streams = [
+        ("decode", llm_workload.decode_step_traffic(
+            arch_name, params_bytes_per_dev, kv_bytes_per_dev)),
+        ("prefill", llm_workload.prefill_step_traffic(
+            arch_name, params_bytes_per_dev, act_bytes_per_dev,
+            kv_bytes_per_dev * 0.5)),
+    ]
+    return topo_grid_study(streams, grid, **kw)
 
 
 def llm_grid_study(arch_name: str, params_bytes_per_dev: float,

@@ -1,0 +1,149 @@
+"""RTL-fidelity guards: queue overrun commitment, arbiter shape checks,
+and runtime-parameter cross-field validation.
+
+These pin the bugfix satellites of ISSUE 4: a push into a full queue must
+not commit (RTL ``ready & valid``), a grouped arbiter must refuse shapes
+that would silently drop trailing banks from arbitration, and a
+``params=`` override must fail with the same clear errors as config
+construction.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MemSimConfig, RuntimeParams, simulate_fast
+from repro.core.engine import _rp_i32
+from repro.core.params import (
+    POSITIVE_RUNTIME_FIELDS,
+    runtime_constraint_violations,
+)
+from repro.core.queues import BankedFifo, Fifo, rr_arbiter_grouped
+from repro.traces import BENCHMARKS
+
+
+def _item(v: int):
+    return jnp.full((4,), v, jnp.int32)
+
+
+class TestQueueOverrun:
+    """``push`` / ``push_at`` honor ``full()`` even when the caller's
+    enable is ungated: before the fix, ``count`` could exceed ``limit``
+    and the write index would wrap onto the head entry."""
+
+    def test_fifo_push_into_full_queue_does_not_commit(self):
+        f = Fifo.make(2)
+        f = f.push(_item(1), jnp.bool_(True))
+        f = f.push(_item(2), jnp.bool_(True))
+        assert int(f.count) == 2 and bool(f.full())
+        # ungated push at capacity: the write index would be
+        # (head + count) % 2 == head — overrun would corrupt the oldest
+        # in-flight entry AND push count past the limit
+        f2 = f.push(_item(99), jnp.bool_(True))
+        assert int(f2.count) == 2, "count exceeded the queue limit"
+        np.testing.assert_array_equal(np.asarray(f2.peek()),
+                                      np.asarray(_item(1)),
+                                      err_msg="head entry overwritten")
+        f3, popped = f2.pop(jnp.bool_(True))
+        assert int(popped[0]) == 1
+        _, popped = f3.pop(jnp.bool_(True))
+        assert int(popped[0]) == 2
+
+    def test_fifo_runtime_limit_full_does_not_commit(self):
+        # capacity 4 but runtime limit 2: overrun would not wrap, but
+        # count would exceed the swept depth — the compile-once sweep's
+        # correctness hinges on the limit being honored
+        f = Fifo.make(4, limit=2)
+        f = f.push(_item(1), jnp.bool_(True))
+        f = f.push(_item(2), jnp.bool_(True))
+        f2 = f.push(_item(3), jnp.bool_(True))
+        assert int(f2.count) == 2
+
+    def test_banked_push_at_full_bank_does_not_commit(self):
+        bf = BankedFifo.make(banks=2, capacity=2)
+        bf = bf.push_at(jnp.int32(0), _item(1), jnp.bool_(True))
+        bf = bf.push_at(jnp.int32(0), _item(2), jnp.bool_(True))
+        assert int(bf.count[0]) == 2
+        bf2 = bf.push_at(jnp.int32(0), _item(99), jnp.bool_(True))
+        assert int(bf2.count[0]) == 2, "bank queue overran its limit"
+        np.testing.assert_array_equal(np.asarray(bf2.peek()[0]),
+                                      np.asarray(_item(1)))
+        # the gate is per-bank: bank 1 still accepts
+        bf3 = bf2.push_at(jnp.int32(1), _item(7), jnp.bool_(True))
+        assert int(bf3.count[1]) == 1
+
+    def test_gated_push_still_works(self):
+        f = Fifo.make(2)
+        f = f.push(_item(5), jnp.bool_(True))
+        assert int(f.count) == 1
+        f = f.push(_item(6), jnp.bool_(False))  # disabled push: no commit
+        assert int(f.count) == 1
+
+
+class TestGroupedArbiter:
+    def test_divisible_shape_grants(self):
+        bids = jnp.asarray([True, False, False, True])
+        grant, winners, _ = rr_arbiter_grouped(bids, jnp.zeros(2, jnp.int32),
+                                               groups=2)
+        assert bool(grant[0]) and bool(grant[3])
+
+    def test_non_divisible_shape_raises(self):
+        bids = jnp.asarray([True] * 6)
+        with pytest.raises(ValueError, match="do not divide"):
+            rr_arbiter_grouped(bids, jnp.zeros(4, jnp.int32), groups=4)
+
+
+class TestRuntimeConstraintParity:
+    """Every cross-field constraint fires identically on the config path
+    (``MemSimConfig.validate``) and the override path (``engine._rp_i32``,
+    which every ``params=`` entry point funnels through)."""
+
+    @pytest.mark.parametrize("field", POSITIVE_RUNTIME_FIELDS)
+    def test_nonpositive_field_rejected_both_paths(self, field):
+        with pytest.raises(ValueError, match=field):
+            MemSimConfig(**{field: 0}).validate()
+        with pytest.raises(ValueError, match=field):
+            _rp_i32(RuntimeParams(**{field: 0}))
+
+    @pytest.mark.parametrize("bad,match", [
+        (dict(tREFI=200, tRFC=260), "tREFI"),
+        (dict(tFAW=2, tRRDL=6), "tFAW"),
+    ])
+    def test_cross_field_rejected_both_paths(self, bad, match):
+        with pytest.raises(ValueError, match=match):
+            MemSimConfig(**bad).validate()
+        with pytest.raises(ValueError, match=match):
+            _rp_i32(RuntimeParams(**bad))
+
+    def test_identical_error_text(self):
+        with pytest.raises(ValueError) as cfg_err:
+            MemSimConfig(tREFI=100, tRFC=260).validate()
+        with pytest.raises(ValueError) as rp_err:
+            _rp_i32(RuntimeParams(tREFI=100, tRFC=260))
+        assert str(cfg_err.value) == str(rp_err.value)
+
+    def test_bad_policy_flags_rejected_on_override(self):
+        # the facade can't even express a bad flag (strings are checked in
+        # __post_init__); a raw RuntimeParams can, and must be caught
+        with pytest.raises(ValueError, match="page_policy"):
+            _rp_i32(RuntimeParams(page_policy=7))
+        with pytest.raises(ValueError, match="sched_policy"):
+            _rp_i32(RuntimeParams(sched_policy=-1))
+
+    def test_params_override_entry_point_validates(self):
+        tr = BENCHMARKS["trace_example"](n=10, gap=5)
+        with pytest.raises(ValueError, match="tREFI"):
+            simulate_fast(MemSimConfig(), tr, num_cycles=100,
+                          params=RuntimeParams(tREFI=100, tRFC=260))
+
+    def test_traced_leaves_are_skipped(self):
+        # unknown (traced) operands skip their constraints instead of
+        # crashing or spuriously failing
+        vals = {f: None for f in RuntimeParams._fields}
+        assert runtime_constraint_violations(vals) == []
+        vals["tRFC"] = 260  # partner tREFI unknown: constraint skipped
+        assert runtime_constraint_violations(vals) == []
+
+    def test_valid_defaults_pass_both_paths(self):
+        MemSimConfig().validate()
+        _rp_i32(MemSimConfig().runtime())

@@ -1,0 +1,155 @@
+"""Multi-topology sweep orchestrator (engine.sweep_topologies).
+
+The contract: a (topology x runtime-params x policy x depth) grid runs
+with exactly ONE compile per distinct Topology (overlapped on a thread
+pool, zero on re-invoke), and every grid point is bit-identical to a
+per-config seed ``simulate`` run — across >= 3 topologies and both FSM
+backends.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MemSimConfig,
+    TopoGridResult,
+    simulate,
+    sweep_topologies,
+    topo_grid_points,
+)
+from repro.core import engine as engine_mod
+from repro.traces import BENCHMARKS
+
+CYCLES = 2_500 if os.environ.get("MEMSIM_SMOKE") else 4_000
+
+#: >= 3 distinct topologies (ranks axis) x 2 runtime lanes (tCL axis)
+GRID = {"ranks": [1, 2, 4], "tCL": [14, 18]}
+
+
+def small_trace(n=60, gap=5):
+    return BENCHMARKS["trace_example"](n=n, gap=gap)
+
+
+def assert_bit_identical(ref, fast, label=""):
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(
+            getattr(ref, f), getattr(fast, f), err_msg=f"{label}: {f}")
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{label}: counter {k}")
+    assert ref.blocked_arrival == fast.blocked_arrival, label
+    assert ref.blocked_dispatch == fast.blocked_dispatch, label
+
+
+def test_sweep_topologies_bit_exact_every_point():
+    """>= 3 topologies x >= 2 runtime lanes, every grid point vs its
+    per-config seed run, with exactly one compile per distinct Topology
+    and zero on re-invoke."""
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=16, mem_words=1 << 12)
+    engine_mod._aot_cache.clear()  # count this sweep's compiles from zero
+    timings = {}
+    sweep = sweep_topologies(cfg, tr, GRID, num_cycles=CYCLES,
+                             timings=timings)
+    assert len(sweep) == 6
+    assert len(sweep.topologies) == 3
+    assert timings["compiles"] == 3, "exactly one compile per Topology"
+    for point, res in zip(sweep.points, sweep.results):
+        assert res.cfg == dataclasses.replace(cfg, **point)
+        ref = simulate(res.cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"topo grid {point}")
+    # re-invoke: different horizon AND different runtime values, zero
+    # fresh compiles (the per-topology programs are cached)
+    timings2 = {}
+    sweep_topologies(cfg, tr, {"ranks": [1, 2, 4], "tCL": [15, 21]},
+                     num_cycles=CYCLES // 2, timings=timings2)
+    assert timings2["compiles"] == 0, "shape-identical grid must not recompile"
+
+
+def test_sweep_topologies_pallas_backend_bit_exact():
+    """Same contract through the Pallas FSM kernel path (interpret mode on
+    CPU — tiny trace/horizon). The seed reference runs the jnp backend, so
+    this also pins cross-backend identity per topology."""
+    tr = small_trace(n=30, gap=6)
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12,
+                       fsm_backend="pallas")
+    sweep = sweep_topologies(cfg, tr, {"ranks": [1, 2, 4], "tCL": [14, 18]},
+                             num_cycles=1_200)
+    assert len(sweep.topologies) == 3
+    for point, res in zip(sweep.points, sweep.results):
+        ref_cfg = dataclasses.replace(cfg, fsm_backend="jnp", **point)
+        ref = simulate(ref_cfg, tr, num_cycles=1_200)
+        assert_bit_identical(ref, res, f"pallas topo grid {point}")
+
+
+def test_sweep_topologies_queue_depth_does_not_split_groups():
+    """queue_size is a runtime depth: sweeping it adds lanes, never
+    topologies (capacity is unified grid-wide)."""
+    tr = small_trace(n=40)
+    timings = {}
+    sweep = sweep_topologies(
+        MemSimConfig(queue_size=16, mem_words=1 << 12), tr,
+        {"ranks": [1, 2], "queue_size": [4, 8, 16]},
+        num_cycles=CYCLES, timings=timings)
+    assert len(sweep) == 6
+    assert len(sweep.topologies) == 2
+    assert all(t.queue_size == 16 for t in sweep.topologies)
+    for point, res in zip(sweep.points, sweep.results):
+        ref = simulate(res.cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"depth lane {point}")
+
+
+def test_topo_grid_result_table_and_lookup():
+    tr = small_trace(n=30)
+    sweep = sweep_topologies(MemSimConfig(queue_size=8, mem_words=1 << 12),
+                             tr, {"ranks": [1, 2], "tCL": [14, 18]},
+                             num_cycles=1_500)
+    rows = sweep.table()
+    assert len(rows) == len(sweep) == 4
+    for row, point, res in zip(rows, sweep.points, sweep.results):
+        assert row["point"] == point
+        assert row["result"] is res
+        assert row["topology"] in sweep.topologies
+    res = sweep.result_at(ranks=2, tCL=18)
+    assert res.cfg.ranks == 2 and res.cfg.tCL == 18
+    with pytest.raises(KeyError):
+        sweep.result_at(ranks=2)  # ambiguous: two tCL lanes
+    with pytest.raises(KeyError):
+        sweep.result_at(ranks=8)  # no such point
+    assert isinstance(sweep, TopoGridResult)
+    # timings carry the per-topology compile/run split
+    per = sweep.timings["per_topology"]
+    assert len(per) == 2
+    assert all(p["lanes"] == 2 for p in per)
+
+
+def test_topo_grid_points_validation():
+    pts = topo_grid_points({"channels": [1, 2], "tCL": [14, 18]})
+    assert len(pts) == 4
+    assert pts[0] == {"channels": 1, "tCL": 14}
+    assert pts[-1] == {"channels": 2, "tCL": 18}  # last axis fastest
+    with pytest.raises(ValueError, match="unknown grid axis"):
+        topo_grid_points({"chanels": [1, 2]})
+    with pytest.raises(ValueError, match="empty"):
+        topo_grid_points({"channels": []})
+    with pytest.raises(ValueError):  # bad value fails at config validation
+        sweep_topologies(MemSimConfig(), small_trace(n=20),
+                         {"channels": [3]}, num_cycles=100)
+
+
+def test_sweep_topologies_per_point_traces():
+    """A sequence of traces (one per grid point) instead of a broadcast
+    single trace."""
+    trs = [small_trace(n=20, gap=4), small_trace(n=40, gap=6)]
+    sweep = sweep_topologies(MemSimConfig(queue_size=8, mem_words=1 << 12),
+                             trs, {"ranks": [1, 2]}, num_cycles=CYCLES)
+    for tr, res in zip(trs, sweep.results):
+        ref = simulate(res.cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, "per-point trace")
+    with pytest.raises(ValueError, match="traces for"):
+        sweep_topologies(MemSimConfig(), trs, {"ranks": [1, 2, 4]},
+                         num_cycles=100)
