@@ -49,6 +49,27 @@ def _row(name: str, us: float, derived: str) -> None:
                   "derived": derived})
 
 
+def _bit_mismatches(ref, res, label: str) -> List[str]:
+    """Field-for-field bit-identity check of one engine lane vs its seed
+    reference (records, read data, every counter, blocked totals); returns
+    the mismatching field labels — empty means bit-identical. Shared by
+    every bench that publishes a ``bit_identical`` verdict."""
+    import numpy as np
+
+    out = []
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        if not np.array_equal(getattr(ref, f), getattr(res, f)):
+            out.append(f"{label}:{f}")
+    for k in ref.counters:
+        if not np.array_equal(np.asarray(ref.counters[k]),
+                              np.asarray(res.counters[k])):
+            out.append(f"{label}:{k}")
+    if (ref.blocked_arrival != res.blocked_arrival
+            or ref.blocked_dispatch != res.blocked_dispatch):
+        out.append(f"{label}:blocked")
+    return out
+
+
 def bench_table2() -> None:
     from benchmarks import table2
 
@@ -261,17 +282,7 @@ def bench_event_skip() -> None:
     n_topos = len(grid["queue_size"])
     old_estimated = n_topos * compile_est + lanes * steady_s
 
-    mismatches = []
-    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
-        if not np.array_equal(getattr(ref, f), getattr(results[0], f)):
-            mismatches.append(f"lane0:{f}")
-    for k in ref.counters:
-        if not np.array_equal(np.asarray(ref.counters[k]),
-                              np.asarray(results[0].counters[k])):
-            mismatches.append(f"lane0:{k}")
-    if (ref.blocked_arrival != results[0].blocked_arrival
-            or ref.blocked_dispatch != results[0].blocked_dispatch):
-        mismatches.append("lane0:blocked")
+    mismatches = _bit_mismatches(ref, results[0], "lane0")
 
     speedup = old_estimated / max(new_wall, 1e-9)
     steps = timings.get("steps", nc)
@@ -295,6 +306,145 @@ def bench_event_skip() -> None:
     _row("engine_event_skip", new_wall * 1e6 / lanes,
          f"lanes={lanes};steps={steps}/{nc};"
          f"bit_identical={not mismatches};speedup={round(speedup, 2)}x")
+
+
+def bench_dvfs() -> None:
+    """ISSUE-5 acceptance: time-varying RuntimeParams (DVFS / thermal
+    throttling) as lanes of one compiled program, exact under
+    event-horizon skipping.
+
+    A ``sweep_grid`` over 8 distinct boost->sustained->throttled
+    ``ParamSchedule``\\ s (different throttle derates and refresh
+    scalings) of the WAIT-heavy LLM decode serving trace runs through ONE
+    compile (vmap mode); one lane is verified bit-identical against the
+    per-cycle reference ``simulate`` that re-resolves ``params_at`` every
+    cycle. The JSON ``engine.dvfs`` section records the compile count,
+    the executed-cycle fraction (acceptance: the event-horizon engine
+    still executes <25% of cycles despite stopping at every segment
+    boundary), the per-operating-point cycle attribution of the verified
+    lane, and the speedup vs per-cycle stepping (one per-cycle
+    ``simulate`` per schedule, the topology's compile charged once).
+    """
+    import jax
+    import numpy as np
+    from repro.core import MemSimConfig, lane_schedule, simulate, sweep_grid
+    from repro.traces import llm_workload
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+    tr = llm_workload.decode_serving_trace(tokens=64 if smoke else 96)
+    nc = int(np.asarray(tr.t).max()) + 3000
+    base = MemSimConfig()
+    schedules = [
+        llm_workload.thermal_throttle_schedule(
+            nc, throttle_scale=ts, throttle_refresh_scale=rs)
+        for ts in (1.25, 1.5, 1.75, 2.0) for rs in (2, 4)
+    ]
+    timings: Dict = {}
+    t0 = time.time()
+    results = sweep_grid(base, tr, {"schedule": schedules}, num_cycles=nc,
+                         batch_mode="vmap", shard=False, timings=timings)
+    new_wall = time.time() - t0
+    lanes = len(results)
+
+    # per-cycle reference: first call pays the (topology, S) compile, the
+    # second measures steady-state per-cycle stepping; the old path costs
+    # one steady run per schedule, the compile charged once
+    sched0 = lane_schedule(base, schedules[0])
+    t1 = time.time()
+    ref = simulate(base, tr, num_cycles=nc, params=sched0)
+    first_wall = time.time() - t1
+    t1 = time.time()
+    simulate(base, tr, num_cycles=nc, params=sched0)
+    steady_s = time.time() - t1
+    compile_est = max(first_wall - steady_s, 0.0)
+    old_estimated = compile_est + lanes * steady_s
+
+    mismatches = _bit_mismatches(ref, results[0], "lane0")
+
+    steps = timings.get("steps", nc)
+    frac = steps / nc
+    seg = np.asarray(results[0].counters["seg_cycles"], dtype=np.int64)
+    speedup = old_estimated / max(new_wall, 1e-9)
+    _ENGINE["dvfs"] = {
+        "trace": "llm_decode_serving",
+        "schedules": len(schedules),
+        "segments_per_schedule": 3,
+        "lanes": lanes,
+        "num_cycles": nc,
+        "devices": len(jax.devices()),
+        "compiles": timings.get("compiles"),
+        "steps_executed": steps,
+        "steps_fraction": round(frac, 4),
+        "steps_below_quarter": frac < 0.25,
+        "seg_cycles_lane0": [int(c) for c in seg],
+        "seg_cycle_frac_lane0": [round(float(c) / nc, 4) for c in seg],
+        "new_sweep_s": round(new_wall, 2),
+        "percycle_compile_s": round(compile_est, 2),
+        "percycle_steady_run_s": round(steady_s, 2),
+        "old_sweep_s_estimated": round(old_estimated, 2),
+        "bit_identical": not mismatches,
+        "mismatches": mismatches,
+        "speedup": round(speedup, 2),
+    }
+    _row("engine_dvfs", new_wall * 1e6 / lanes,
+         f"schedules={len(schedules)};compiles={timings.get('compiles')};"
+         f"steps={steps}/{nc};bit_identical={not mismatches};"
+         f"speedup={round(speedup, 2)}x")
+
+
+def bench_mesh_scaleout() -> None:
+    """Multi-device scale-out (ROADMAP): per-device throughput of a
+    decode-serving batch dispatched round-robin across every visible
+    device (lanes mode — one compiled executable per device, lanes
+    concurrent from worker threads).
+
+    The JSON ``engine.mesh`` section records one row per device with the
+    lanes it served, executed steps, and steps/sec — the per-device
+    throughput numbers the ROADMAP scale-out item asks for (the pjit/mesh
+    sharding semantics themselves are pinned by
+    ``tests/test_multidevice_shard.py`` on a forced multi-device host).
+    """
+    import jax
+    import numpy as np
+    from repro.core import MemSimConfig, simulate_batch
+    from repro.traces import llm_workload
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+    tr = llm_workload.decode_serving_trace(tokens=32 if smoke else 64)
+    nc = int(np.asarray(tr.t).max()) + 3000
+    n_dev = len(jax.devices())
+    lanes = max(2 * n_dev, 4)
+    timings: Dict = {}
+    t0 = time.time()
+    simulate_batch(MemSimConfig(), tr, num_cycles=nc,
+                   queue_sizes=[128] * lanes, batch_mode="lanes",
+                   timings=timings)
+    wall = time.time() - t0
+
+    per_dev: Dict[int, Dict] = {}
+    for rec in timings.get("per_lane", []):
+        d = per_dev.setdefault(rec["device"], {"device": rec["device"],
+                                               "lanes": 0, "steps": 0,
+                                               "run_s": 0.0})
+        d["lanes"] += 1
+        d["steps"] += rec["steps"]
+        d["run_s"] += rec["run_s"]
+    rows = sorted(per_dev.values(), key=lambda d: d["device"])
+    for d in rows:
+        d["run_s"] = round(d["run_s"], 3)
+        d["steps_per_sec"] = round(d["steps"] / max(d["run_s"], 1e-9))
+    _ENGINE["mesh"] = {
+        "devices": n_dev,
+        "devices_used": len(rows),
+        "lanes": lanes,
+        "num_cycles": nc,
+        "wall_s": round(wall, 2),
+        "compiles": timings.get("compiles"),
+        "per_device": rows,
+    }
+    _row("engine_mesh_scaleout", wall * 1e6 / lanes,
+         f"devices={len(rows)}/{n_dev};lanes={lanes};"
+         f"steps_per_sec_dev0={rows[0]['steps_per_sec'] if rows else 0}")
 
 
 def bench_param_grid() -> None:
@@ -359,16 +509,7 @@ def bench_param_grid() -> None:
         run_s_sum += run_s
         if first_wall is not None:
             topo_compile_s[topo] = max(first_wall - run_s, 0.0)
-        for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
-            if not np.array_equal(getattr(ref, f), getattr(results[i], f)):
-                mismatches.append(f"lane{i}:{f}")
-        for k in ref.counters:
-            if not np.array_equal(np.asarray(ref.counters[k]),
-                                  np.asarray(results[i].counters[k])):
-                mismatches.append(f"lane{i}:{k}")
-        if (ref.blocked_arrival != results[i].blocked_arrival
-                or ref.blocked_dispatch != results[i].blocked_dispatch):
-            mismatches.append(f"lane{i}:blocked")
+        mismatches.extend(_bit_mismatches(ref, results[i], f"lane{i}"))
     # the full grid spans the same topologies as the subset (queue_size is
     # the only Topology-affecting axis and the subset covers every value
     # of every axis by construction)
@@ -461,18 +602,8 @@ def bench_topo_grid() -> None:
         run_s = time.time() - t1
         run_s_sum += run_s
         topo_compile_s[c.topology()] = max(first_wall - run_s, 0.0)
-        res = sweep.results[i]
-        for f in ("t_admit", "t_dispatch", "t_start", "t_complete",
-                  "rdata"):
-            if not np.array_equal(getattr(ref, f), getattr(res, f)):
-                mismatches.append(f"lane{i}:{f}")
-        for k in ref.counters:
-            if not np.array_equal(np.asarray(ref.counters[k]),
-                                  np.asarray(res.counters[k])):
-                mismatches.append(f"lane{i}:{k}")
-        if (ref.blocked_arrival != res.blocked_arrival
-                or ref.blocked_dispatch != res.blocked_dispatch):
-            mismatches.append(f"lane{i}:blocked")
+        mismatches.extend(_bit_mismatches(ref, sweep.results[i],
+                                          f"lane{i}"))
     old_estimated = (sum(topo_compile_s.values())
                      + run_s_sum / len(verify) * lanes)
     speedup = old_estimated / max(new_wall, 1e-9)
@@ -617,8 +748,10 @@ def main(argv=None) -> None:
     bench_fig9()
     bench_engine()
     bench_event_skip()
+    bench_dvfs()
     bench_param_grid()
     bench_topo_grid()
+    bench_mesh_scaleout()
     bench_open_page()
     bench_effective_bw()
     bench_llm_grid()

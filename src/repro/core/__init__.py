@@ -8,13 +8,16 @@ DRAMSim3-like open-page reference it is evaluated against.
 from repro.core.params import (
     DEFAULT_CONFIG,
     MemSimConfig,
+    ParamSchedule,
     RuntimeParams,
     Topology,
+    as_schedule,
 )
 from repro.core.simulator import SimResult, Trace, simulate
 from repro.core.engine import (
     TopoGridResult,
     grid_points,
+    lane_schedule,
     simulate_fast,
     simulate_batch,
     stack_traces,
@@ -29,8 +32,10 @@ from repro.core import stats
 __all__ = [
     "DEFAULT_CONFIG",
     "MemSimConfig",
+    "ParamSchedule",
     "RuntimeParams",
     "Topology",
+    "as_schedule",
     "SimResult",
     "Trace",
     "simulate",
@@ -38,6 +43,7 @@ __all__ = [
     "simulate_batch",
     "stack_traces",
     "grid_points",
+    "lane_schedule",
     "sweep_grid",
     "sweep_queue_sizes",
     "sweep_topologies",

@@ -12,6 +12,16 @@ Every timing value and the page policy come from the traced
 ``jnp.where`` on the ``PAGE_OPEN`` flag, so a single compiled program
 serves both policies (and any Table-1 timing point); only the data differs.
 
+Time-varying parameters (DVFS/thermal schedules): ``fsm_update`` is the
+*instantaneous* combinational network — its ``rp`` argument is the
+operating point governing THIS cycle, resolved by the caller through
+``ParamSchedule.params_at(cycle)`` (``repro.core.simulator.cycle_step``
+does the one resolve per cycle; the Pallas kernel twin resolves the packed
+``[S, NP]`` schedule in-kernel). WAIT timers latch their duration from the
+params active at the grant cycle and merely count down across schedule
+boundaries — an in-flight command completes at its issued timing, exactly
+the per-cycle reference semantics.
+
 Closed-page transitions (the paper's policy; write identical with WR):
 
   IDLE --pop--> ACT_ISSUE --grant--> ACT_WAIT(tRCD) --> RW_ISSUE
@@ -152,8 +162,13 @@ def cycles_until_actionable(rp: RuntimeParams, bank: BankState,
       (:func:`repro.core.dram_model.legal_issue_cycle`).
 
     This is the FSM-local half of the event-horizon bound the skipping
-    engine takes a vectorized min over. The Pallas backend has a packed-ABI
-    twin (``repro.kernels.bank_fsm``) that must agree bank-for-bank — the
+    engine takes a vectorized min over. ``rp`` is the operating point of
+    the segment containing ``cycle``; the bound is a closed form of
+    constant-``rp`` per-cycle updates, so it is valid exactly up to the
+    next ``ParamSchedule`` boundary — the engine mins that boundary into
+    the horizon, guaranteeing no skip outlives the segment this bound was
+    computed under. The Pallas backend has a packed-ABI twin
+    (``repro.kernels.bank_fsm``) that must agree bank-for-bank — the
     kernel tests enforce it.
     """
     st = bank.st

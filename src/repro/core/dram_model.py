@@ -82,7 +82,12 @@ def legal_issue_cycle(
     the same value as the "cycles until the queue head becomes issuable"
     bound — the two can never disagree.
     The windows only move when a command is granted (:func:`record_issue`),
-    so between grants the returned cycle is a constant of the state.
+    so between grants the returned cycle is a constant of the state *and
+    the operating point*: ``rp`` is the params of the schedule segment
+    governing the evaluation cycle (``ParamSchedule.params_at``), and the
+    returned absolute cycle is only meaningful within that segment — a
+    DVFS boundary re-prices every window, which is why the event-horizon
+    engine caps skips at the next boundary and re-evaluates there.
     """
     la = timing.last_act[rank_of_bank]           # [B]
     aw = timing.act_win[rank_of_bank]            # [B, 4]
@@ -137,6 +142,12 @@ def wait_duration(rp: RuntimeParams, cmd: Array, is_write: Array) -> Array:
     PRE  -> tRP
     REF  -> tRFC
     SREF_EXIT -> tXS
+
+    Under a time-varying :class:`~repro.core.params.ParamSchedule`, ``rp``
+    is the operating point of the *grant* cycle: the duration is latched
+    into the bank's timer at issue and counts down unchanged across
+    schedule boundaries (in-flight commands complete at their issued
+    timing).
     """
     from repro.core.params import CMD_PRE, CMD_REF, CMD_SREF_ENTER, CMD_SREF_EXIT
 

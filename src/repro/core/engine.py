@@ -51,6 +51,16 @@ those bottlenecks while staying **bit-exact** against the reference:
    runs a whole (timing x page-policy x scheduler x refresh x queue-depth)
    Cartesian grid as batch lanes of ONE compiled XLA program.
 
+   Parameters are further a function of *time*: a lane may carry a whole
+   :class:`ParamSchedule` (piecewise-constant DVFS / thermal-throttle /
+   refresh-stepping operating points) instead of one constant point — the
+   ``"schedule"`` grid axis. Every consumer resolves through the single
+   ``params_at(schedule, cycle)`` resolver; the event horizon additionally
+   mins in the next segment boundary (an operating-point change is an
+   event), so skipping stays bit-exact vs a per-cycle reference that
+   re-resolves ``params_at`` every cycle, and ``counters["seg_cycles"]``
+   attributes executed+skipped cycles to operating points exactly.
+
 5. **Multi-topology sweeps** — the one axis that genuinely forces new
    programs (the hardware *shape*: channels/ranks/bankgroups/banks) is
    orchestrated by :func:`sweep_topologies`: the (topology x runtime) grid
@@ -91,10 +101,12 @@ from repro.core.bank_fsm import cycles_until_actionable, wait_mask
 from repro.core.params import (
     CMD_NOP,
     MemSimConfig,
+    ParamSchedule,
     RuntimeParams,
     S_IDLE,
     S_SREF,
     Topology,
+    as_schedule,
 )
 from repro.core.simulator import (
     SimResult,
@@ -114,7 +126,7 @@ _PAD_T = 0x3FFFFFFF  # arrival time for padded trace slots: never due
 # event-horizon cycle-skipping
 # --------------------------------------------------------------------------
 
-def _next_event(topo: Topology, rp: RuntimeParams, trace: Trace,
+def _next_event(topo: Topology, sched: ParamSchedule, trace: Trace,
                 state: SimState, nxt: Array, horizon: Array) -> Array:
     """Number of provably-inert cycles starting at cycle ``nxt`` — the
     distance to the event horizon.
@@ -135,20 +147,37 @@ def _next_event(topo: Topology, rp: RuntimeParams, trace: Trace,
     never swallows a cycle in which a timer expires, a blocked bid becomes
     legal, an arrival lands, a refresh window opens, or a self-refresh
     threshold is crossed — those cycles run through ``cycle_step``. All
-    bounds are data (traced ``RuntimeParams``), so one compiled program
-    serves every parameter point. FR-FCFS head promotion needs no bound:
-    it is idempotent on a frozen queue/open-row state, so deferring it to
-    the next executed cycle is observationally identical.
+    bounds are data (traced ``ParamSchedule``), so one compiled program
+    serves every parameter point and every schedule of a given segment
+    count. FR-FCFS head promotion needs no bound: it is idempotent on a
+    frozen queue/open-row state, so deferring it to the next executed
+    cycle is observationally identical.
+
+    Time-varying params: every bound here is a closed form of per-cycle
+    updates under the operating point governing the jumped-*from* range —
+    ``params_at(nxt)``, the segment containing every cycle the skip could
+    cover. A DVFS boundary invalidates those closed forms (a shrunk tRFC
+    opens refresh windows earlier, re-priced tRRDL/tFAW/tCCDL/tWTR/tRTW
+    windows move every blocked bid's legality), so the **next segment
+    boundary is itself an event**: it joins the vectorized min, no skip
+    ever crosses it, and the boundary cycle executes through
+    ``cycle_step`` — whose own resolver then reads the new segment's
+    params. The next ``_next_event`` evaluation after that jump resolves
+    ``params_at`` in the jumped-to segment, so WAIT-expiry and blocked-bid
+    legality bounds are always evaluated against the params active where
+    the clock actually stands. This is what keeps the engine bit-exact vs
+    a per-cycle reference that re-resolves ``params_at`` every cycle.
     """
     def bound(_):
+        rp = sched.params_at(nxt)
         bank = state.bank
         st = bank.st
         in_wait = wait_mask(st)
         is_idle = st == S_IDLE
         is_sref = st == S_SREF
 
-        eligible, cmds, legal_at = issue_eligibility(topo, rp, state.timing,
-                                                     bank, nxt)
+        eligible, cmds, legal_at = issue_eligibility(topo, sched,
+                                                     state.timing, bank, nxt)
         blocked_bid = (cmds != CMD_NOP) & ~eligible
 
         # gate: nothing can happen at cycle `nxt` except timer/counter ticks
@@ -164,7 +193,8 @@ def _next_event(topo: Topology, rp: RuntimeParams, trace: Trace,
             from repro.kernels.bank_fsm.ops import bank_event_bound
             from repro.kernels.bank_fsm.ref import pack_state
 
-            local = bank_event_bound(pack_state(bank), nxt, rp, True, True)
+            local = bank_event_bound(pack_state(bank), nxt, sched, True,
+                                     True)
         else:
             local = cycles_until_actionable(rp, bank, nxt)
         # a blocked bid becomes actionable the cycle its command turns legal
@@ -174,6 +204,9 @@ def _next_event(topo: Topology, rp: RuntimeParams, trace: Trace,
         idx = jnp.minimum(state.next_arrival, n - 1)
         arrival = jnp.where(state.next_arrival < n, trace.t[idx] - nxt, _INF)
         b = jnp.minimum(jnp.minimum(per_bank, arrival), horizon - nxt)
+        # the next operating-point change is an event: no closed-form bound
+        # computed under this segment's params may outlive the segment
+        b = jnp.minimum(b, sched.next_boundary(nxt) - nxt)
         return jnp.where(gate, jnp.maximum(b, 0), 0).astype(jnp.int32)
 
     # cheap scalar necessary conditions first: with work in the global
@@ -185,10 +218,16 @@ def _next_event(topo: Topology, rp: RuntimeParams, trace: Trace,
     return jax.lax.cond(maybe, bound, lambda _: jnp.int32(0), None)
 
 
-def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
-    """Fast-forward ``delta`` inert cycles, replicating exactly what the
-    per-cycle engine would have accumulated over them (identity at
-    ``delta == 0``)."""
+def _apply_skip(topo: Topology, sched: ParamSchedule, state: SimState,
+                delta: Array, nxt: Array) -> SimState:
+    """Fast-forward ``delta`` inert cycles starting at ``nxt``, replicating
+    exactly what the per-cycle engine would have accumulated over them
+    (identity at ``delta == 0``).
+
+    ``_next_event`` caps every delta at the next schedule boundary, so all
+    skipped cycles share one segment — ``segment_at(nxt)`` — and the whole
+    delta's counter contribution attributes to that operating point (see
+    :func:`repro.core.power.skip_counters`)."""
     st = state.bank.st
     in_wait = wait_mask(st)
     is_idle = st == S_IDLE
@@ -204,7 +243,7 @@ def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
     bank = state.bank._replace(timer=timer.astype(jnp.int32),
                                idle_ctr=idle_ctr)
     counters = power_lib.skip_counters(state.counters, st, delta,
-                                       topo.channels)
+                                       topo.channels, sched.segment_at(nxt))
     return state._replace(bank=bank, counters=counters)
 
 
@@ -213,20 +252,22 @@ def _apply_skip(topo: Topology, state: SimState, delta: Array) -> SimState:
 # --------------------------------------------------------------------------
 
 def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
-                   rp: RuntimeParams, queue_limit: Array, resp_limit: Array
-                   ) -> Tuple[SimState, Array]:
+                   sched: ParamSchedule, queue_limit: Array,
+                   resp_limit: Array) -> Tuple[SimState, Array]:
     """Event-driven while-loop engine: execute one ``cycle_step`` per
     event, then jump the clock to the next event horizon. ``num_cycles``
-    and every RuntimeParams value are traced, so one compiled program
-    serves every horizon and parameter point. Returns (final state, number
-    of cycle_step executions actually performed).
+    and every ParamSchedule value/boundary are traced, so one compiled
+    program serves every horizon, parameter point and schedule (of a given
+    segment count). Returns (final state, number of cycle_step executions
+    actually performed).
 
     The loop condition is a scalar, so XLA keeps the carried buffers
     in-place — no per-iteration state copies (this is why the batched
     variant below shares one clock across lanes instead of vmapping the
     whole while loop, whose batching rule would select-copy the full state
     every step)."""
-    state0 = init_state(topo, rp, trace.num_requests, queue_limit, resp_limit)
+    state0 = init_state(topo, sched, trace.num_requests, queue_limit,
+                        resp_limit)
     num_cycles = jnp.asarray(num_cycles, jnp.int32)
 
     def cond(carry):
@@ -235,9 +276,9 @@ def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
 
     def body(carry):
         state, t, steps = carry
-        state = cycle_step(topo, rp, trace, state, t)
-        delta = _next_event(topo, rp, trace, state, t + 1, num_cycles)
-        state = _apply_skip(topo, state, delta)
+        state = cycle_step(topo, sched, trace, state, t)
+        delta = _next_event(topo, sched, trace, state, t + 1, num_cycles)
+        state = _apply_skip(topo, sched, state, delta, t + 1)
         return (state, t + 1 + delta, steps + 1)
 
     state, _, steps = jax.lax.while_loop(
@@ -246,23 +287,25 @@ def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
 
 
 def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
-                         rps: RuntimeParams, queue_limits: Array,
+                         scheds: ParamSchedule, queue_limits: Array,
                          resp_limits: Array) -> Tuple[SimState, Array]:
     """Batched event-horizon skipping on a SHARED clock (vmap mode).
 
-    Lanes carry heterogeneous RuntimeParams (``rps`` has a leading batch
-    axis on every field): timings, policies, refresh intervals and queue
-    limits all differ per lane inside ONE device program. All lanes see
-    the same cycle counter; after each jointly-executed cycle the clock
-    jumps by the *joint* event horizon ``delta = min over lanes`` of each
-    lane's inert bound, so a jump happens only when every lane is provably
-    quiescent and each lane's skipped cycles are inert for it — per-lane
-    exactness is untouched. Sharing the clock keeps the while condition
-    scalar: no per-lane live-masking of the carry (which would copy every
-    queue/memory buffer each step) and in-place buffer updates survive."""
+    Lanes carry heterogeneous ParamSchedules (``scheds`` has a leading
+    batch axis on every boundary/value leaf): timings, policies, refresh
+    intervals, queue limits and whole DVFS schedules all differ per lane
+    inside ONE device program. All lanes see the same cycle counter; after
+    each jointly-executed cycle the clock jumps by the *joint* event
+    horizon ``delta = min over lanes`` of each lane's inert bound (each of
+    which already mins in that lane's next schedule boundary), so a jump
+    happens only when every lane is provably quiescent and each lane's
+    skipped cycles are inert for it — per-lane exactness is untouched.
+    Sharing the clock keeps the while condition scalar: no per-lane
+    live-masking of the carry (which would copy every queue/memory buffer
+    each step) and in-place buffer updates survive."""
     states = jax.vmap(
-        lambda tr, rp, ql, rl: init_state(topo, rp, tr.num_requests, ql, rl)
-    )(traces, rps, queue_limits, resp_limits)
+        lambda tr, sc, ql, rl: init_state(topo, sc, tr.num_requests, ql, rl)
+    )(traces, scheds, queue_limits, resp_limits)
     num_cycles = jnp.asarray(num_cycles, jnp.int32)
 
     def cond(carry):
@@ -272,14 +315,16 @@ def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
     def body(carry):
         states, t, steps = carry
         states = jax.vmap(
-            lambda tr, rp, st: cycle_step(topo, rp, tr, st, t)
-        )(traces, rps, states)
+            lambda tr, sc, st: cycle_step(topo, sc, tr, st, t)
+        )(traces, scheds, states)
         deltas = jax.vmap(
-            lambda tr, rp, st: _next_event(topo, rp, tr, st, t + 1,
+            lambda tr, sc, st: _next_event(topo, sc, tr, st, t + 1,
                                            num_cycles)
-        )(traces, rps, states)
+        )(traces, scheds, states)
         delta = deltas.min()
-        states = jax.vmap(lambda st: _apply_skip(topo, st, delta))(states)
+        states = jax.vmap(
+            lambda sc, st: _apply_skip(topo, sc, st, delta, t + 1)
+        )(scheds, states)
         return (states, t + 1 + delta, steps + 1)
 
     states, _, steps = jax.lax.while_loop(
@@ -288,13 +333,14 @@ def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
 
 
 def _run_scan_core(topo: Topology, trace: Trace, num_cycles: int,
-                   rp: RuntimeParams, queue_limit: Array, resp_limit: Array
-                   ) -> Tuple[SimState, Array]:
+                   sched: ParamSchedule, queue_limit: Array,
+                   resp_limit: Array) -> Tuple[SimState, Array]:
     """Plain per-cycle scan, but with runtime limits/params (compile-once)."""
-    state0 = init_state(topo, rp, trace.num_requests, queue_limit, resp_limit)
+    state0 = init_state(topo, sched, trace.num_requests, queue_limit,
+                        resp_limit)
 
     def step(carry, cycle):
-        return cycle_step(topo, rp, trace, carry, cycle), None
+        return cycle_step(topo, sched, trace, carry, cycle), None
 
     final, _ = jax.lax.scan(step, state0,
                             jnp.arange(num_cycles, dtype=jnp.int32))
@@ -302,30 +348,30 @@ def _run_scan_core(topo: Topology, trace: Trace, num_cycles: int,
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run_skip_jit(topo, trace, num_cycles, rp, queue_limit, resp_limit):
-    return _run_skip_core(topo, trace, num_cycles, rp, queue_limit,
+def _run_skip_jit(topo, trace, num_cycles, sched, queue_limit, resp_limit):
+    return _run_skip_core(topo, trace, num_cycles, sched, queue_limit,
                           resp_limit)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_scan_jit(topo, trace, num_cycles, rp, queue_limit, resp_limit):
-    return _run_scan_core(topo, trace, num_cycles, rp, queue_limit,
+def _run_scan_jit(topo, trace, num_cycles, sched, queue_limit, resp_limit):
+    return _run_scan_core(topo, trace, num_cycles, sched, queue_limit,
                           resp_limit)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run_skip_batch_jit(topo, traces, num_cycles, rps, queue_limits,
+def _run_skip_batch_jit(topo, traces, num_cycles, scheds, queue_limits,
                         resp_limits):
-    return _run_skip_batch_core(topo, traces, num_cycles, rps, queue_limits,
-                                resp_limits)
+    return _run_skip_batch_core(topo, traces, num_cycles, scheds,
+                                queue_limits, resp_limits)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_scan_batch_jit(topo, traces, num_cycles, rps, queue_limits,
+def _run_scan_batch_jit(topo, traces, num_cycles, scheds, queue_limits,
                         resp_limits):
-    fn = lambda tr, rp, ql, rl: _run_scan_core(topo, tr, num_cycles, rp,
+    fn = lambda tr, sc, ql, rl: _run_scan_core(topo, tr, num_cycles, sc,
                                                ql, rl)
-    return jax.vmap(fn)(traces, rps, queue_limits, resp_limits)
+    return jax.vmap(fn)(traces, scheds, queue_limits, resp_limits)
 
 
 # --------------------------------------------------------------------------
@@ -383,21 +429,23 @@ def stack_traces(traces: Sequence[Trace],
     return stacked, ns
 
 
-def _lane_executable(topo: Topology, n_max: int, num_cycles: int,
-                     cycle_skip: bool, device) -> Tuple[object, float]:
+def _lane_executable(topo: Topology, n_max: int, num_segments: int,
+                     num_cycles: int, cycle_skip: bool, device
+                     ) -> Tuple[object, float]:
     """AOT-compile the single-lane runner for one device (cached).
 
     Lowering uses ShapeDtypeStructs committed to ``device``, so each device
     gets its own executable once and every lane dispatched to that device
-    reuses it — including across horizons and RuntimeParams points
-    (``num_cycles`` and the whole parameter pytree are runtime values for
-    the skipping engine). Returns (executable, compile seconds — 0.0 on
-    cache hit)."""
+    reuses it — including across horizons, RuntimeParams points and whole
+    ParamSchedules (``num_cycles`` and every boundary/value of the
+    schedule pytree are runtime values for the skipping engine; only the
+    segment count ``num_segments`` is a shape). Returns (executable,
+    compile seconds — 0.0 on cache hit)."""
     from jax.sharding import SingleDeviceSharding
 
     sharding = SingleDeviceSharding(device)
-    key = ("lane", topo, n_max, None if cycle_skip else num_cycles,
-           cycle_skip, device.id)
+    key = ("lane", topo, n_max, num_segments,
+           None if cycle_skip else num_cycles, cycle_skip, device.id)
     with _aot_lock:
         cached = _aot_cache.get(key)
     if cached is not None:
@@ -409,13 +457,16 @@ def _lane_executable(topo: Topology, n_max: int, num_cycles: int,
     tr_s = Trace(t=sds((n_max,)), addr=sds((n_max,)),
                  is_write=sds((n_max,)), wdata=sds((n_max,)))
     scal = sds(())
-    rp_s = RuntimeParams(*([scal] * len(RuntimeParams._fields)))
+    seg = sds((num_segments,))
+    sched_s = ParamSchedule(
+        boundaries=seg,
+        values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
     t0 = time.perf_counter()
     if cycle_skip:
-        compiled = _run_skip_jit.lower(topo, tr_s, scal, rp_s, scal,
+        compiled = _run_skip_jit.lower(topo, tr_s, scal, sched_s, scal,
                                        scal).compile()
     else:
-        compiled = _run_scan_jit.lower(topo, tr_s, num_cycles, rp_s, scal,
+        compiled = _run_scan_jit.lower(topo, tr_s, num_cycles, sched_s, scal,
                                        scal).compile()
     compile_s = time.perf_counter() - t0
     with _aot_lock:
@@ -424,7 +475,7 @@ def _lane_executable(topo: Topology, n_max: int, num_cycles: int,
 
 
 def _run_lanes(topo: Topology, trace_list: List[Trace], num_cycles: int,
-               rps: List[RuntimeParams], qs: List[int], rs: List[int],
+               scheds: List[ParamSchedule], qs: List[int], rs: List[int],
                cycle_skip: bool, shard: bool,
                timings: Optional[dict]) -> Tuple[List[SimState], List[int]]:
     """Lanes mode: each lane runs the single-lane engine; lanes round-robin
@@ -433,38 +484,47 @@ def _run_lanes(topo: Topology, trace_list: List[Trace], num_cycles: int,
     *independent* cycle-skipping — a drained lane fast-forwards even while
     another is still saturated — and each lane's op stream is identical to
     ``simulate_fast``. One compiled executable per device serves every
-    lane, horizon and RuntimeParams point."""
+    lane, horizon, RuntimeParams point and ParamSchedule (of the common
+    padded segment count). ``timings`` (if given) additionally gains
+    ``per_lane``: one ``{lane, device, steps, run_s}`` record per lane —
+    the per-device throughput attribution the multi-device scale-out
+    benchmarks report."""
     from concurrent.futures import ThreadPoolExecutor
 
     n_max = max(int(tr.num_requests) for tr in trace_list)
     padded = [_pad_trace(tr, n_max) for tr in trace_list]
     devices = jax.devices() if shard else jax.devices()[:1]
     d_count = min(len(devices), len(padded))
+    num_segments = scheds[0].num_segments
 
     compile_s = 0.0
     compiles = 0
     compiled = []
     for di in range(d_count):
-        exe, c_s = _lane_executable(topo, n_max, num_cycles, cycle_skip,
-                                    devices[di])
+        exe, c_s = _lane_executable(topo, n_max, num_segments, num_cycles,
+                                    cycle_skip, devices[di])
         compiled.append(exe)
         compile_s += c_s
         compiles += int(c_s > 0.0)
 
     def work(i: int):
         dev = devices[i % d_count]
+        t_l0 = time.perf_counter()
         tr = jax.device_put(padded[i], dev)
-        rp = jax.tree_util.tree_map(
-            lambda x: jax.device_put(jnp.asarray(x, jnp.int32), dev), rps[i])
+        sc = jax.tree_util.tree_map(
+            lambda x: jax.device_put(jnp.asarray(x, jnp.int32), dev),
+            scheds[i])
         ql = jax.device_put(jnp.int32(qs[i]), dev)
         rl = jax.device_put(jnp.int32(rs[i]), dev)
         if cycle_skip:
             nc = jax.device_put(jnp.int32(num_cycles), dev)
-            final, steps = compiled[i % d_count](tr, nc, rp, ql, rl)
+            final, steps = compiled[i % d_count](tr, nc, sc, ql, rl)
         else:
-            final, steps = compiled[i % d_count](tr, rp, ql, rl)
+            final, steps = compiled[i % d_count](tr, sc, ql, rl)
         jax.block_until_ready(final)
-        return final, int(steps)
+        return final, int(steps), {"lane": i, "device": dev.id,
+                                   "steps": int(steps),
+                                   "run_s": time.perf_counter() - t_l0}
 
     t0 = time.perf_counter()
     if d_count > 1 and len(padded) > 1:
@@ -478,6 +538,7 @@ def _run_lanes(topo: Topology, trace_list: List[Trace], num_cycles: int,
         timings["compile_s"] = timings.get("compile_s", 0.0) + compile_s
         timings["run_s"] = timings.get("run_s", 0.0) + run_s
         timings["compiles"] = timings.get("compiles", 0) + compiles
+        timings.setdefault("per_lane", []).extend(o[2] for o in outs)
     return [o[0] for o in outs], [o[1] for o in outs]
 
 
@@ -549,6 +610,25 @@ def _rp_i32(rp: RuntimeParams) -> RuntimeParams:
     if bad:
         raise ValueError("; ".join(bad))
     return RuntimeParams(*[jnp.asarray(v, jnp.int32) for v in rp])
+
+
+def _sched_i32(params) -> ParamSchedule:
+    """Canonicalize a ``params=`` override to a validated int32
+    :class:`ParamSchedule`: a bare :class:`RuntimeParams` lifts to the S=1
+    degenerate schedule through :func:`_rp_i32` (same committed-leaf and
+    validation contract as before); a schedule validates every segment
+    through the same shared predicate — plus sorted/unique boundary checks
+    — so a bad segment fails with the same ValueError text as config
+    construction (traced leaves are skipped; the caller inside the trace
+    owns those)."""
+    if isinstance(params, RuntimeParams):
+        return ParamSchedule.constant(_rp_i32(params))
+    sched = as_schedule(params)  # raises TypeError on anything else
+    sched.validate()
+    return ParamSchedule(
+        boundaries=jnp.asarray(sched.boundaries, jnp.int32),
+        values=RuntimeParams(
+            *[jnp.asarray(v, jnp.int32) for v in sched.values]))
 
 
 def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
@@ -623,24 +703,29 @@ def simulate_fast(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
                   *, queue_size: Optional[int] = None,
                   resp_queue_size: Optional[int] = None,
                   cycle_skip: bool = True,
-                  params: Optional[RuntimeParams] = None,
+                  params=None,
                   timings: Optional[dict] = None) -> SimResult:
     """Single-trace run on the fast engine; bit-exact vs :func:`simulate`.
 
     ``cfg.queue_size`` is the static *capacity*; ``queue_size`` (default:
     capacity) is the runtime depth actually enforced. ``params`` (default:
     ``cfg.runtime()``) carries every timing value and policy flag as traced
-    data. Successive calls with different depths, horizons or parameter
-    points all reuse one compiled program per ``cfg.topology()``. With
-    ``cycle_skip`` the engine fast-forwards through provably inert cycles
-    (exact — see module docstring); pass ``cycle_skip=False`` for the plain
-    compile-once scan. ``timings`` (optional dict) receives ``compile_s``,
-    ``run_s``, ``compiles`` and ``steps`` (cycle_step executions; <
-    num_cycles when skipping helped).
+    data — a constant :class:`RuntimeParams` point or a time-varying
+    :class:`ParamSchedule` (DVFS/thermal operating points; the event
+    horizon then also mins in the next segment boundary, staying bit-exact
+    vs the per-cycle reference that re-resolves ``params_at`` every
+    cycle). Successive calls with different depths, horizons, parameter
+    points or schedules (of one segment count) all reuse one compiled
+    program per ``cfg.topology()``. With ``cycle_skip`` the engine
+    fast-forwards through provably inert cycles (exact — see module
+    docstring); pass ``cycle_skip=False`` for the plain compile-once scan.
+    ``timings`` (optional dict) receives ``compile_s``, ``run_s``,
+    ``compiles`` and ``steps`` (cycle_step executions; < num_cycles when
+    skipping helped).
     """
     cfg.validate()
     topo = cfg.topology()
-    rp = _rp_i32(cfg.runtime() if params is None else params)
+    sched = _sched_i32(cfg.runtime() if params is None else params)
     ql = cfg.queue_size if queue_size is None else queue_size
     rl = cfg.resp_queue_size if resp_queue_size is None else resp_queue_size
     if not (1 <= ql <= cfg.queue_size):
@@ -651,17 +736,17 @@ def simulate_fast(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
     rl = jnp.int32(rl)
     if cycle_skip:
         nc = jnp.int32(num_cycles)
-        final, steps = _timed(_run_skip_jit, (topo, trace, nc, rp, ql, rl),
-                              (trace, nc, rp, ql, rl), (topo,), timings)
+        final, steps = _timed(_run_skip_jit, (topo, trace, nc, sched, ql, rl),
+                              (trace, nc, sched, ql, rl), (topo,), timings)
     else:
         final, steps = _timed(_run_scan_jit,
-                              (topo, trace, num_cycles, rp, ql, rl),
-                              (trace, rp, ql, rl), (topo, num_cycles),
+                              (topo, trace, num_cycles, sched, ql, rl),
+                              (trace, sched, ql, rl), (topo, num_cycles),
                               timings)
     if timings is not None:
         timings["steps"] = int(steps)
     res = state_to_result(cfg, trace, final, num_cycles)
-    label = cfg if params is None else rp.apply_to(cfg)
+    label = cfg if params is None else sched.apply_to(cfg)
     res.cfg = dataclasses.replace(label, queue_size=int(ql),
                                   resp_queue_size=int(rl))
     return res
@@ -672,7 +757,7 @@ def simulate_batch(cfg: MemSimConfig,
                    num_cycles: int = 100_000,
                    *, queue_sizes: Optional[Sequence[int]] = None,
                    resp_queue_sizes: Optional[Sequence[int]] = None,
-                   params: Optional[Sequence[RuntimeParams]] = None,
+                   params=None,
                    lane_cfgs: Optional[Sequence[MemSimConfig]] = None,
                    cycle_skip: bool = True,
                    shard: bool = True,
@@ -683,11 +768,13 @@ def simulate_batch(cfg: MemSimConfig,
     ``traces`` may be a list of traces (a multi-trace workload) or a single
     trace that is broadcast across the lanes implied by ``queue_sizes`` /
     ``params`` (a parameter sweep). ``params`` gives each lane its own
-    :class:`RuntimeParams` point — timings, page policy, scheduler,
-    refresh interval — all traced data inside the one compiled program
-    (default: every lane runs ``cfg.runtime()``). Lanes are padded to a
-    common request count; each lane is bit-exact vs an individual
-    :func:`simulate` run at its queue depth and parameter point.
+    :class:`RuntimeParams` point or time-varying :class:`ParamSchedule` —
+    timings, page policy, scheduler, refresh interval, whole DVFS/thermal
+    schedules — all traced data inside the one compiled program (default:
+    every lane runs ``cfg.runtime()``; mixed constant/schedule lanes are
+    padded to a common segment count). Lanes are padded to a common
+    request count; each lane is bit-exact vs an individual
+    :func:`simulate` run at its queue depth and parameter point/schedule.
     ``lane_cfgs`` (optional, one per lane) labels each returned
     ``SimResult.cfg``; by default the label is ``cfg`` with the lane's
     queue depths substituted.
@@ -740,18 +827,22 @@ def simulate_batch(cfg: MemSimConfig,
     rs = _broadcast(resp_queue_sizes, cfg.resp_queue_size,
                     "resp_queue_sizes", cfg.resp_queue_size)
     if params is None:
-        rps = [_rp_i32(cfg.runtime())] * lanes
+        scheds = [_sched_i32(cfg.runtime())] * lanes
     else:
-        rps = [_rp_i32(rp) for rp in params]
-        if len(rps) != lanes:
+        scheds = [_sched_i32(p) for p in params]
+        if len(scheds) != lanes:
             raise ValueError("params must have one entry per lane")
+    # mixed constant/schedule lanes share one compiled program: pad every
+    # lane's schedule to the common segment count (inert SCHEDULE_INF rows)
+    s_max = max(sc.num_segments for sc in scheds)
+    scheds = [sc.pad_to(s_max) for sc in scheds]
     if lane_cfgs is not None and len(lane_cfgs) != lanes:
         raise ValueError("lane_cfgs must have one entry per lane")
 
     ns = [int(tr.num_requests) for tr in trace_list]
 
     if batch_mode == "lanes":
-        finals, lane_steps = _run_lanes(topo, trace_list, num_cycles, rps,
+        finals, lane_steps = _run_lanes(topo, trace_list, num_cycles, scheds,
                                         qs, rs, cycle_skip, shard, timings)
         if timings is not None:
             timings["steps"] = max(lane_steps)
@@ -774,13 +865,13 @@ def simulate_batch(cfg: MemSimConfig,
         # below: the result loop reads lanes [0, lanes) only.
         pad_lanes = _shard_pad(lanes) if shard else 0
         stacked, _ = stack_traces(trace_list, pad_lanes=pad_lanes)
-        rp_stack = RuntimeParams.stack(rps + [rps[0]] * pad_lanes)
+        sched_stack = ParamSchedule.stack(scheds + [scheds[0]] * pad_lanes)
         ql = jnp.asarray(qs + [qs[0]] * pad_lanes, jnp.int32)
         rl = jnp.asarray(rs + [rs[0]] * pad_lanes, jnp.int32)
         sharded = False
         if shard:
-            (stacked, rp_stack, ql, rl), sharded = _maybe_shard(
-                (stacked, rp_stack, ql, rl), lanes + pad_lanes)
+            (stacked, sched_stack, ql, rl), sharded = _maybe_shard(
+                (stacked, sched_stack, ql, rl), lanes + pad_lanes)
         if timings is not None:
             timings["pad_lanes"] = timings.get("pad_lanes", 0) + pad_lanes
             timings["sharded"] = sharded
@@ -789,14 +880,14 @@ def simulate_batch(cfg: MemSimConfig,
         if cycle_skip:
             nc = jnp.int32(num_cycles)
             finals, steps = _timed(_run_skip_batch_jit,
-                                   (topo, stacked, nc, rp_stack, ql, rl),
-                                   (stacked, nc, rp_stack, ql, rl), (topo,),
-                                   timings)
+                                   (topo, stacked, nc, sched_stack, ql, rl),
+                                   (stacked, nc, sched_stack, ql, rl),
+                                   (topo,), timings)
         else:
             finals, steps = _timed(_run_scan_batch_jit,
-                                   (topo, stacked, num_cycles, rp_stack,
+                                   (topo, stacked, num_cycles, sched_stack,
                                     ql, rl),
-                                   (stacked, rp_stack, ql, rl),
+                                   (stacked, sched_stack, ql, rl),
                                    (topo, num_cycles), timings)
         if timings is not None:
             timings["steps"] = int(np.max(np.asarray(steps)))
@@ -816,7 +907,7 @@ def simulate_batch(cfg: MemSimConfig,
         if lane_cfgs is not None:
             lane_cfg = lane_cfgs[i]
         else:
-            lane_cfg = dataclasses.replace(rps[i].apply_to(cfg),
+            lane_cfg = dataclasses.replace(scheds[i].apply_to(cfg),
                                            queue_size=qs[i],
                                            resp_queue_size=rs[i])
         results.append(SimResult(
@@ -857,8 +948,42 @@ def sweep_queue_sizes(cfg: MemSimConfig, trace: Trace,
 
 
 #: grid axes resolvable by :func:`sweep_grid`: every RuntimeParams field
-#: (policies given as their config strings) plus the runtime queue depths.
-GRID_AXES = tuple(RuntimeParams._fields) + ("queue_size", "resp_queue_size")
+#: (policies given as their config strings), the runtime queue depths, and
+#: ``"schedule"`` — whose values are time-varying parameter schedules (see
+#: :func:`lane_schedule` for the accepted forms), each a lane of the same
+#: single compiled program.
+GRID_AXES = tuple(RuntimeParams._fields) + ("queue_size", "resp_queue_size",
+                                            "schedule")
+
+
+def lane_schedule(cfg: MemSimConfig, spec) -> ParamSchedule:
+    """Resolve a ``"schedule"`` grid-axis value against a lane's base
+    config.
+
+    Accepted forms:
+      * ``None`` — the constant degenerate schedule (``cfg.runtime()``);
+      * a :class:`ParamSchedule` — used as-is (already fully resolved, so
+        it does NOT compose with the lane's other runtime axes);
+      * a :class:`RuntimeParams` — a constant override point;
+      * a sequence of ``(start_cycle, override_dict)`` segments — each
+        segment's parameters are ``cfg`` with the overrides substituted
+        (``dataclasses.replace(cfg, **overrides).validate()``), so
+        schedules COMPOSE with the other grid axes (a swept ``tCL`` value
+        applies to every segment that doesn't override it) and a bad
+        segment fails with the exact ValueError config construction
+        raises.
+    """
+    if spec is None:
+        return ParamSchedule.constant(cfg.runtime())
+    if isinstance(spec, ParamSchedule):
+        return spec
+    if isinstance(spec, RuntimeParams):
+        return ParamSchedule.constant(spec)
+    segs = []
+    for start, ov in spec:
+        seg_cfg = dataclasses.replace(cfg, **dict(ov)).validate()
+        segs.append((int(start), seg_cfg.runtime()))
+    return ParamSchedule.from_segments(segs)
 
 
 def grid_points(grid: Mapping[str, Sequence]) -> List[Dict]:
@@ -887,13 +1012,17 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
 
     ``grid`` maps axis names to value lists; axes may be any Table-1
     timing parameter (``tRP``, ``tREFI``, ...), ``page_policy`` /
-    ``sched_policy`` (config strings, lowered to flags), ``sref_idle_cycles``
-    and the runtime queue depths ``queue_size`` / ``resp_queue_size``. One
-    batch lane runs per point of the Cartesian product (:func:`grid_points`
-    order); every lane is bit-exact vs an individual :func:`simulate` run
-    of its config, and the whole grid — timings x policies x refresh x
-    depth — shares a single compiled XLA program because all axes are
-    traced data.
+    ``sched_policy`` (config strings, lowered to flags),
+    ``sref_idle_cycles``, the runtime queue depths ``queue_size`` /
+    ``resp_queue_size``, and ``"schedule"`` — time-varying DVFS/thermal
+    parameter schedules (see :func:`lane_schedule` for the accepted value
+    forms; segment-spec lists compose with the other axes). One batch lane
+    runs per point of the Cartesian product (:func:`grid_points` order);
+    every lane is bit-exact vs an individual :func:`simulate` run of its
+    config (with ``params=`` its schedule, re-resolved every cycle), and
+    the whole grid — timings x policies x refresh x depth x schedules —
+    shares a single compiled XLA program because all axes are traced
+    data.
 
     ``capacity`` / ``resp_capacity`` (defaults: the largest swept depth,
     falling back to ``cfg``) size the static queue buffers. Returns one
@@ -912,8 +1041,15 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
     points = grid_points(grid)
     # per-point full configs: __post_init__ validates the policy strings,
     # validate() the cross-field constraints (e.g. tREFI > tRFC) the seed
-    # path would enforce — a bad grid point fails here, not silently in-trace
-    lane_cfgs = [dataclasses.replace(cfg, **ov).validate() for ov in points]
+    # path would enforce — a bad grid point fails here, not silently
+    # in-trace. The "schedule" axis is not a config field: it resolves per
+    # lane against that lane's config (lane_schedule), every segment
+    # validated the same way.
+    lane_cfgs = [dataclasses.replace(
+        cfg, **{k: v for k, v in ov.items() if k != "schedule"}).validate()
+        for ov in points]
+    lane_scheds = [lane_schedule(c, ov.get("schedule"))
+                   for c, ov in zip(lane_cfgs, points)]
     qs = [c.queue_size for c in lane_cfgs]
     rs = [c.resp_queue_size for c in lane_cfgs]
     cap = max(qs) if capacity is None else capacity
@@ -925,7 +1061,7 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
     cfg_cap = dataclasses.replace(cfg, queue_size=cap, resp_queue_size=rcap)
     return simulate_batch(cfg_cap, trace, num_cycles,
                           queue_sizes=qs, resp_queue_sizes=rs,
-                          params=[c.runtime() for c in lane_cfgs],
+                          params=lane_scheds,
                           lane_cfgs=lane_cfgs,
                           cycle_skip=cycle_skip, shard=shard,
                           batch_mode=batch_mode, timings=timings)
@@ -1071,7 +1207,9 @@ def sweep_topologies(cfg: MemSimConfig,
     from repro.distributed.shard import round_robin_devices
 
     points = topo_grid_points(grid)
-    lane_cfgs = [dataclasses.replace(cfg, **ov).validate() for ov in points]
+    lane_cfgs = [dataclasses.replace(
+        cfg, **{k: v for k, v in ov.items() if k != "schedule"}).validate()
+        for ov in points]
     n_points = len(points)
     if isinstance(trace, Trace):
         trace_list = [trace] * n_points
@@ -1089,7 +1227,13 @@ def sweep_topologies(cfg: MemSimConfig,
         raise ValueError("capacity below largest swept queue size")
     if rcap < max(rs):
         raise ValueError("resp_capacity below largest swept resp queue size")
-    rps = [_rp_i32(c.runtime()) for c in lane_cfgs]
+    # per-point schedules (the "schedule" runtime axis rides along exactly
+    # like in sweep_grid), padded to one grid-wide segment count so every
+    # topology's batched program takes the same schedule shapes
+    scheds = [_sched_i32(lane_schedule(c, ov.get("schedule")))
+              for c, ov in zip(lane_cfgs, points)]
+    s_max = max(sc.num_segments for sc in scheds)
+    scheds = [sc.pad_to(s_max) for sc in scheds]
 
     # group grid points by the distinct static topology they compile to
     topologies: List[Topology] = []
@@ -1127,16 +1271,20 @@ def sweep_topologies(cfg: MemSimConfig,
                      is_write=sds((len(idxs), n_max_g)),
                      wdata=sds((len(idxs), n_max_g)))
         scal, vec = sds(()), sds((len(idxs),))
-        rp_s = RuntimeParams(*([vec] * len(RuntimeParams._fields)))
+        seg = sds((len(idxs), s_max))
+        sched_s = ParamSchedule(
+            boundaries=seg,
+            values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
         if cycle_skip:
             lowered.append(_aot_lower(
-                _run_skip_batch_jit, (topo, tr_s, scal, rp_s, vec, vec),
-                (tr_s, scal, rp_s, vec, vec), (topo, devices[gi].id)))
+                _run_skip_batch_jit, (topo, tr_s, scal, sched_s, vec, vec),
+                (tr_s, scal, sched_s, vec, vec), (topo, devices[gi].id)))
         else:
             lowered.append(_aot_lower(
-                _run_scan_batch_jit, (topo, tr_s, num_cycles, rp_s, vec,
+                _run_scan_batch_jit, (topo, tr_s, num_cycles, sched_s, vec,
                                       vec),
-                (tr_s, rp_s, vec, vec), (topo, num_cycles, devices[gi].id)))
+                (tr_s, sched_s, vec, vec), (topo, num_cycles,
+                                            devices[gi].id)))
 
     def finish(gi: int) -> Tuple[object, float, int]:
         key, low, lower_s = lowered[gi]
@@ -1161,17 +1309,17 @@ def sweep_topologies(cfg: MemSimConfig,
         idxs = groups[gi]
         dev = devices[gi]
         stacked, _ = stack_traces([trace_list[i] for i in idxs])
-        rp_stack = RuntimeParams.stack([rps[i] for i in idxs])
+        sched_stack = ParamSchedule.stack([scheds[i] for i in idxs])
         ql = jnp.asarray([qs[i] for i in idxs], jnp.int32)
         rl = jnp.asarray([rs[i] for i in idxs], jnp.int32)
-        stacked, rp_stack, ql, rl = jax.device_put(
-            (stacked, rp_stack, ql, rl), dev)
+        stacked, sched_stack, ql, rl = jax.device_put(
+            (stacked, sched_stack, ql, rl), dev)
         t0 = time.perf_counter()
         if cycle_skip:
             nc = jax.device_put(jnp.int32(num_cycles), dev)
-            finals, steps = compiled[gi](stacked, nc, rp_stack, ql, rl)
+            finals, steps = compiled[gi](stacked, nc, sched_stack, ql, rl)
         else:
-            finals, steps = compiled[gi](stacked, rp_stack, ql, rl)
+            finals, steps = compiled[gi](stacked, sched_stack, ql, rl)
         jax.block_until_ready(finals)
         return finals, int(np.max(np.asarray(steps))), \
             time.perf_counter() - t0

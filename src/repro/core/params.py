@@ -239,6 +239,269 @@ NUM_RUNTIME_PARAMS = len(RuntimeParams._fields)
 #: field -> row index of the packed kernel-ABI vector
 RP_INDEX = {name: i for i, name in enumerate(RuntimeParams._fields)}
 
+#: sentinel boundary for "no further segment" / schedule padding (plain int
+#: on purpose — a module-level jnp constant materialized during tracing
+#: would leak that trace's context into later traces). Matches the engine's
+#: event-horizon infinity so the two mins compose.
+SCHEDULE_INF = 0x3FFFFFFF
+
+
+class ParamSchedule(NamedTuple):
+    """Piecewise-constant time-varying :class:`RuntimeParams` — DVFS,
+    thermal throttling and refresh-rate stepping as a first-class layer.
+
+    ``boundaries[s]`` is the first cycle of segment ``s`` (sorted strictly
+    increasing, ``boundaries[0] == 0``); ``values`` is a
+    ``RuntimeParams.stack``-ed pytree whose leaves carry one entry per
+    segment. Both are traced int32 *data*: every schedule of a given
+    segment count ``S`` shares one compiled XLA program, and a whole
+    schedule sweep runs as batch lanes of a single program (only the
+    boundary/value arrays differ per lane).
+
+    The single resolver every consumer reads through is
+    :meth:`params_at`: the parameters governing cycle ``c`` are
+    ``values[segment_at(c)]``. A constant run is the degenerate ``S == 1``
+    schedule (:meth:`constant`), which resolves with zero overhead — the
+    engines accept a bare :class:`RuntimeParams` anywhere and lift it via
+    :func:`as_schedule`, so no API breaks.
+
+    Exactness contract: per-cycle reference semantics re-resolve
+    ``params_at(schedule, cycle)`` every cycle; WAIT timers latch their
+    duration from the params active at the grant cycle and merely count
+    down across boundaries (real controllers do the same — an in-flight
+    command completes at its issued timing). The event-horizon engine caps
+    every skip at the next segment boundary, so each closed-form bound is
+    evaluated under the segment it covers and stays bit-exact.
+
+    Schedules with fewer segments than a batch requires are padded by
+    :meth:`pad_to`: padding rows repeat the last segment's values with a
+    ``SCHEDULE_INF`` boundary, so they are never active and never alter
+    :meth:`segment_at` / :meth:`next_boundary`.
+    """
+
+    boundaries: "jnp.ndarray"     # int32[S] (or [L, S] when lane-stacked)
+    values: RuntimeParams         # each leaf int32[S] (or [L, S])
+
+    # ---- static shape ----------------------------------------------------
+    @property
+    def num_segments(self) -> int:
+        """Segment count S — an array *shape*, static per compiled program."""
+        import numpy as np
+
+        return int(np.shape(self.boundaries)[-1])
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def constant(cls, rp: "RuntimeParams") -> "ParamSchedule":
+        """The degenerate S=1 schedule: ``rp`` for the whole run."""
+        import jax.numpy as jnp
+
+        return cls(boundaries=jnp.zeros((1,), jnp.int32),
+                   values=RuntimeParams.stack([rp]))
+
+    @classmethod
+    def from_segments(cls, segments) -> "ParamSchedule":
+        """Build from ``[(start_cycle, RuntimeParams), ...]`` and validate
+        (boundaries sorted/unique/starting at 0, every segment through the
+        shared :func:`runtime_constraint_violations` predicate)."""
+        import jax.numpy as jnp
+
+        if not segments:
+            raise ValueError("ParamSchedule needs at least one segment")
+        starts = [int(s) for s, _ in segments]
+        rps = [rp for _, rp in segments]
+        return cls(boundaries=jnp.asarray(starts, jnp.int32),
+                   values=RuntimeParams.stack(rps)).validate()
+
+    # ---- the ONE resolver ------------------------------------------------
+    def segment_at(self, cycle):
+        """Index of the segment governing ``cycle`` (traced int32)."""
+        import jax.numpy as jnp
+
+        if self.num_segments == 1:
+            return jnp.int32(0)
+        b = jnp.asarray(self.boundaries, jnp.int32)
+        c = jnp.asarray(cycle, jnp.int32)
+        return (jnp.sum((c >= b).astype(jnp.int32)) - 1).astype(jnp.int32)
+
+    def params_at(self, cycle) -> "RuntimeParams":
+        """The :class:`RuntimeParams` governing ``cycle`` — the single
+        resolver every consumer (stepper, event bounds, kernels) reads
+        through. S=1 resolves statically (zero runtime cost)."""
+        import jax.numpy as jnp
+
+        if self.num_segments == 1:
+            return RuntimeParams(
+                *[jnp.asarray(v, jnp.int32)[0] for v in self.values])
+        seg = self.segment_at(cycle)
+        return RuntimeParams(
+            *[jnp.asarray(v, jnp.int32)[seg] for v in self.values])
+
+    def next_boundary(self, cycle):
+        """First segment boundary strictly after ``cycle``
+        (``SCHEDULE_INF`` when none): the event the horizon engine must
+        min in so no skip crosses an operating-point change."""
+        import jax.numpy as jnp
+
+        if self.num_segments == 1:
+            return jnp.int32(SCHEDULE_INF)
+        b = jnp.asarray(self.boundaries, jnp.int32)
+        c = jnp.asarray(cycle, jnp.int32)
+        return jnp.min(jnp.where(b > c, b, SCHEDULE_INF)).astype(jnp.int32)
+
+    # ---- kernel ABI ------------------------------------------------------
+    def pack(self):
+        """Flatten to the packed kernel ABI: ``(boundaries int32[S, 1],
+        values int32[S, NP])`` — the schedule-aware generalization of
+        :meth:`RuntimeParams.pack` the Pallas bank-FSM kernels consume
+        (they resolve the active segment in-kernel)."""
+        import jax.numpy as jnp
+
+        s = self.num_segments
+        vals = jnp.stack(
+            [jnp.asarray(v, jnp.int32).reshape(s) for v in self.values],
+            axis=1)
+        return jnp.asarray(self.boundaries, jnp.int32).reshape(s, 1), vals
+
+    @classmethod
+    def unpack(cls, bounds, vals) -> "ParamSchedule":
+        """Inverse of :meth:`pack` (``bounds`` [S, 1] or [S], ``vals``
+        [S, NP])."""
+        s = vals.shape[0]
+        return cls(boundaries=bounds.reshape(s),
+                   values=RuntimeParams(
+                       *[vals[:, i] for i in range(NUM_RUNTIME_PARAMS)]))
+
+    # ---- batching --------------------------------------------------------
+    def pad_to(self, s: int) -> "ParamSchedule":
+        """Pad to ``s`` segments with inert rows (boundary
+        ``SCHEDULE_INF``, values repeating the last real segment) so
+        heterogeneous schedules can share one compiled program."""
+        import jax.numpy as jnp
+
+        cur = self.num_segments
+        if cur == s:
+            return self
+        if cur > s:
+            raise ValueError(f"cannot pad {cur} segments down to {s}")
+        extra = s - cur
+        b = jnp.concatenate([
+            jnp.asarray(self.boundaries, jnp.int32).reshape(cur),
+            jnp.full((extra,), SCHEDULE_INF, jnp.int32)])
+        vals = RuntimeParams(*[
+            jnp.concatenate([
+                jnp.asarray(v, jnp.int32).reshape(cur),
+                jnp.broadcast_to(jnp.asarray(v, jnp.int32).reshape(cur)[-1],
+                                 (extra,))])
+            for v in self.values])
+        return ParamSchedule(boundaries=b, values=vals)
+
+    @classmethod
+    def stack(cls, scheds) -> "ParamSchedule":
+        """Stack schedules on a leading lane axis (padding each to the
+        common segment count) — the vmap-lane form of the batched engine."""
+        import jax.numpy as jnp
+
+        scheds = list(scheds)
+        s_max = max(sc.num_segments for sc in scheds)
+        padded = [sc.pad_to(s_max) for sc in scheds]
+        return cls(
+            boundaries=jnp.stack(
+                [jnp.asarray(sc.boundaries, jnp.int32) for sc in padded]),
+            values=RuntimeParams(*[
+                jnp.stack([jnp.asarray(getattr(sc.values, f), jnp.int32)
+                           for sc in padded])
+                for f in RuntimeParams._fields]))
+
+    # ---- validation / labelling -----------------------------------------
+    def segment(self, s: int) -> "RuntimeParams":
+        """Segment ``s``'s parameter point (host-side indexing)."""
+        import jax.numpy as jnp
+
+        return RuntimeParams(
+            *[jnp.asarray(v, jnp.int32)[s] for v in self.values])
+
+    def validate(self) -> "ParamSchedule":
+        """Host-side validation: boundaries sorted, unique, starting at
+        cycle 0 (``SCHEDULE_INF`` padding rows exempt, but only as a
+        suffix), and every real segment's values through the same
+        :func:`runtime_constraint_violations` predicate — so a bad
+        schedule segment fails with the same ValueError text as config
+        construction. Traced leaves (uninspectable host-side) skip their
+        checks; the caller inside the trace owns those."""
+        import numpy as np
+
+        bad = []
+        try:
+            bounds = [int(x) for x in
+                      np.asarray(self.boundaries).reshape(-1)]
+        except Exception:  # traced boundaries
+            bounds = None
+        n_real = self.num_segments
+        if bounds is not None:
+            real = [b for b in bounds if b < SCHEDULE_INF]
+            n_real = len(real)
+            if len(real) != len(bounds) and any(
+                    b < SCHEDULE_INF for b in bounds[n_real:]):
+                bad.append("schedule padding rows (boundary >= "
+                           f"{SCHEDULE_INF}) must form a suffix")
+            if not real:
+                bad.append("schedule needs at least one real segment "
+                           "(boundary below the padding sentinel)")
+            elif real[0] != 0:
+                bad.append(f"schedule boundaries must start at cycle 0, "
+                           f"got {real[0]}")
+            for a, b in zip(real, real[1:]):
+                if b <= a:
+                    bad.append("schedule boundaries must be sorted and "
+                               f"unique (strictly increasing): {a} then {b}")
+        for s in range(n_real):
+            vals = {}
+            for f in RuntimeParams._fields:
+                try:
+                    vals[f] = int(np.asarray(
+                        getattr(self.values, f)).reshape(-1)[s])
+                except Exception:  # traced leaf
+                    vals[f] = None
+            # a one-segment (constant) schedule keeps the exact config-
+            # construction error text; multi-segment names the segment
+            bad.extend(m if n_real == 1 else f"schedule segment {s}: {m}"
+                       for m in runtime_constraint_violations(vals))
+        if bad:
+            raise ValueError("; ".join(bad))
+        return self
+
+    def apply_to(self, cfg: "MemSimConfig") -> "MemSimConfig":
+        """Label helper: a schedule with exactly one *real* segment
+        (padding rows don't count) labels like its constant point
+        (:meth:`RuntimeParams.apply_to`); a genuinely time-varying
+        schedule cannot be represented by a static config and returns
+        ``cfg`` unchanged (as do traced boundaries)."""
+        import numpy as np
+
+        try:
+            bounds = np.asarray(self.boundaries).reshape(-1)
+            n_real = int((bounds < SCHEDULE_INF).sum())
+        except Exception:  # traced host-side-uninspectable boundaries
+            return cfg
+        if n_real == 1:
+            return self.segment(0).apply_to(cfg)
+        return cfg
+
+
+def as_schedule(params) -> "ParamSchedule":
+    """Lift ``params`` to the canonical :class:`ParamSchedule` form: a
+    bare :class:`RuntimeParams` becomes the degenerate S=1 schedule, a
+    schedule passes through — the no-API-break seam every ``params=``
+    entry point funnels through."""
+    if isinstance(params, ParamSchedule):
+        return params
+    if isinstance(params, RuntimeParams):
+        return ParamSchedule.constant(params)
+    raise TypeError(
+        f"params must be RuntimeParams or ParamSchedule, got "
+        f"{type(params).__name__}")
+
 #: runtime fields that must be strictly positive: a zero or negative timing
 #: value would make a WAIT state instantaneous (or run its timer negative)
 #: and break every closed-form skip bound in the engine.

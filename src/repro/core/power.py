@@ -37,12 +37,16 @@ class PowerConfig:
     clock_ghz: float = 1.2
 
 
-def make_counters(num_banks: int) -> Dict[str, Array]:
+def make_counters(num_banks: int, num_segments: int = 1) -> Dict[str, Array]:
     return {
         "cmd_counts": jnp.zeros((NUM_CMDS,), jnp.int32),
         "sref_cycles": jnp.zeros((), jnp.int32),
         "active_cycles": jnp.zeros((), jnp.int32),   # banks not IDLE/SREF
         "idle_cycles": jnp.zeros((), jnp.int32),
+        # cycles spent under each ParamSchedule segment (operating point):
+        # the DVFS study's time-at-operating-point attribution. A constant
+        # run is the degenerate one-segment schedule.
+        "seg_cycles": jnp.zeros((num_segments,), jnp.int32),
     }
 
 
@@ -50,6 +54,7 @@ def update_counters(
     counters: Dict[str, Array],
     issued_cmd: Array,     # int32[C]: command granted per channel (CMD_NOP if none)
     st: Array,             # int32[B] bank states
+    seg: Array = 0,        # scalar int32: active ParamSchedule segment
 ) -> Dict[str, Array]:
     from repro.core.params import S_IDLE, S_SREF
 
@@ -63,6 +68,7 @@ def update_counters(
         "sref_cycles": counters["sref_cycles"] + sref,
         "idle_cycles": counters["idle_cycles"] + idle,
         "active_cycles": counters["active_cycles"] + (b - sref - idle),
+        "seg_cycles": counters["seg_cycles"].at[seg].add(1),
     }
 
 
@@ -71,6 +77,7 @@ def skip_counters(
     st: Array,             # int32[B] bank states (frozen over the skip)
     delta: Array,          # scalar int32 number of inert cycles skipped
     channels: int,
+    seg: Array = 0,        # scalar int32: segment every skipped cycle is in
 ) -> Dict[str, Array]:
     """Delta-aware twin of :func:`update_counters`: exactly ``delta``
     applications of the per-cycle update under an all-NOP issue slate and
@@ -81,6 +88,13 @@ def skip_counters(
     attribution (and the per-channel NOP accounting) to one place, so the
     energy_report of a skipped run is field-for-field identical to the
     per-cycle engine's. A ``delta`` of 0 is the identity.
+
+    Segment attribution under time-varying params: the engine caps every
+    skip at the next ``ParamSchedule`` boundary (``_next_event`` mins it
+    in), so a skipped delta NEVER spans two segments — that cap is the
+    split mechanism, and attributing the whole delta to ``seg`` (the
+    segment of the first skipped cycle) keeps the per-operating-point
+    cycle attribution exact against the per-cycle reference.
     """
     from repro.core.params import CMD_NOP, S_IDLE, S_SREF
 
@@ -95,6 +109,7 @@ def skip_counters(
         "sref_cycles": counters["sref_cycles"] + delta * sref,
         "idle_cycles": counters["idle_cycles"] + delta * idle,
         "active_cycles": counters["active_cycles"] + delta * (b - sref - idle),
+        "seg_cycles": counters["seg_cycles"].at[seg].add(delta),
     }
 
 

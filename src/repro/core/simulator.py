@@ -40,9 +40,11 @@ from repro.core.params import (
     CMD_NOP,
     SCHED_FRFCFS,
     MemSimConfig,
+    ParamSchedule,
     RuntimeParams,
     S_RESP_PEND,
     Topology,
+    as_schedule,
 )
 from repro.core.queues import BankedFifo, Fifo, rr_arbiter, rr_arbiter_grouped
 
@@ -137,24 +139,29 @@ class SimResult:
         return np.where(self.completed, self.t_complete - self.t_intended, -1)
 
 
-def init_state(topo: Topology, rp: RuntimeParams, num_requests: int,
+def init_state(topo: Topology, sched, num_requests: int,
                queue_limit=None, resp_queue_limit=None) -> SimState:
     """Initial register file.
 
-    Shapes come from the static ``topo``; the only runtime value consumed
-    here is ``rp.tREFI`` (initial refresh deadlines). ``queue_limit`` /
-    ``resp_queue_limit`` are optional *runtime* occupancy caps (traced
-    scalars) on the statically-sized queues: the paper's ``queueSize``
-    becomes a data value instead of a compiled shape, so a queue-depth
-    sweep reuses one XLA program (see ``repro.core.engine``). Defaults
-    reproduce the static behaviour (limit == capacity).
+    Shapes come from the static ``topo`` plus the schedule's segment count
+    (the per-segment cycle counters); the only runtime value consumed here
+    is the cycle-0 ``tREFI`` (initial refresh deadlines, resolved through
+    ``params_at(0)``). ``sched`` is a :class:`ParamSchedule` or a bare
+    :class:`RuntimeParams` (lifted to the S=1 degenerate schedule).
+    ``queue_limit`` / ``resp_queue_limit`` are optional *runtime* occupancy
+    caps (traced scalars) on the statically-sized queues: the paper's
+    ``queueSize`` becomes a data value instead of a compiled shape, so a
+    queue-depth sweep reuses one XLA program (see ``repro.core.engine``).
+    Defaults reproduce the static behaviour (limit == capacity).
     """
+    sched = as_schedule(sched)
+    rp0 = sched.params_at(jnp.int32(0))
     neg = jnp.full((num_requests,), -1, jnp.int32)
     return SimState(
         next_arrival=jnp.int32(0),
         req_q=Fifo.make(topo.queue_size, limit=queue_limit),
         bank_q=BankedFifo.make(topo.num_banks, topo.queue_size, limit=queue_limit),
-        bank=BankState.make(topo, rp),
+        bank=BankState.make(topo, rp0),
         timing=TimingState.make(topo),
         cmd_rr=jnp.zeros((topo.channels,), jnp.int32),
         resp_rr=jnp.int32(0),
@@ -165,25 +172,34 @@ def init_state(topo: Topology, rp: RuntimeParams, num_requests: int,
         t_start=neg,
         t_complete=neg,
         rdata=jnp.zeros((num_requests,), jnp.int32),
-        counters=power_lib.make_counters(topo.num_banks),
+        counters=power_lib.make_counters(topo.num_banks,
+                                         sched.num_segments),
         blocked_arrival=jnp.int32(0),
         blocked_dispatch=jnp.int32(0),
     )
 
 
-def issue_eligibility(topo: Topology, rp: RuntimeParams,
-                      timing: TimingState, bank: BankState, cycle: Array
+def issue_eligibility(topo: Topology, sched, timing: TimingState,
+                      bank: BankState, cycle: Array
                       ) -> Tuple[Array, Array, Array]:
     """The ONE issue-eligibility predicate: which banks may be granted the
     command bus this cycle.
+
+    ``sched`` is a :class:`ParamSchedule` (or bare :class:`RuntimeParams`);
+    legality is judged under ``params_at(cycle)`` — the operating point
+    governing *this* cycle — so a DVFS boundary re-prices every pending bid
+    the cycle it lands, exactly as the per-cycle reference does.
 
     Returns ``(eligible bool[B], cmds int32[B], legal_at int32[B])`` where
     ``eligible = bidding & (cycle >= legal_at)``. ``cycle_step`` feeds
     ``eligible`` to the per-channel arbiters; the event-horizon engine
     (:mod:`repro.core.engine`) reuses ``legal_at`` as the "cycles until the
-    queue head becomes issuable" bound — sharing this definition is what
-    makes skipping through blocked ISSUE states provably exact.
+    queue head becomes issuable" bound (valid within the current schedule
+    segment — the engine caps skips at the next boundary) — sharing this
+    definition is what makes skipping through blocked ISSUE states provably
+    exact.
     """
+    rp = as_schedule(sched).params_at(cycle)
     bids, cmds = compute_bids(bank.st, bank.cur_write)
     rank_of_bank = (jnp.arange(topo.num_banks, dtype=jnp.int32)
                     // topo.banks_per_rank)
@@ -192,8 +208,15 @@ def issue_eligibility(topo: Topology, rp: RuntimeParams,
     return eligible, cmds, legal_at
 
 
-def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
+def cycle_step(topo: Topology, sched, trace: Trace,
                state: SimState, cycle: Array) -> SimState:
+    """One synchronous clock edge. ``sched`` is a :class:`ParamSchedule`
+    (or bare :class:`RuntimeParams`): every parameter consumed this cycle
+    is resolved through ``params_at(cycle)`` — the per-cycle reference
+    semantics time-varying runs are defined by."""
+    sched = as_schedule(sched)
+    rp = sched.params_at(cycle)
+    seg = sched.segment_at(cycle)
     n = trace.num_requests
     b = topo.num_banks
 
@@ -225,8 +248,8 @@ def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
     blocked_dispatch = state.blocked_dispatch + (have_req & tgt_full).astype(jnp.int32)
 
     # ---- phase 3: command bids, timing legality, per-channel RR grant ------
-    eligible, cmds, _ = issue_eligibility(topo, rp, state.timing, state.bank,
-                                          cycle)
+    eligible, cmds, _ = issue_eligibility(topo, sched, state.timing,
+                                          state.bank, cycle)
     rank_of_bank = (jnp.arange(b, dtype=jnp.int32) // topo.banks_per_rank)
     grant_mask, winners, cmd_rr = rr_arbiter_grouped(eligible, state.cmd_rr, topo.channels)
 
@@ -282,8 +305,10 @@ def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
             [grant_mask.astype(jnp.int32), resp_accept.astype(jnp.int32),
              queue_nonempty.astype(jnp.int32)]
         )
+        # the kernel twin takes the full packed schedule ([S, NP] values +
+        # [S, 1] boundaries) and resolves the active segment in-kernel
         new_packed, flags = bank_fsm_step(
-            topo, packed, ins, pop_items.T, cycle, True, True, params=rp
+            topo, packed, ins, pop_items.T, cycle, True, True, params=sched
         )
         new_bank = unpack_state(new_packed)
         outs = FsmOutputs(
@@ -320,7 +345,8 @@ def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
     ].set(cycle.astype(jnp.int32), mode="drop")
 
     # ---- phase 8: counters ---------------------------------------------------
-    counters = power_lib.update_counters(state.counters, issued_cmds, state.bank.st)
+    counters = power_lib.update_counters(state.counters, issued_cmds,
+                                         state.bank.st, seg)
 
     return SimState(
         next_arrival=next_arrival,
@@ -345,14 +371,18 @@ def cycle_step(topo: Topology, rp: RuntimeParams, trace: Trace,
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
 def _simulate_jit(topo: Topology, trace: Trace, num_cycles: int,
-                  rp: RuntimeParams) -> SimState:
-    """Reference per-cycle scan. Static on the Topology only: every timing
-    value and policy flag is traced, so all runtime-parameter points of one
-    topology share this compiled program."""
-    state = init_state(topo, rp, trace.num_requests)
+                  sched: ParamSchedule) -> SimState:
+    """Reference per-cycle scan — the spec engine: every cycle re-resolves
+    ``params_at(sched, cycle)``, so this is the ground truth time-varying
+    runs (and the event-horizon engine) are bit-compared against. Static on
+    the Topology (and the schedule's segment count, an array shape) only:
+    every timing value, policy flag and boundary is traced, so all
+    runtime-parameter points and schedules of one topology share this
+    compiled program."""
+    state = init_state(topo, sched, trace.num_requests)
 
     def step(carry, cycle):
-        return cycle_step(topo, rp, trace, carry, cycle), None
+        return cycle_step(topo, sched, trace, carry, cycle), None
 
     final, _ = jax.lax.scan(step, state, jnp.arange(num_cycles, dtype=jnp.int32))
     return final
@@ -379,21 +409,28 @@ def state_to_result(cfg: MemSimConfig, trace: Trace, final: SimState,
 
 
 def simulate(cfg: MemSimConfig, trace: Trace, num_cycles: int = 100_000,
-             *, params: RuntimeParams = None) -> SimResult:
+             *, params=None) -> SimResult:
     """Run MemorySim for ``num_cycles`` over ``trace``; returns host stats.
 
     This is the reference per-cycle engine: one ``lax.scan`` step per
-    clock. The compiled program is keyed on ``cfg.topology()`` only; the
-    timing parameters and policy flags (``params``, default lifted from
-    ``cfg``) are traced data. The high-throughput engine in
-    :mod:`repro.core.engine` (compile-once sweeps, batching,
-    cycle-skipping) is bit-exact against this function.
+    clock. ``params`` may be a :class:`RuntimeParams` point (constant) or a
+    :class:`ParamSchedule` (time-varying DVFS/thermal operating points,
+    re-resolved every cycle); default lifted from ``cfg``. The compiled
+    program is keyed on ``cfg.topology()`` (plus the schedule's segment
+    count, a shape) only; all parameter values and boundaries are traced
+    data. The high-throughput engine in :mod:`repro.core.engine`
+    (compile-once sweeps, batching, cycle-skipping) is bit-exact against
+    this function.
     """
     if params is None:
-        rp = cfg.runtime()
+        sched = ParamSchedule.constant(cfg.runtime())
     else:
-        rp = params
-        cfg = params.apply_to(cfg)  # label the result with the real point
+        # same contract as the fast engine's _sched_i32: every segment and
+        # boundary validated with the config-construction error text (a
+        # multi-segment schedule cannot be folded into cfg for the
+        # cfg.validate() below, which would otherwise silently skip it)
+        sched = as_schedule(params).validate()
+        cfg = sched.apply_to(cfg)  # label the result with the real point
     cfg.validate()
-    final = _simulate_jit(cfg.topology(), trace, num_cycles, rp)
+    final = _simulate_jit(cfg.topology(), trace, num_cycles, sched)
     return state_to_result(cfg, trace, final, num_cycles)

@@ -11,12 +11,20 @@ compiled kernel serves every Table-1 parameter point and both page
 policies; lanes of a sweep grid differ only in the vector they pass.
 
 ABI (see ref.py): state int32[10, B], inputs int32[3, B], pop int32[4, B],
-rp int32[NP, 1], cycle int32[1, 1]
+rp int32[S, NP] (one packed RuntimeParams row per ParamSchedule segment),
+bounds int32[S, 1] (segment start cycles), cycle int32[1, 1]
 -> new_state int32[10, B], flags int32[3, B].
 
+The kernel resolves the active schedule segment *in-kernel* (a branchless
+one-hot row-select over the [S, NP] matrix, ``_resolve_rp``), so DVFS /
+thermal-throttle schedules cost one tiny reduce per grid step instead of a
+host-side gather chain, and a constant run is the degenerate S=1 matrix
+(row 0 read directly — zero overhead). S is a block shape: schedules with
+the same segment count share one compiled kernel; only the data differs.
+
 VMEM footprint per grid step: (10 + 3 + 4 + 10 + 3) rows x block_b x 4B
-+ NP x 4B  ->  ~15 KiB at block_b = 128, far under the ~16 MiB VMEM
-budget; block_b can scale to 2048+ lanes for large topologies.
++ S x (NP + 1) x 4B  ->  ~15 KiB at block_b = 128, far under the ~16 MiB
+VMEM budget; block_b can scale to 2048+ lanes for large topologies.
 """
 
 from __future__ import annotations
@@ -50,12 +58,36 @@ from repro.core.params import (
 )
 
 
-def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, cycle_ref,
-            new_state_ref, flags_ref):
-    row_shift = topo.addr_low_bits + topo.column_bits
+def _resolve_rp(rp_ref, bnd_ref, cycle):
+    """In-kernel ParamSchedule resolution: select the [1, NP] row of the
+    segment governing ``cycle`` from the packed [S, NP] matrix.
+
+    The active segment is the last one whose start boundary is <= cycle
+    (boundaries sorted; SCHEDULE_INF padding rows never activate), found
+    branchlessly: count satisfied boundaries, one-hot the row, reduce.
+    S == 1 (the constant degenerate schedule) reads row 0 directly — the
+    kernel specializes on the static block shape, so constant-params
+    programs pay nothing. Returns the ``rp(name)`` accessor."""
+    s = rp_ref.shape[0]
+    if s == 1:
+        row = rp_ref[0:1, :]
+    else:
+        seg = jnp.sum((bnd_ref[:, :] <= cycle).astype(jnp.int32)) - 1
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
+                  == seg).astype(jnp.int32)
+        row = jnp.sum(rp_ref[:, :] * onehot, axis=0, keepdims=True)
 
     def rp(name):
-        return rp_ref[RP_INDEX[name], 0]
+        return row[0, RP_INDEX[name]]
+
+    return rp
+
+
+def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, bnd_ref,
+            cycle_ref, new_state_ref, flags_ref):
+    row_shift = topo.addr_low_bits + topo.column_bits
+
+    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
 
     is_open = rp("page_policy") == PAGE_OPEN  # traced scalar flag
 
@@ -179,13 +211,15 @@ def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, cycle_ref,
     flags_ref[2:3, :] = completed.astype(jnp.int32)
 
 
-def _event_bound_kernel(state_ref, rp_ref, cycle_ref, out_ref):
+def _event_bound_kernel(state_ref, rp_ref, bnd_ref, cycle_ref, out_ref):
     """Cycles-until-actionable per bank (the FSM-local half of the
     event-horizon bound): identical where-chain to
-    :func:`repro.core.bank_fsm.cycles_until_actionable` on the packed ABI."""
+    :func:`repro.core.bank_fsm.cycles_until_actionable` on the packed ABI,
+    evaluated under the schedule segment governing ``cycle`` (resolved
+    in-kernel; the engine caps skips at the next boundary, so the bound
+    never needs to see past the active segment)."""
 
-    def rp(name):
-        return rp_ref[RP_INDEX[name], 0]
+    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
 
     st = state_ref[0:1, :]
     timer = state_ref[1:2, :]
@@ -208,11 +242,14 @@ def _event_bound_kernel(state_ref, rp_ref, cycle_ref, out_ref):
     out_ref[0:1, :] = bound.astype(jnp.int32)
 
 
-def bank_event_bound_pallas(state, rp_vec, cycle, block_b: int = 128,
+def bank_event_bound_pallas(state, rp_mat, bounds, cycle, block_b: int = 128,
                             interpret: bool = True):
     """Invoke the event-bound kernel; B must be a multiple of ``block_b``
-    (ops.py pads). Returns int32[1, B] cycles-until-actionable."""
+    (ops.py pads). ``rp_mat`` int32[S, NP] / ``bounds`` int32[S, 1] is the
+    packed ParamSchedule (S=1 for constant params). Returns int32[1, B]
+    cycles-until-actionable."""
     b = state.shape[1]
+    s = rp_mat.shape[0]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
     grid = (b // block_b,)
     return pl.pallas_call(
@@ -220,19 +257,23 @@ def bank_event_bound_pallas(state, rp_vec, cycle, block_b: int = 128,
         grid=grid,
         in_specs=[
             pl.BlockSpec((10, block_b), lambda i: (0, i)),
-            pl.BlockSpec((NUM_RUNTIME_PARAMS, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s, NUM_RUNTIME_PARAMS), lambda i: (0, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=[pl.BlockSpec((1, block_b), lambda i: (0, i))],
         out_shape=[jax.ShapeDtypeStruct((1, b), jnp.int32)],
         interpret=interpret,
-    )(state, rp_vec, cycle)[0]
+    )(state, rp_mat, bounds, cycle)[0]
 
 
-def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_vec, cycle,
-                         block_b: int = 128, interpret: bool = True):
-    """Invoke the FSM kernel; B must be a multiple of ``block_b`` (ops.py pads)."""
+def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_mat, bounds,
+                         cycle, block_b: int = 128, interpret: bool = True):
+    """Invoke the FSM kernel; B must be a multiple of ``block_b`` (ops.py
+    pads). ``rp_mat`` int32[S, NP] / ``bounds`` int32[S, 1] is the packed
+    ParamSchedule (S=1 for constant params)."""
     b = state.shape[1]
+    s = rp_mat.shape[0]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
     grid = (b // block_b,)
     kernel = functools.partial(_kernel, topo)
@@ -243,7 +284,8 @@ def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_vec, cycle,
             pl.BlockSpec((10, block_b), lambda i: (0, i)),
             pl.BlockSpec((3, block_b), lambda i: (0, i)),
             pl.BlockSpec((4, block_b), lambda i: (0, i)),
-            pl.BlockSpec((NUM_RUNTIME_PARAMS, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s, NUM_RUNTIME_PARAMS), lambda i: (0, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=[
@@ -255,4 +297,4 @@ def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_vec, cycle,
             jax.ShapeDtypeStruct((3, b), jnp.int32),
         ],
         interpret=interpret,
-    )(state, inputs, pop, rp_vec, cycle)
+    )(state, inputs, pop, rp_mat, bounds, cycle)

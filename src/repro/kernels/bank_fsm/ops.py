@@ -3,13 +3,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core.params import MemSimConfig, RuntimeParams, S_IDLE, Topology
+from repro.core.params import MemSimConfig, S_IDLE, Topology, as_schedule
 from repro.kernels.bank_fsm.bank_fsm import (
     bank_event_bound_pallas,
     bank_fsm_step_pallas,
@@ -41,27 +41,30 @@ def _pad_banks(state: Array, inputs: Array, pop: Array, padded_b: int):
 def bank_event_bound(
     state: Array,    # [10, B] int32 packed BankState
     cycle: Array,    # scalar or [1,1] int32
-    params: RuntimeParams,
+    params,          # RuntimeParams (constant) or ParamSchedule
     use_pallas: bool = False,
     interpret: bool = True,
 ) -> Array:
     """Per-bank cycles-until-actionable on the packed ABI; returns
-    int32[B]. The Pallas path pads the bank axis like :func:`bank_fsm_step`
-    and slices the padded lanes back off, so both backends agree
-    bank-for-bank with :func:`repro.core.bank_fsm.cycles_until_actionable`
-    (enforced by the kernel tests). Callable from inside traced loops —
-    no jit wrapper of its own, it inlines into the caller's program."""
+    int32[B]. ``params`` may be a constant :class:`RuntimeParams` (lifted
+    to the S=1 schedule) or a :class:`ParamSchedule` — the kernel resolves
+    the segment governing ``cycle`` in-kernel. The Pallas path pads the
+    bank axis like :func:`bank_fsm_step` and slices the padded lanes back
+    off, so both backends agree bank-for-bank with
+    :func:`repro.core.bank_fsm.cycles_until_actionable` (enforced by the
+    kernel tests). Callable from inside traced loops — no jit wrapper of
+    its own, it inlines into the caller's program."""
     cycle2d = jnp.asarray(cycle, jnp.int32).reshape(1, 1)
-    rp_vec = params.pack()
+    bounds, rp_mat = as_schedule(params).pack()
     if not use_pallas:
-        return bank_event_bound_ref(state, rp_vec, cycle2d)[0]
+        return bank_event_bound_ref(state, rp_mat, bounds, cycle2d)[0]
     b = state.shape[1]
     block_b = 128
     padded_b = ((b + block_b - 1) // block_b) * block_b
     ps, _, _ = _pad_banks(state, jnp.zeros((3, b), jnp.int32),
                           jnp.zeros((4, b), jnp.int32), padded_b)
-    bound = bank_event_bound_pallas(ps, rp_vec, cycle2d, block_b=block_b,
-                                    interpret=interpret)
+    bound = bank_event_bound_pallas(ps, rp_mat, bounds, cycle2d,
+                                    block_b=block_b, interpret=interpret)
     return bound[0, :b]
 
 
@@ -74,7 +77,7 @@ def bank_fsm_step(
     cycle: Array,    # scalar or [1,1] int32
     use_pallas: bool = False,
     interpret: bool = True,
-    params: Optional[RuntimeParams] = None,
+    params=None,     # RuntimeParams (constant) or ParamSchedule
 ) -> Tuple[Array, Array]:
     """One FSM clock edge. Returns (new_state [10,B], flags [3,B]).
 
@@ -82,10 +85,14 @@ def bank_fsm_step(
     CPU); ``use_pallas=True`` runs the Pallas kernel (``interpret=True`` for
     CPU validation, ``False`` on real TPUs).
 
-    ``params`` carries the traced timing/policy values; when omitted they
-    are lifted from ``cfg`` (which must then be the full
-    :class:`MemSimConfig` facade). Passing them explicitly keeps them
-    runtime data, so one compiled kernel serves a whole parameter sweep.
+    ``params`` carries the traced timing/policy values — a constant
+    :class:`RuntimeParams` (lifted to the S=1 schedule) or a full
+    :class:`ParamSchedule`, whose active segment the kernel resolves
+    in-kernel from the packed ``[S, NP]`` matrix + ``[S, 1]`` boundary
+    vector. When omitted they are lifted from ``cfg`` (which must then be
+    the full :class:`MemSimConfig` facade). Passing them explicitly keeps
+    them runtime data, so one compiled kernel serves a whole parameter
+    sweep (and every schedule of the same segment count).
     """
     if params is None:
         if not isinstance(cfg, MemSimConfig):
@@ -93,14 +100,16 @@ def bank_fsm_step(
         params = cfg.runtime()
     topo = cfg.topology()
     cycle2d = jnp.asarray(cycle, jnp.int32).reshape(1, 1)
-    rp_vec = params.pack()
+    bounds, rp_mat = as_schedule(params).pack()
     if not use_pallas:
-        return bank_fsm_step_ref(topo, state, inputs, pop, rp_vec, cycle2d)
+        return bank_fsm_step_ref(topo, state, inputs, pop, rp_mat, bounds,
+                                 cycle2d)
     b = state.shape[1]
     block_b = 128
     padded_b = ((b + block_b - 1) // block_b) * block_b
     ps, pi, pp = _pad_banks(state, inputs, pop, padded_b)
     new_state, flags = bank_fsm_step_pallas(
-        topo, ps, pi, pp, rp_vec, cycle2d, block_b=block_b, interpret=interpret
+        topo, ps, pi, pp, rp_mat, bounds, cycle2d, block_b=block_b,
+        interpret=interpret
     )
     return new_state[:, :b], flags[:, :b]

@@ -7,9 +7,13 @@ Packed layout (kernel ABI):
                                    open_row, pending)
   inputs : int32[NI=3, B]  rows = (grant, resp_accept, queue_nonempty) as 0/1
   pop    : int32[4,  B]    head items (addr, is_write, data, id)
-  rp     : int32[NP, 1]    packed RuntimeParams (timings + policy flags,
-                           see ``RuntimeParams.pack`` — traced data, so one
-                           compiled kernel serves every parameter point)
+  rp     : int32[S, NP]    packed ParamSchedule values, one RuntimeParams
+                           row per segment (timings + policy flags, see
+                           ``ParamSchedule.pack`` — traced data, so one
+                           compiled kernel serves every parameter point
+                           and every schedule of S segments; S=1 is a
+                           constant run)
+  bounds : int32[S, 1]     segment start cycles (sorted; SCHEDULE_INF pads)
   cycle  : int32[1, 1]
 
   -> new_state int32[10, B], flags int32[3, B] rows = (want_pop, rw_done,
@@ -28,7 +32,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.bank_fsm import BankState, fsm_update
-from repro.core.params import RuntimeParams, Topology
+from repro.core.params import ParamSchedule, Topology
 
 NS = 10  # state rows
 NI = 3  # input rows
@@ -53,16 +57,20 @@ def unpack_state(s: Array) -> BankState:
 
 def bank_event_bound_ref(
     state: Array,   # [10, B] int32
-    rp_vec: Array,  # [NP, 1] int32 packed RuntimeParams
+    rp_mat: Array,  # [S, NP] int32 packed ParamSchedule values
+    bounds: Array,  # [S, 1] int32 segment start cycles
     cycle: Array,   # [1, 1] int32
 ) -> Array:
     """Packed-ABI oracle for the event-bound kernel: adapts the simulator's
-    :func:`repro.core.bank_fsm.cycles_until_actionable`. Returns int32[1, B].
+    :func:`repro.core.bank_fsm.cycles_until_actionable`, evaluated under
+    the schedule segment governing ``cycle`` (the same ``params_at``
+    resolver the whole stack reads through). Returns int32[1, B].
     """
     from repro.core.bank_fsm import cycles_until_actionable
 
+    sched = ParamSchedule.unpack(bounds, rp_mat)
     bound = cycles_until_actionable(
-        RuntimeParams.unpack(rp_vec), unpack_state(state), cycle[0, 0])
+        sched.params_at(cycle[0, 0]), unpack_state(state), cycle[0, 0])
     return bound[None, :]
 
 
@@ -71,13 +79,15 @@ def bank_fsm_step_ref(
     state: Array,   # [10, B] int32
     inputs: Array,  # [3, B] int32 0/1
     pop: Array,     # [4, B] int32
-    rp_vec: Array,  # [NP, 1] int32 packed RuntimeParams
+    rp_mat: Array,  # [S, NP] int32 packed ParamSchedule values
+    bounds: Array,  # [S, 1] int32 segment start cycles
     cycle: Array,   # [1, 1] int32
 ) -> Tuple[Array, Array]:
     bank = unpack_state(state)
+    sched = ParamSchedule.unpack(bounds, rp_mat)
     new_bank, outs = fsm_update(
         topo,
-        RuntimeParams.unpack(rp_vec),
+        sched.params_at(cycle[0, 0]),
         bank,
         grant=inputs[0] == 1,
         resp_accept=inputs[1] == 1,

@@ -209,6 +209,104 @@ def topo_llm_grid_study(arch_name: str, params_bytes_per_dev: float,
     return topo_grid_study(streams, grid, **kw)
 
 
+def dvfs_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
+               schedules: Optional[Sequence[Tuple[str, object]]] = None,
+               cfg: MemSimConfig = MemSimConfig(),
+               target_requests: int = 4000, seed: int = 0,
+               tail_cycles: int = 50_000,
+               batch_mode: str = "auto",
+               timings: Optional[dict] = None) -> List[Dict]:
+    """Effective bandwidth under time-varying (DVFS / thermal-throttle)
+    parameter schedules: every (stream x schedule) cell as lanes of ONE
+    compiled batched program.
+
+    ``schedules`` are named specs in any :func:`repro.core.engine.lane_schedule`
+    form — typically the segment-spec lists of
+    :func:`repro.traces.llm_workload.thermal_throttle_schedule`. When
+    omitted, the canonical boost/sustained/throttled trajectory is built
+    at a mild and an aggressive throttle **scaled to the actual simulated
+    horizon** (so every operating point genuinely activates), plus the
+    constant nominal point as the control row. Efficiency is reported
+    against the *un-throttled* ideal reference (``cfg`` at its nominal
+    operating point): "how much of the nominal-silicon ideal does this
+    stream keep under this throttle trajectory". Each row additionally
+    carries ``seg_cycle_frac`` — the exact fraction of the horizon spent
+    under each operating point (the engine's per-segment cycle counters,
+    exact under event-horizon skipping).
+    """
+    from repro.core import lane_schedule
+
+    traces, bprs = [], []
+    for name, traffic in streams:
+        tr, bpr = llm_workload.synthesize(traffic, target_requests, seed=seed)
+        traces.append(tr)
+        bprs.append(bpr)
+    horizon = max(int(np.asarray(tr.t).max()) for tr in traces) + tail_cycles
+    if schedules is None:
+        schedules = [
+            ("nominal", None),
+            ("throttle_mild", llm_workload.thermal_throttle_schedule(
+                horizon, throttle_scale=1.5)),
+            ("throttle_hard", llm_workload.thermal_throttle_schedule(
+                horizon, throttle_scale=2.0, throttle_refresh_scale=4)),
+        ]
+
+    lane_traces = [traces[si] for si in range(len(streams))
+                   for _ in schedules]
+    lane_scheds = [lane_schedule(cfg, spec)
+                   for _ in streams for _, spec in schedules]
+    results = simulate_batch(
+        cfg, lane_traces, num_cycles=horizon,
+        params=lane_scheds, batch_mode=batch_mode, timings=timings)
+
+    ideal_spans: Dict[tuple, int] = {}
+
+    def ideal_span_for(si: int) -> int:
+        if si not in ideal_spans:
+            ideal = simulate_ideal(cfg, traces[si])
+            ideal_spans[si] = int(np.asarray(ideal.t_complete).max())
+        return ideal_spans[si]
+
+    rows = []
+    for (si, (sname, _)), (ci, (cname, _)) in itertools.product(
+            enumerate(streams), enumerate(schedules)):
+        li = si * len(schedules) + ci
+        res = results[li]
+        bw = _row_from_result(f"{sname}:{cname}", res, ideal_span_for(si),
+                              bprs[si], horizon)
+        seg = np.asarray(res.counters["seg_cycles"], dtype=np.int64)
+        total = float(max(int(seg.sum()), 1))
+        rows.append({"stream": sname, "schedule": cname,
+                     "seg_cycle_frac": [round(int(c) / total, 4)
+                                        for c in seg],
+                     **dataclasses.asdict(bw)})
+    return rows
+
+
+def dvfs_llm_study(arch_name: str, params_bytes_per_dev: float,
+                   kv_bytes_per_dev: float, act_bytes_per_dev: float,
+                   schedules: Optional[Sequence[Tuple[str, object]]] = None,
+                   **kw) -> List[Dict]:
+    """The ISSUE-5 DVFS loop: decode + prefill streams of one architecture
+    under thermal-throttle schedules — effective bandwidth per (stream,
+    operating-point trajectory) for the two serving-critical streams.
+
+    Default ``schedules`` (see :func:`dvfs_study`): the canonical
+    boost/sustained/throttled trajectory
+    (:func:`~repro.traces.llm_workload.thermal_throttle_schedule`) at a
+    mild and an aggressive throttle scaled to the actual simulated
+    horizon, plus the constant nominal point as the control row.
+    """
+    streams = [
+        ("decode", llm_workload.decode_step_traffic(
+            arch_name, params_bytes_per_dev, kv_bytes_per_dev)),
+        ("prefill", llm_workload.prefill_step_traffic(
+            arch_name, params_bytes_per_dev, act_bytes_per_dev,
+            kv_bytes_per_dev * 0.5)),
+    ]
+    return dvfs_study(streams, schedules, **kw)
+
+
 def llm_grid_study(arch_name: str, params_bytes_per_dev: float,
                    kv_bytes_per_dev: float, act_bytes_per_dev: float,
                    grid: Mapping[str, Sequence], **kw) -> List[Dict]:

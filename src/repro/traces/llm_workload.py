@@ -182,6 +182,74 @@ def decode_serving_trace(tokens: int = 96, reads_per_token: int = 16,
     )
 
 
+def thermal_throttle_schedule(total_cycles: int, *,
+                              base=None,
+                              boost_frac: float = 0.2,
+                              sustained_frac: float = 0.4,
+                              boost_scale: float = 1.0,
+                              sustained_scale: float = 1.25,
+                              throttle_scale: float = 1.75,
+                              throttle_refresh_scale: int = 2):
+    """The canonical decode-serving DVFS/thermal schedule: boost ->
+    sustained -> throttled.
+
+    Models the operating-point trajectory LLM serving hardware actually
+    lives through: the part starts a request burst at its boost clock
+    (``base`` timings, default the paper's Table-1 nominals), drops to a
+    sustained point as the power budget bites (latency-class timings
+    derated by ``sustained_scale``), then thermally throttles (derated by
+    ``throttle_scale``, and the refresh interval divided by
+    ``throttle_refresh_scale`` — hot DRAM refreshes more often, the JEDEC
+    high-temperature 2x/4x refresh derating).
+
+    Returns a segment-spec list ``[(start_cycle, override_dict), ...]``:
+    the form :func:`repro.core.engine.lane_schedule` and the ``sweep_grid``
+    ``"schedule"`` grid axis consume. The override values are ABSOLUTE
+    cycles derated from ``base`` (a :class:`~repro.core.params.RuntimeParams`
+    or config carrying the operating point to scale), so every DVFS-class
+    latency field (tRP/tRRDL/tFAW/tRCD*/tCCDL/tWTR/tRTW/tCL/tXS, plus
+    tREFI when refresh-derated) is pinned by the schedule in every segment
+    — a grid that also sweeps one of THOSE axes must pass the swept value
+    via ``base`` instead. Non-derated fields (tRFC, policies, queue
+    depths, ...) stay the lane's own and do compose. Segment boundaries
+    land at ``boost_frac`` / ``boost_frac + sustained_frac`` of
+    ``total_cycles``.
+    """
+    from repro.core.params import RuntimeParams
+
+    if not 0 < boost_frac < boost_frac + sustained_frac < 1:
+        raise ValueError(
+            f"fractions must satisfy 0 < boost ({boost_frac}) < boost + "
+            f"sustained ({boost_frac + sustained_frac}) < 1")
+    if base is None:
+        nominal = RuntimeParams()
+    elif isinstance(base, RuntimeParams):
+        nominal = base
+    else:
+        nominal = base.runtime()  # MemSimConfig facade
+    #: the latency-class parameters an operating-point change re-prices
+    _DVFS_FIELDS = ("tRP", "tRRDL", "tFAW", "tRCDRD", "tRCDWR", "tCCDL",
+                    "tWTR", "tRTW", "tCL", "tXS")
+
+    def derated(scale: float, refresh_scale: int = 1) -> dict:
+        ov = {f: max(1, int(round(int(getattr(nominal, f)) * scale)))
+              for f in _DVFS_FIELDS}
+        # keep the cross-field invariant under independent rounding
+        ov["tFAW"] = max(ov["tFAW"], ov["tRRDL"])
+        if refresh_scale != 1:
+            ov["tREFI"] = max(int(nominal.tRFC) + 1,
+                              int(nominal.tREFI) // refresh_scale)
+        return ov
+
+    t1 = max(1, int(total_cycles * boost_frac))
+    t2 = max(t1 + 1, int(total_cycles * (boost_frac + sustained_frac)))
+    return [
+        (0, derated(boost_scale)),
+        (t1, derated(sustained_scale)),
+        (t2, derated(throttle_scale, throttle_refresh_scale)),
+    ]
+
+
 def decode_step_traffic(name: str, params_bytes_per_device: float,
                         kv_bytes_per_device: float) -> WorkloadTraffic:
     """Single-token decode: read all weight shards once + the full KV/state."""

@@ -79,6 +79,59 @@ def test_bank_event_bound_kernel_matches_ref(topology, seed):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(direct))
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bank_fsm_kernel_schedule_resolution(seed):
+    """The packed-ABI ParamSchedule twin: with an [S, NP] parameter matrix
+    + [S, 1] boundary vector the kernel must resolve the active segment
+    in-kernel and agree with (a) the jnp oracle and (b) a constant-params
+    call carrying the segment's point — at cycles on, just before and
+    just after every boundary."""
+    from repro.core import lane_schedule
+    from repro.kernels.bank_fsm.ops import bank_event_bound
+
+    cfg = MemSimConfig()
+    spec = [(0, {}),
+            (120, {"tCL": 20, "tRCDRD": 18, "tREFI": 1800}),
+            (700, {"tCL": 28, "tRP": 17, "tRFC": 120, "tREFI": 900,
+                   "sref_idle_cycles": 333, "page_policy": "open"})]
+    sched = lane_schedule(cfg, spec)
+    rng = np.random.default_rng(seed)
+    b = cfg.num_banks
+    state = jnp.asarray(rng.integers(0, 14, size=(10, b)), jnp.int32)
+    state = state.at[1].set(jnp.asarray(rng.integers(0, 30, (b,)), jnp.int32))
+    state = state.at[3].set(jnp.asarray(rng.integers(0, 8000, (b,)), jnp.int32))
+    state = state.at[8].set(jnp.asarray(rng.integers(-1, 50, (b,)), jnp.int32))
+    state = state.at[9].set(jnp.asarray(rng.integers(0, 4, (b,)), jnp.int32))
+    inputs = jnp.asarray(rng.integers(0, 2, size=(3, b)), jnp.int32)
+    pop = jnp.asarray(rng.integers(0, 1000, size=(4, b)), jnp.int32)
+    import dataclasses
+    seg_cfgs = [dataclasses.replace(cfg, **ov) for _, ov in spec]
+    for cycle, seg in [(0, 0), (119, 0), (120, 1), (121, 1), (699, 1),
+                       (700, 2), (701, 2), (5000, 2)]:
+        cyc = jnp.int32(cycle)
+        s_ref, f_ref = bank_fsm_step(cfg.topology(), state, inputs, pop,
+                                     cyc, False, params=sched)
+        s_pal, f_pal = bank_fsm_step(cfg.topology(), state, inputs, pop,
+                                     cyc, True, True, params=sched)
+        s_const, f_const = bank_fsm_step(cfg.topology(), state, inputs, pop,
+                                         cyc, False,
+                                         params=seg_cfgs[seg].runtime())
+        np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_pal),
+                                      err_msg=f"cycle {cycle}")
+        np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_pal),
+                                      err_msg=f"cycle {cycle}")
+        np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_const),
+                                      err_msg=f"cycle {cycle} vs constant")
+        b_ref = bank_event_bound(state, cyc, sched, False)
+        b_pal = bank_event_bound(state, cyc, sched, True, True)
+        b_const = bank_event_bound(state, cyc, seg_cfgs[seg].runtime(),
+                                   False)
+        np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_pal),
+                                      err_msg=f"bound cycle {cycle}")
+        np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_const),
+                                      err_msg=f"bound cycle {cycle} const")
+
+
 def test_bank_fsm_kernel_multi_cycle_rollout():
     """Kernel == ref over a 200-cycle closed-loop rollout."""
     cfg = MemSimConfig()
