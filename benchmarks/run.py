@@ -308,6 +308,143 @@ def bench_event_skip() -> None:
          f"bit_identical={not mismatches};speedup={round(speedup, 2)}x")
 
 
+def bench_fused() -> None:
+    """Fused hot-loop acceptance: the per-executed-cycle hot path (FSM
+    edge + queue ops + response push/ack + both arbiters + timing windows
+    + event bound) as ONE Pallas dispatch instead of two kernels + XLA
+    glue.
+
+    Reports (a) kernel invocations per executed cycle, counted by
+    re-tracing one executed cycle of each backend's loop body — 2 for the
+    split pallas path, 1 fused; (b) steady-state wall-clock of the
+    decode-serving sweep on three legs: the PR-5 unfused baseline
+    (reconstructed exactly — pre-write-image memory phase, which forced
+    XLA to copy the full backing store every executed cycle), today's
+    unfused pallas path, and the fused path. The hot-loop work of this
+    PR (single dispatch + linear def-use memory chain so the carried
+    store updates in place) is what separates the legs: the acceptance
+    ``speedup_vs_pr5`` compares fused against the PR-5 baseline;
+    ``speedup_vs_unfused`` against the co-optimized unfused path (which
+    inherits the in-place fix and therefore sits near parity — the two
+    paths share the frontend/memory/counter glue, so with the copies
+    gone the second dispatch is most of what is left to save).
+    (c) per-lane bit-identity of the unfused and fused sweeps.
+    JSON: ``engine.fused``.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import MemSimConfig, sweep_grid
+    from repro.core import engine as eng
+    from repro.core import simulator as sim
+    from repro.core.fused_step import fused_cycle_step
+    from repro.core.simulator import cycle_step, init_state
+    from repro.kernels.bank_fsm import bank_fsm as bf
+    from repro.traces import llm_workload
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+    tr = llm_workload.decode_serving_trace(tokens=64 if smoke else 96)
+    nc = int(np.asarray(tr.t).max()) + 3000
+    grid = {
+        "queue_size": [16, 256],
+        "tREFI": [3600, 7200],
+        "page_policy": ["closed", "open"],
+    }
+
+    # (a) pallas dispatches per executed cycle: trace ONE loop body
+    def invocations(backend: str) -> int:
+        cfg = MemSimConfig(fsm_backend=backend)
+        topo = cfg.topology()
+        sched = eng.lane_schedule(cfg, None)
+        state = init_state(topo, sched, tr.num_requests)
+        c = jnp.int32(7)
+        if backend == "fused":
+            body = lambda s: fused_cycle_step(topo, sched, tr, s, c, c + 50)
+        else:
+            def body(s):
+                s = cycle_step(topo, sched, tr, s, c)
+                return s, eng._next_event(topo, sched, tr, s, c + 1, c + 50)
+        before = bf.trace_invocation_count()
+        jax.make_jaxpr(body)(state)
+        return bf.trace_invocation_count() - before
+
+    inv_unfused = invocations("pallas")
+    inv_fused = invocations("fused")
+
+    # (b)+(c) the decode-serving sweep, twice per leg (compile + steady),
+    # unfused vs fused lanes bit-compared
+    def run_sweep(backend: str):
+        cfg = MemSimConfig(fsm_backend=backend)
+        t0 = time.time()
+        results = sweep_grid(cfg, tr, grid, num_cycles=nc)
+        first = time.time() - t0
+        t0 = time.time()
+        results = sweep_grid(cfg, tr, grid, num_cycles=nc)
+        steady = time.time() - t0
+        return results, first, steady
+
+    def pr5_memory_phase(topo, n, old_bank, mem, rdata, rw_done):
+        # the PR-5 hot loop verbatim: scatter first, then gather the
+        # PRE-write image — which keeps ``mem`` live past the scatter and
+        # makes XLA copy the full backing store every executed cycle
+        maddr = old_bank.cur_addr & (topo.mem_words - 1)
+        is_wr = old_bank.cur_write == 1
+        widx = jnp.where(rw_done & is_wr, maddr, topo.mem_words)
+        mem2 = mem.at[widx].set(old_bank.cur_data, mode="drop")
+        rvals = mem[maddr]
+        ridx = jnp.where(rw_done & ~is_wr, old_bank.cur_id, n)
+        rdata2 = rdata.at[ridx].set(rvals, mode="drop")
+        return mem2, rdata2
+
+    # PR-5 baseline leg first: jit/AOT caches key on (topo, shapes), not
+    # on the traced-through helper, so each swap must drop compiled
+    # programs on both sides of the leg
+    cur_memory_phase = sim._memory_phase
+    sim._memory_phase = pr5_memory_phase
+    with eng._aot_lock:
+        eng._aot_cache.clear()
+    jax.clear_caches()
+    try:
+        _, first_5, steady_5 = run_sweep("pallas")
+    finally:
+        sim._memory_phase = cur_memory_phase
+    with eng._aot_lock:
+        eng._aot_cache.clear()
+    jax.clear_caches()
+
+    res_unfused, first_u, steady_u = run_sweep("pallas")
+    res_fused, first_f, steady_f = run_sweep("fused")
+    mismatches = []
+    for i, (ru, rf) in enumerate(zip(res_unfused, res_fused)):
+        mismatches += _bit_mismatches(ru, rf, f"lane{i}")
+    speedup_pr5 = steady_5 / max(steady_f, 1e-9)
+    speedup = steady_u / max(steady_f, 1e-9)
+
+    _ENGINE["fused"] = {
+        "trace": "llm_decode_serving",
+        "axes": {k: list(v) for k, v in grid.items()},
+        "lanes": len(res_fused),
+        "num_cycles": nc,
+        "invocations_per_cycle_unfused": inv_unfused,
+        "invocations_per_cycle_fused": inv_fused,
+        "pr5_unfused_first_s": round(first_5, 2),
+        "pr5_unfused_steady_s": round(steady_5, 2),
+        "unfused_first_s": round(first_u, 2),
+        "unfused_steady_s": round(steady_u, 2),
+        "fused_first_s": round(first_f, 2),
+        "fused_steady_s": round(steady_f, 2),
+        "bit_identical": not mismatches,
+        "mismatches": mismatches,
+        "speedup_vs_pr5": round(speedup_pr5, 2),
+        "speedup_vs_unfused": round(speedup, 2),
+    }
+    _row("engine_fused", steady_f * 1e6 / len(res_fused),
+         f"invocations/cycle={inv_fused}(from {inv_unfused});"
+         f"bit_identical={not mismatches};"
+         f"speedup_vs_pr5={round(speedup_pr5, 2)}x;"
+         f"speedup_vs_inplace_unfused={round(speedup, 2)}x")
+
+
 def bench_dvfs() -> None:
     """ISSUE-5 acceptance: time-varying RuntimeParams (DVFS / thermal
     throttling) as lanes of one compiled program, exact under
@@ -748,6 +885,7 @@ def main(argv=None) -> None:
     bench_fig9()
     bench_engine()
     bench_event_skip()
+    bench_fused()
     bench_dvfs()
     bench_param_grid()
     bench_topo_grid()

@@ -87,8 +87,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import logging
+import os
 import threading
 import time
+from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -190,11 +193,14 @@ def _next_event(topo: Topology, sched: ParamSchedule, trace: Trace,
         # both backends share one definition each, validated against the
         # other)
         if topo.fsm_backend == "pallas":
-            from repro.kernels.bank_fsm.ops import bank_event_bound
+            from repro.kernels.bank_fsm.ops import (
+                bank_event_bound,
+                default_interpret,
+            )
             from repro.kernels.bank_fsm.ref import pack_state
 
             local = bank_event_bound(pack_state(bank), nxt, sched, True,
-                                     True)
+                                     default_interpret())
         else:
             local = cycles_until_actionable(rp, bank, nxt)
         # a blocked bid becomes actionable the cycle its command turns legal
@@ -276,8 +282,16 @@ def _run_skip_core(topo: Topology, trace: Trace, num_cycles: Array,
 
     def body(carry):
         state, t, steps = carry
-        state = cycle_step(topo, sched, trace, state, t)
-        delta = _next_event(topo, sched, trace, state, t + 1, num_cycles)
+        if topo.fsm_backend == "fused":
+            # the fused kernel returns the edge AND the event bound from
+            # ONE pallas dispatch — no separate _next_event evaluation
+            from repro.core.fused_step import fused_cycle_step
+
+            state, delta = fused_cycle_step(topo, sched, trace, state, t,
+                                            num_cycles)
+        else:
+            state = cycle_step(topo, sched, trace, state, t)
+            delta = _next_event(topo, sched, trace, state, t + 1, num_cycles)
         state = _apply_skip(topo, sched, state, delta, t + 1)
         return (state, t + 1 + delta, steps + 1)
 
@@ -314,13 +328,21 @@ def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
 
     def body(carry):
         states, t, steps = carry
-        states = jax.vmap(
-            lambda tr, sc, st: cycle_step(topo, sc, tr, st, t)
-        )(traces, scheds, states)
-        deltas = jax.vmap(
-            lambda tr, sc, st: _next_event(topo, sc, tr, st, t + 1,
-                                           num_cycles)
-        )(traces, scheds, states)
+        if topo.fsm_backend == "fused":
+            from repro.core.fused_step import fused_cycle_step_batch
+
+            # lane-batched kernel: ONE dispatch for the whole batch (vmap
+            # over a pallas_call would serialize the kernel per lane)
+            states, deltas = fused_cycle_step_batch(topo, scheds, traces,
+                                                    states, t, num_cycles)
+        else:
+            states = jax.vmap(
+                lambda tr, sc, st: cycle_step(topo, sc, tr, st, t)
+            )(traces, scheds, states)
+            deltas = jax.vmap(
+                lambda tr, sc, st: _next_event(topo, sc, tr, st, t + 1,
+                                               num_cycles)
+            )(traces, scheds, states)
         delta = deltas.min()
         states = jax.vmap(
             lambda sc, st: _apply_skip(topo, sc, st, delta, t + 1)
@@ -582,7 +604,72 @@ def _maybe_shard(tree, batch: int) -> Tuple[object, bool]:
 # public API
 # --------------------------------------------------------------------------
 
-_aot_cache: Dict[tuple, object] = {}
+_logger = logging.getLogger(__name__)
+
+
+class _AotLruCache:
+    """Bounded LRU of AOT-compiled executables, keyed like the old dict.
+
+    Compiled XLA executables pin host and device memory for as long as they
+    are referenced; a long-lived process sweeping many topologies, horizons
+    or segment counts would otherwise grow its executable set without
+    bound. Capacity comes from ``MEMSIM_AOT_CACHE_SIZE`` (default 64,
+    clamped to >= 1), re-read on every insert so a live process can be
+    resized; the least-recently-used entry is dropped on overflow and each
+    eviction is logged (a hot sweep thrashing the cache shows up in the log
+    long before it shows up as recompile wall-clock). Not internally
+    locked — every call site already holds ``_aot_lock``."""
+
+    _DEFAULT = 64
+
+    def __init__(self) -> None:
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+
+    def maxsize(self) -> int:
+        raw = os.environ.get("MEMSIM_AOT_CACHE_SIZE", "").strip()
+        try:
+            size = int(raw) if raw else self._DEFAULT
+        except ValueError:
+            size = self._DEFAULT
+        return max(1, size)
+
+    def get(self, key, default=None):
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        return default
+
+    def __getitem__(self, key):
+        value = self._entries[key]
+        self._entries.move_to_end(key)
+        return value
+
+    def __contains__(self, key) -> bool:
+        # a presence probe precedes every reuse, so it refreshes recency too
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return True
+        return False
+
+    def __setitem__(self, key, value) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        limit = self.maxsize()
+        while len(self._entries) > limit:
+            old_key, _ = self._entries.popitem(last=False)
+            _logger.info(
+                "AOT cache evicted %r (%d executables > MEMSIM_AOT_CACHE_SIZE"
+                "=%d); evicted programs recompile on next use", old_key,
+                len(self._entries) + 1, limit)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+_aot_cache = _AotLruCache()
 #: guards _aot_cache: sweep_topologies compiles distinct-topology programs
 #: from worker threads, and _run_lanes/_timed may race with them.
 _aot_lock = threading.Lock()
@@ -633,17 +720,20 @@ def _sched_i32(params) -> ParamSchedule:
 
 def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
     """Phase one of the split AOT pipeline: trace + lower (holds the GIL,
-    so callers run it sequentially). Returns ``(key, lowered, lower_s)``;
-    ``lowered`` is None on a cache hit."""
+    so callers run it sequentially). Returns ``(key, lowered, lower_s,
+    cached)``; on a cache hit ``lowered`` is None and ``cached`` carries
+    the executable itself — a strong reference, because the bounded LRU
+    may evict the entry between this probe and the caller's use."""
     shapes = tuple((tuple(x.shape), str(x.dtype))
                    for x in jax.tree_util.tree_leaves(dyn_args))
     key = (id(jitted), static_key, shapes)
     with _aot_lock:
-        if key in _aot_cache:
-            return key, None, 0.0
+        cached = _aot_cache.get(key)
+    if cached is not None:
+        return key, None, 0.0, cached
     t0 = time.perf_counter()
     lowered = jitted.lower(*all_args)
-    return key, lowered, time.perf_counter() - t0
+    return key, lowered, time.perf_counter() - t0, None
 
 
 def _aot_finish(key: tuple, lowered) -> Tuple[object, float]:
@@ -671,11 +761,10 @@ def _aot_compile(jitted, all_args: tuple, dyn_args: tuple,
     :func:`sweep_topologies` overlap one compile per topology; it splits
     the two phases via :func:`_aot_lower` / :func:`_aot_finish`, which
     this composes). Returns ``(compiled, compile_seconds, fresh)``."""
-    key, lowered, lower_s = _aot_lower(jitted, all_args, dyn_args,
-                                       static_key)
+    key, lowered, lower_s, cached = _aot_lower(jitted, all_args, dyn_args,
+                                               static_key)
     if lowered is None:
-        with _aot_lock:
-            return _aot_cache[key], 0.0, 0
+        return cached, 0.0, 0
     compiled, compile_s = _aot_finish(key, lowered)
     return compiled, lower_s + compile_s, 1
 
@@ -1287,10 +1376,9 @@ def sweep_topologies(cfg: MemSimConfig,
                                             devices[gi].id)))
 
     def finish(gi: int) -> Tuple[object, float, int]:
-        key, low, lower_s = lowered[gi]
+        key, low, lower_s, cached = lowered[gi]
         if low is None:
-            with _aot_lock:
-                return _aot_cache[key], 0.0, 0
+            return cached, 0.0, 0
         compiled, c_s = _aot_finish(key, low)
         return compiled, lower_s + c_s, 1
 

@@ -57,7 +57,7 @@ PAGE_CLOSED, PAGE_OPEN = 0, 1
 SCHED_FCFS, SCHED_FRFCFS = 0, 1
 PAGE_POLICIES = {"closed": PAGE_CLOSED, "open": PAGE_OPEN}
 SCHED_POLICIES = {"fcfs": SCHED_FCFS, "frfcfs": SCHED_FRFCFS}
-FSM_BACKENDS = ("jnp", "pallas")
+FSM_BACKENDS = ("jnp", "pallas", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +89,10 @@ class Topology:
     # "jnp": pure-jnp FSM update (CPU default). "pallas": the TPU kernel in
     # repro.kernels.bank_fsm (interpret mode on CPU — slow inside long scans,
     # meant for TPU deployment; equivalence is enforced by the kernel tests).
+    # "fused": one Pallas call per executed cycle covering FSM update, queue
+    # head peek/pop bookkeeping, response push + ready&valid gating, both
+    # round-robin arbiters, DRAM timing-window updates, and the event-horizon
+    # bound (repro.kernels.bank_fsm.fused).
     fsm_backend: str = "jnp"
 
     def __post_init__(self):

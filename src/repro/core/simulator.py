@@ -208,17 +208,14 @@ def issue_eligibility(topo: Topology, sched, timing: TimingState,
     return eligible, cmds, legal_at
 
 
-def cycle_step(topo: Topology, sched, trace: Trace,
-               state: SimState, cycle: Array) -> SimState:
-    """One synchronous clock edge. ``sched`` is a :class:`ParamSchedule`
-    (or bare :class:`RuntimeParams`): every parameter consumed this cycle
-    is resolved through ``params_at(cycle)`` — the per-cycle reference
-    semantics time-varying runs are defined by."""
-    sched = as_schedule(sched)
-    rp = sched.params_at(cycle)
-    seg = sched.segment_at(cycle)
+def _frontend_phases(topo: Topology, trace: Trace, state: SimState,
+                     cycle: Array):
+    """Phases 1-2 of the clock edge: trace admission into the global
+    reqQueue and dispatch of its head into the target bank queue. Shared
+    verbatim between :func:`cycle_step` and the fused hot-loop step
+    (:mod:`repro.core.fused_step`). Returns ``(req_q, bank_q, t_admit,
+    t_dispatch, next_arrival, blocked_arrival, blocked_dispatch)``."""
     n = trace.num_requests
-    b = topo.num_banks
 
     # ---- phase 1: front-end arrival into reqQueue (1 request / cycle) -----
     idx = jnp.minimum(state.next_arrival, n - 1)
@@ -246,6 +243,78 @@ def cycle_step(topo: Topology, sched, trace: Trace,
         jnp.where(do_dispatch, ditem[3], n)
     ].set(cycle.astype(jnp.int32), mode="drop")
     blocked_dispatch = state.blocked_dispatch + (have_req & tgt_full).astype(jnp.int32)
+    return (req_q, bank_q, t_admit, t_dispatch, next_arrival,
+            blocked_arrival, blocked_dispatch)
+
+
+def _promote_frfcfs(topo: Topology, rp, bank_q: BankedFifo,
+                    open_row: Array) -> BankedFifo:
+    """FR-FCFS (a traced policy flag): promote the oldest row-hit to each
+    bank queue's head. lax.cond keeps the promotion network off the
+    runtime path for FCFS lanes on the single-lane engines (under vmap it
+    lowers to a select, which is the price of a shared program). Shared by
+    :func:`cycle_step` and the fused step."""
+    from repro.core.bank_fsm import row_of
+
+    def _promoted_buf():
+        q = bank_q.capacity
+        offs = (bank_q.head[:, None] + jnp.arange(q)[None, :]) % q
+        addrs = jnp.take_along_axis(bank_q.buf[..., 0], offs, axis=1)
+        return bank_q.promote_rowhit(open_row, row_of(topo, addrs)).buf
+
+    return bank_q._replace(buf=jax.lax.cond(
+        jnp.asarray(rp.sched_policy) == SCHED_FRFCFS,
+        _promoted_buf, lambda: bank_q.buf))
+
+
+def _memory_phase(topo: Topology, n: int, old_bank: BankState, mem: Array,
+                  rdata: Array, rw_done: Array) -> Tuple[Array, Array]:
+    """Phase 6: bit-true memory access on column completion, on the
+    PRE-edge bank registers (the request the completing column command
+    belongs to). Shared by :func:`cycle_step` and the fused step."""
+    maddr = old_bank.cur_addr & (topo.mem_words - 1)
+    is_wr = old_bank.cur_write == 1
+    widx = jnp.where(rw_done & is_wr, maddr, topo.mem_words)
+    # read through the scatter OUTPUT: banks never alias a word in-cycle,
+    # so the post-write image equals the pre-write one at every read
+    # address — and chaining the gather after the scatter gives ``mem``
+    # a single linear def-use chain, so XLA's scatter expander mutates
+    # the carried backing store in place instead of copying the full
+    # array (twice) every executed cycle to keep a pre-write image live
+    mem2 = mem.at[widx].set(old_bank.cur_data, mode="drop")
+    rvals = mem2[maddr]
+    ridx = jnp.where(rw_done & ~is_wr, old_bank.cur_id, n)
+    rdata2 = rdata.at[ridx].set(rvals, mode="drop")
+    return mem2, rdata2
+
+
+def cycle_step(topo: Topology, sched, trace: Trace,
+               state: SimState, cycle: Array) -> SimState:
+    """One synchronous clock edge. ``sched`` is a :class:`ParamSchedule`
+    (or bare :class:`RuntimeParams`): every parameter consumed this cycle
+    is resolved through ``params_at(cycle)`` — the per-cycle reference
+    semantics time-varying runs are defined by.
+
+    With ``topo.fsm_backend == "fused"`` the whole edge (after the scalar
+    front-end phases) runs through the single fused Pallas kernel; the
+    event-horizon bound it also computes is discarded here (the skip
+    engines consume it via :func:`repro.core.fused_step.fused_cycle_step`
+    directly)."""
+    if topo.fsm_backend == "fused":
+        from repro.core.fused_step import fused_cycle_step
+
+        new_state, _ = fused_cycle_step(topo, sched, trace, state, cycle,
+                                        cycle + 1)
+        return new_state
+
+    sched = as_schedule(sched)
+    rp = sched.params_at(cycle)
+    seg = sched.segment_at(cycle)
+    n = trace.num_requests
+    b = topo.num_banks
+
+    (req_q, bank_q, t_admit, t_dispatch, next_arrival, blocked_arrival,
+     blocked_dispatch) = _frontend_phases(topo, trace, state, cycle)
 
     # ---- phase 3: command bids, timing legality, per-channel RR grant ------
     eligible, cmds, _ = issue_eligibility(topo, sched, state.timing,
@@ -278,25 +347,10 @@ def cycle_step(topo: Topology, sched, trace: Trace,
     resp_q = state.resp_q.push(resp_item, any_resp)
 
     # ---- phase 5: synchronous FSM update + bank queue pops -----------------
-    # FR-FCFS (a traced policy flag): promote the oldest row-hit to each
-    # bank queue's head. lax.cond keeps the promotion network off the
-    # runtime path for FCFS lanes on the single-lane engines (under vmap it
-    # lowers to a select, which is the price of a shared program).
-    from repro.core.bank_fsm import row_of
-
-    def _promoted_buf():
-        q = bank_q.capacity
-        offs = (bank_q.head[:, None] + jnp.arange(q)[None, :]) % q
-        addrs = jnp.take_along_axis(bank_q.buf[..., 0], offs, axis=1)
-        return bank_q.promote_rowhit(state.bank.open_row,
-                                     row_of(topo, addrs)).buf
-
-    bank_q = bank_q._replace(buf=jax.lax.cond(
-        jnp.asarray(rp.sched_policy) == SCHED_FRFCFS,
-        _promoted_buf, lambda: bank_q.buf))
+    bank_q = _promote_frfcfs(topo, rp, bank_q, state.bank.open_row)
     pop_items, queue_nonempty = bank_q.peek_valid()
     if topo.fsm_backend == "pallas":
-        from repro.kernels.bank_fsm.ops import bank_fsm_step
+        from repro.kernels.bank_fsm.ops import bank_fsm_step, default_interpret
         from repro.kernels.bank_fsm.ref import pack_state, unpack_state
         from repro.core.bank_fsm import FsmOutputs
 
@@ -308,7 +362,8 @@ def cycle_step(topo: Topology, sched, trace: Trace,
         # the kernel twin takes the full packed schedule ([S, NP] values +
         # [S, 1] boundaries) and resolves the active segment in-kernel
         new_packed, flags = bank_fsm_step(
-            topo, packed, ins, pop_items.T, cycle, True, True, params=sched
+            topo, packed, ins, pop_items.T, cycle, True, default_interpret(),
+            params=sched
         )
         new_bank = unpack_state(new_packed)
         outs = FsmOutputs(
@@ -326,13 +381,8 @@ def cycle_step(topo: Topology, sched, trace: Trace,
     ].set(cycle.astype(jnp.int32), mode="drop")
 
     # ---- phase 6: bit-true memory access on column completion --------------
-    maddr = state.bank.cur_addr & (topo.mem_words - 1)
-    is_wr = state.bank.cur_write == 1
-    widx = jnp.where(outs.rw_done & is_wr, maddr, topo.mem_words)
-    mem = state.mem.at[widx].set(state.bank.cur_data, mode="drop")
-    rvals = state.mem[maddr]  # pre-write image; banks never alias a word in-cycle
-    ridx = jnp.where(outs.rw_done & ~is_wr, state.bank.cur_id, n)
-    rdata = state.rdata.at[ridx].set(rvals, mode="drop")
+    mem, rdata = _memory_phase(topo, n, state.bank, state.mem, state.rdata,
+                               outs.rw_done)
 
     # ---- phase 7: respQueue -> front-end ack (stats close out) -------------
     # The pop reads the post-push queue: a response pushed into an empty

@@ -58,6 +58,23 @@ from repro.core.params import (
 )
 
 
+# Trace-time invocation counter: each pallas wrapper bumps this once per
+# *call site reached while tracing*. A jitted while_loop traces its body
+# exactly once, so the delta across a fresh trace equals the number of
+# pallas_call dispatches per executed cycle (2 for the split FSM +
+# event-bound path, 1 for the fused kernel). benchmarks/run.py reports it
+# in the engine.fused BENCH section.
+_TRACE_INVOCATIONS = {"count": 0}
+
+
+def trace_invocation_count() -> int:
+    return _TRACE_INVOCATIONS["count"]
+
+
+def _count_invocation() -> None:
+    _TRACE_INVOCATIONS["count"] += 1
+
+
 def _resolve_rp(rp_ref, bnd_ref, cycle):
     """In-kernel ParamSchedule resolution: select the [1, NP] row of the
     segment governing ``cycle`` from the packed [S, NP] matrix.
@@ -83,30 +100,23 @@ def _resolve_rp(rp_ref, bnd_ref, cycle):
     return rp
 
 
-def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, bnd_ref,
-            cycle_ref, new_state_ref, flags_ref):
-    row_shift = topo.addr_low_bits + topo.column_bits
+def _fsm_combinational(topo: Topology, rp, cycle, rows, grant, resp_accept,
+                       queue_nonempty, pop_rows):
+    """The bank-FSM clock edge as a pure function of loaded (1, bb) rows.
 
-    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
+    Shared verbatim between :func:`_kernel` (the split FSM kernel) and the
+    fused hot-loop kernel (fused.py), so the two backends cannot drift:
+    both lower exactly this where-chain. ``rp`` is the accessor returned by
+    :func:`_resolve_rp`; ``rows`` is the 10-tuple of packed state rows;
+    ``pop_rows`` the 4-tuple of peeked head-of-queue rows. Returns
+    (new_rows 10-tuple, (want_pop, rw_done, completed) bool rows)."""
+    row_shift = topo.addr_low_bits + topo.column_bits
 
     is_open = rp("page_policy") == PAGE_OPEN  # traced scalar flag
 
-    # rows as (1, bb) int32 vectors
-    st = state_ref[0:1, :]
-    timer = state_ref[1:2, :]
-    idle_ctr = state_ref[2:3, :]
-    refresh_due = state_ref[3:4, :]
-    cur_addr = state_ref[4:5, :]
-    cur_write = state_ref[5:6, :]
-    cur_data = state_ref[6:7, :]
-    cur_id = state_ref[7:8, :]
-    open_row = state_ref[8:9, :]
-    pending = state_ref[9:10, :]
-
-    grant = inputs_ref[0:1, :] == 1
-    resp_accept = inputs_ref[1:2, :] == 1
-    queue_nonempty = inputs_ref[2:3, :] == 1
-    cycle = cycle_ref[0, 0]
+    (st, timer, idle_ctr, refresh_due, cur_addr, cur_write, cur_data,
+     cur_id, open_row, pending) = rows
+    pop_addr, pop_write, pop_data, pop_id = pop_rows
 
     refresh_needed = cycle >= (refresh_due - rp("tRFC"))
 
@@ -165,7 +175,7 @@ def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, bnd_ref,
     pending = jnp.where(go_ref & ref_pre, P_REF, pending)
 
     want_pop = idle & ~refresh_needed & queue_nonempty
-    pop_row = pop_ref[0:1, :] >> row_shift
+    pop_row = pop_addr >> row_shift
     hit = is_open & want_pop & row_is_open & (open_row == pop_row)
     conflict = is_open & want_pop & row_is_open & (open_row != pop_row)
     nxt = jnp.where(want_pop, S_ACT_ISSUE, nxt)
@@ -191,42 +201,46 @@ def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, bnd_ref,
     refresh_due2 = jnp.where(exiting, cycle + rp("tREFI"), refresh_due2)
 
     # latch popped request
-    cur_addr2 = jnp.where(want_pop, pop_ref[0:1, :], cur_addr)
-    cur_write2 = jnp.where(want_pop, pop_ref[1:2, :], cur_write)
-    cur_data2 = jnp.where(want_pop, pop_ref[2:3, :], cur_data)
-    cur_id2 = jnp.where(want_pop, pop_ref[3:4, :], cur_id)
+    cur_addr2 = jnp.where(want_pop, pop_addr, cur_addr)
+    cur_write2 = jnp.where(want_pop, pop_write, cur_write)
+    cur_data2 = jnp.where(want_pop, pop_data, cur_data)
+    cur_id2 = jnp.where(want_pop, pop_id, cur_id)
 
-    new_state_ref[0:1, :] = nxt.astype(jnp.int32)
-    new_state_ref[1:2, :] = timer2.astype(jnp.int32)
-    new_state_ref[2:3, :] = idle_ctr2.astype(jnp.int32)
-    new_state_ref[3:4, :] = refresh_due2.astype(jnp.int32)
-    new_state_ref[4:5, :] = cur_addr2
-    new_state_ref[5:6, :] = cur_write2
-    new_state_ref[6:7, :] = cur_data2
-    new_state_ref[7:8, :] = cur_id2
-    new_state_ref[8:9, :] = open_row.astype(jnp.int32)
-    new_state_ref[9:10, :] = pending.astype(jnp.int32)
+    new_rows = (nxt.astype(jnp.int32), timer2.astype(jnp.int32),
+                idle_ctr2.astype(jnp.int32), refresh_due2.astype(jnp.int32),
+                cur_addr2, cur_write2, cur_data2, cur_id2,
+                open_row.astype(jnp.int32), pending.astype(jnp.int32))
+    return new_rows, (want_pop, rw_done, completed)
+
+
+def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, bnd_ref,
+            cycle_ref, new_state_ref, flags_ref):
+    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
+    cycle = cycle_ref[0, 0]
+
+    rows = tuple(state_ref[i:i + 1, :] for i in range(10))
+    pop_rows = tuple(pop_ref[i:i + 1, :] for i in range(4))
+    grant = inputs_ref[0:1, :] == 1
+    resp_accept = inputs_ref[1:2, :] == 1
+    queue_nonempty = inputs_ref[2:3, :] == 1
+
+    new_rows, (want_pop, rw_done, completed) = _fsm_combinational(
+        topo, rp, cycle, rows, grant, resp_accept, queue_nonempty, pop_rows)
+
+    for i, row in enumerate(new_rows):
+        new_state_ref[i:i + 1, :] = row
     flags_ref[0:1, :] = want_pop.astype(jnp.int32)
     flags_ref[1:2, :] = rw_done.astype(jnp.int32)
     flags_ref[2:3, :] = completed.astype(jnp.int32)
 
 
-def _event_bound_kernel(state_ref, rp_ref, bnd_ref, cycle_ref, out_ref):
+def _event_bound_combinational(rp, cycle, st, timer, idle_ctr, refresh_due):
     """Cycles-until-actionable per bank (the FSM-local half of the
-    event-horizon bound): identical where-chain to
-    :func:`repro.core.bank_fsm.cycles_until_actionable` on the packed ABI,
-    evaluated under the schedule segment governing ``cycle`` (resolved
-    in-kernel; the engine caps skips at the next boundary, so the bound
-    never needs to see past the active segment)."""
-
-    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
-
-    st = state_ref[0:1, :]
-    timer = state_ref[1:2, :]
-    idle_ctr = state_ref[2:3, :]
-    refresh_due = state_ref[3:4, :]
-    cycle = cycle_ref[0, 0]
-
+    event-horizon bound) as a pure function of loaded (1, bb) rows:
+    identical where-chain to
+    :func:`repro.core.bank_fsm.cycles_until_actionable` on the packed ABI.
+    Shared verbatim between :func:`_event_bound_kernel` and the fused
+    hot-loop kernel (fused.py)."""
     in_wait = (
         (st == S_ACT_WAIT) | (st == S_RW_WAIT) | (st == S_PRE_WAIT)
         | (st == S_REF_WAIT) | (st == S_SREF_EXIT_WAIT)
@@ -239,7 +253,18 @@ def _event_bound_kernel(state_ref, rp_ref, bnd_ref, cycle_ref, out_ref):
     bound = jnp.where(in_wait, timer - 1, bound)
     bound = jnp.where(is_idle, jnp.minimum(refresh_in, sref_in), bound)
     bound = jnp.where(is_sref, EVENT_INF, bound)
-    out_ref[0:1, :] = bound.astype(jnp.int32)
+    return bound.astype(jnp.int32)
+
+
+def _event_bound_kernel(state_ref, rp_ref, bnd_ref, cycle_ref, out_ref):
+    """Per-bank event bound, evaluated under the schedule segment governing
+    ``cycle`` (resolved in-kernel; the engine caps skips at the next
+    boundary, so the bound never needs to see past the active segment)."""
+    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
+    cycle = cycle_ref[0, 0]
+    out_ref[0:1, :] = _event_bound_combinational(
+        rp, cycle, state_ref[0:1, :], state_ref[1:2, :], state_ref[2:3, :],
+        state_ref[3:4, :])
 
 
 def bank_event_bound_pallas(state, rp_mat, bounds, cycle, block_b: int = 128,
@@ -251,6 +276,7 @@ def bank_event_bound_pallas(state, rp_mat, bounds, cycle, block_b: int = 128,
     b = state.shape[1]
     s = rp_mat.shape[0]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    _count_invocation()
     grid = (b // block_b,)
     return pl.pallas_call(
         _event_bound_kernel,
@@ -275,6 +301,7 @@ def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_mat, bounds,
     b = state.shape[1]
     s = rp_mat.shape[0]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    _count_invocation()
     grid = (b // block_b,)
     kernel = functools.partial(_kernel, topo)
     return pl.pallas_call(

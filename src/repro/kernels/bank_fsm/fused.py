@@ -1,0 +1,457 @@
+"""Fused hot-loop kernel: ONE Pallas call per executed cycle.
+
+The event-horizon engine executes few cycles, but each executed cycle used
+to pay two ``pallas_call`` dispatches (the bank-FSM kernel and its
+event-bound twin) plus XLA glue for the queue peeks, the response push and
+both round-robin arbiters. This kernel fuses phases 3-7 of
+``repro.core.simulator.cycle_step`` *and* the engine's
+``_next_event`` bound into a single invocation:
+
+  * command bids + rank timing legality (``issue_eligibility``),
+  * the per-channel rotating-priority arbiters (``rr_arbiter_grouped``),
+  * rank timing-window updates (``record_issue``, vectorized per-bank),
+  * response arbitration + respQueue push with ready&valid gating,
+  * the post-FSM bank-queue head/count pop bookkeeping (the head PEEK —
+    one gather, ``BankedFifo.peek_valid`` — stays in glue and feeds the
+    kernel as pop rows, exactly like the split FSM kernel's ABI),
+  * the FSM clock edge itself (the *shared* ``_fsm_combinational``
+    where-chain — the exact network the split kernel lowers),
+  * the flow-through respQueue ack (``Fifo.pop`` on the post-push buffer),
+  * the event-horizon bound at ``cycle + 1`` on the post-edge state (the
+    shared ``_event_bound_combinational`` plus blocked-bid legality and
+    the next-schedule-boundary cap).
+
+Phases 1-2 (trace admission + dispatch, inherently scalar) and the
+record/memory scatters stay in XLA glue (``repro.core.fused_step``); the
+acceptance metric is pallas dispatches per executed cycle, which drops
+from 2 to 1 with the remaining glue absorbed into the same jitted body.
+
+The kernel is natively LANE-BATCHED: ``lanes`` independent sweeps (each
+its own trace position, queues, schedule and arbiter pointers, all on the
+engine's shared batch clock) fold into the bank axis, so the vmapped
+batch runner pays ONE dispatch per executed cycle for the whole batch —
+not one per lane, which is what ``jax.vmap`` over a ``pallas_call`` would
+serialize into via the grid. All cross-bank reductions (both arbiters,
+the inert gate, the event bound) are segmented reshape reductions over
+``[lanes * channels, banks_per_channel]`` / ``[lanes, B]`` matrices, so
+the op count is independent of both the lane count and the channel count.
+
+ABI (all int32; L = lanes, B = banks per lane, Qr = resp capacity,
+F = 4 request fields, S = schedule segments, C = channels; lane-major
+bank axis, i.e. position = lane * B + bank). The per-bank rows travel as
+ONE [ROWS, L*B] operand per direction — interpret mode copies every
+operand into its block each dispatch, so operand count and size are paid
+per executed cycle (this is also why the queue head PEEK — a gather the
+split path already does in glue — feeds the kernel as 4 pop rows instead
+of shipping the whole [L*B, Q*F] queue buffer through the ABI; the pop
+BOOKKEEPING stays in-kernel):
+
+  inputs   bank rows [23,L*B]: state 0-9 | qmeta 10-11 (head,count) |
+           timing 12-18 (last_act, act_win0..3, last_rd, last_wr gathered
+           per-bank) | pop 19-22 (head items; garbage where empty) —
+           plus resp_buf [L*Qr,F] | rp_mat [L*S,NP] | bounds [L*S,1] |
+           scal [L, 8+C] = (cycle, arrival_rel, horizon, req_count,
+           resp_head, resp_count, resp_limit, resp_rr, cmd_rr[C]) per
+           lane (cycle/horizon are the shared clock)
+  outputs  bank rows [22,L*B]: new_state 0-9 | flags 10-12 | qmeta2
+           13-14 | timing2 15-21 (rank-uniform; glue reduces back to [R])
+           — plus resp_buf2 [L*Qr,F] | scal2 [L, 9+2C] = (delta,
+           resp_rr2, resp_head2, resp_count2, ack_valid, fitem_addr,
+           fitem_write, fitem_data, fitem_id, cmd_rr2[C], issued_cmd[C])
+           per lane
+
+Bit-exactness against the unfused path is a structural property wherever
+possible (the FSM edge and local event bound are the *same* functions the
+split kernels call) and enforced by tests/test_kernels.py +
+tests/test_engine_equivalence.py everywhere else (arbiters, timing
+windows, queue ops, gate logic).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import warnings
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bank_fsm import EVENT_INF
+from repro.core.params import (
+    CMD_ACT,
+    CMD_NOP,
+    CMD_PRE,
+    CMD_RD,
+    CMD_REF,
+    CMD_SREF_ENTER,
+    CMD_SREF_EXIT,
+    CMD_WR,
+    RP_INDEX,
+    S_ACT_ISSUE,
+    S_ACT_WAIT,
+    S_IDLE,
+    S_PRE_ISSUE,
+    S_PRE_WAIT,
+    S_REF_ISSUE,
+    S_REF_WAIT,
+    S_RESP_PEND,
+    S_RW_ISSUE,
+    S_RW_WAIT,
+    S_SREF,
+    S_SREF_EXIT_ISSUE,
+    S_SREF_EXIT_WAIT,
+    S_SREF_ISSUE,
+    SCHEDULE_INF,
+    Topology,
+)
+from repro.kernels.bank_fsm.bank_fsm import (
+    _count_invocation,
+    _event_bound_combinational,
+    _fsm_combinational,
+)
+
+# plain int (no module-level jnp constants — see ops.py): the dram_model
+# "legal since long ago" default
+_NEG = -(1 << 20)
+
+NUM_TIMING_ROWS = 7      # last_act, act_win0..3, last_rd, last_wr
+NUM_BANK_ROWS_IN = 23    # state 10 + qmeta 2 + timing 7 + pop 4
+NUM_BANK_ROWS_OUT = 22   # state 10 + flags 3 + qmeta 2 + timing 7
+NUM_SCAL_IN = 8          # + channels
+NUM_SCAL_OUT = 9         # + 2 * channels
+
+# one-shot probe cache for the non-interpret path, keyed by
+# (topology, segment count, lanes): can Mosaic/Triton compile *this*
+# fused kernel at *this* batch width?
+_FUSED_NONINTERPRET_OK: Dict[tuple, bool] = {}
+
+
+def _compute_cmds(st, cur_write):
+    """Lanewise :func:`repro.core.bank_fsm.compute_bids` (cmds only; a lane
+    bids iff its cmd != CMD_NOP)."""
+    cmd = jnp.full_like(st, CMD_NOP)
+    cmd = jnp.where(st == S_ACT_ISSUE, CMD_ACT, cmd)
+    rw = jnp.where(cur_write == 1, CMD_WR, CMD_RD)
+    cmd = jnp.where(st == S_RW_ISSUE, rw, cmd)
+    cmd = jnp.where(st == S_PRE_ISSUE, CMD_PRE, cmd)
+    cmd = jnp.where(st == S_REF_ISSUE, CMD_REF, cmd)
+    cmd = jnp.where(st == S_SREF_ISSUE, CMD_SREF_ENTER, cmd)
+    cmd = jnp.where(st == S_SREF_EXIT_ISSUE, CMD_SREF_EXIT, cmd)
+    return cmd
+
+
+def _legal_at(rp, cmd, la, aw0, aw1, aw2, aw3, lr, lw):
+    """Lanewise :func:`repro.core.dram_model.legal_issue_cycle` on the
+    per-bank expanded timing rows."""
+    oldest = jnp.minimum(jnp.minimum(aw0, aw1), jnp.minimum(aw2, aw3))
+    act_at = jnp.maximum(la + rp("tRRDL"), oldest + rp("tFAW"))
+    rd_at = jnp.maximum(lr + rp("tCCDL"), lw + rp("tWTR"))
+    wr_at = jnp.maximum(lw + rp("tCCDL"), lr + rp("tRTW"))
+    at = jnp.full_like(cmd, _NEG)
+    at = jnp.where(cmd == CMD_ACT, act_at, at)
+    at = jnp.where(cmd == CMD_RD, rd_at, at)
+    at = jnp.where(cmd == CMD_WR, wr_at, at)
+    return at.astype(jnp.int32)
+
+
+def _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, width):
+    """Per-lane in-kernel ParamSchedule resolution: select each lane's
+    [NP] row of the segment governing ``cycle`` from the stacked
+    [L*S, NP] matrix, then serve ``rp(name)`` as a [1, L*width]
+    lane-broadcast row (what the shared combinational networks consume).
+
+    The active segment per lane is the last one whose start boundary is
+    <= cycle (boundaries sorted; SCHEDULE_INF padding rows never
+    activate), found branchlessly per lane: count satisfied boundaries,
+    one-hot the row, reduce. S == 1 (the constant degenerate schedule)
+    reads the lane rows directly — the kernel specializes on the static
+    block shape, so constant-params programs pay nothing. Accessed rows
+    are memoized so each timing parameter broadcasts once per resolve."""
+    s = rp_ref.shape[0] // lanes
+    if s == 1:
+        rows = rp_ref[...]                                      # [L, NP]
+    else:
+        bnd = bnd_ref[...].reshape(lanes, s)
+        segs = jnp.sum((bnd <= cycle).astype(jnp.int32), axis=1) - 1
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, (lanes, s), 1)
+                  == segs[:, None]).astype(jnp.int32)
+        rows = jnp.sum(rp_ref[...].reshape(lanes, s, -1)
+                       * onehot[:, :, None], axis=1)            # [L, NP]
+
+    cache: Dict[str, jax.Array] = {}
+
+    def rp(name):
+        if name not in cache:
+            col = rows[:, RP_INDEX[name]]
+            cache[name] = jnp.broadcast_to(
+                col[:, None], (lanes, width)).reshape(1, lanes * width)
+        return cache[name]
+
+    return rp
+
+
+def _fused_kernel(topo: Topology, lanes: int, bank_ref, resp_ref, rp_ref,
+                  bnd_ref, scal_ref, bank_out_ref, resp_out_ref,
+                  scal_out_ref):
+    b = topo.num_banks              # banks per lane
+    total = lanes * b
+    nf = resp_ref.shape[1]          # request fields (4)
+    qr = resp_ref.shape[0] // lanes  # resp queue capacity per lane
+    q_cap = topo.queue_size         # bank queue capacity
+    per = topo.banks_per_channel
+    channels = topo.channels
+    seg_rows = lanes * channels     # arbiter matrix: one row per lane-channel
+
+    # ---- per-lane scalars --------------------------------------------------
+    scal = scal_ref[...]
+    cycle = scal[0, 0]              # shared batch clock (same in every lane)
+    horizon = scal[0, 2]
+    arrival_rel = scal[:, 1]        # [L]
+    req_count = scal[:, 3]
+    resp_head = scal[:, 4]
+    resp_count = scal[:, 5]
+    resp_limit = scal[:, 6]
+    resp_rr = scal[:, 7]
+    cmd_rr = scal[:, NUM_SCAL_IN:NUM_SCAL_IN + channels]        # [L, C]
+    nxt = cycle + 1
+
+    rp = _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, b)
+    rp2 = _resolve_rp_lanes(rp_ref, bnd_ref, nxt, lanes, b)
+
+    # ---- loads (one [23, L*B] operand; row map in the module docstring) ----
+    rows = tuple(bank_ref[i:i + 1, :] for i in range(10))
+    st = rows[0]
+    cur_addr, cur_write, cur_data, cur_id = rows[4], rows[5], rows[6], rows[7]
+    qhead = bank_ref[10:11, :]
+    qcount = bank_ref[11:12, :]
+    la = bank_ref[12:13, :]
+    aw0 = bank_ref[13:14, :]
+    aw1 = bank_ref[14:15, :]
+    aw2 = bank_ref[15:16, :]
+    aw3 = bank_ref[16:17, :]
+    lr = bank_ref[17:18, :]
+    lw = bank_ref[18:19, :]
+    # head items peeked by glue (garbage where the queue is empty, exactly
+    # like the unfused peek — the FSM masks on queue_nonempty)
+    pop_rows = tuple(bank_ref[19 + f:20 + f, :] for f in range(nf))
+    queue_nonempty = qcount > 0
+
+    # ---- phase 3: bids, legality, per-channel RR grant, record_issue -------
+    cmds = _compute_cmds(st, cur_write)
+    bids = cmds != CMD_NOP
+    legal = _legal_at(rp, cmds, la, aw0, aw1, aw2, aw3, lr, lw)
+    eligible = bids & (cycle >= legal)
+
+    # segmented arbitration: [1, L*B] -> [L*C, per] puts each lane-channel
+    # in its own row, so every grant/min/rotation is ONE reduction over
+    # axis 1 regardless of lane or channel count (channels are disjoint,
+    # so the old static per-channel unroll order was irrelevant anyway)
+    elig_m = eligible.reshape(seg_rows, per)
+    wi = jax.lax.broadcasted_iota(jnp.int32, (seg_rows, per), 1)
+    ptr = cmd_rr.reshape(seg_rows, 1)
+    rot = (wi - ptr) % per
+    key = jnp.where(elig_m, rot, per)
+    m = jnp.min(key, axis=1, keepdims=True)                     # [L*C, 1]
+    any_g = m < per
+    g_m = elig_m & (rot == m)
+    grant = g_m.reshape(1, total)
+    cmd_rr2 = jnp.where(any_g, (ptr + m + 1) % per, ptr).reshape(
+        lanes, channels)
+    g_i = g_m.astype(jnp.int32)
+    cmd_w = jnp.sum(g_i * cmds.reshape(seg_rows, per), axis=1,
+                    keepdims=True)              # CMD_NOP when no grant
+    issued = cmd_w.reshape(lanes, channels)
+    # record_issue, vectorized: every lane of the winner's rank holds the
+    # same register value, so a masked elementwise update is the scalar
+    # .at[rank] update broadcast per-bank (rank blocks align with channel
+    # blocks: ranks are channel-disjoint)
+    rank_in = wi // topo.banks_per_rank
+    rank_w = jnp.sum(g_i * rank_in, axis=1, keepdims=True)
+    upd = rank_in == rank_w
+    is_act = any_g & (cmd_w == CMD_ACT)
+    is_rd = any_g & (cmd_w == CMD_RD)
+    is_wr = any_g & (cmd_w == CMD_WR)
+    la_m = la.reshape(seg_rows, per)
+    aw0_m = aw0.reshape(seg_rows, per)
+    aw1_m = aw1.reshape(seg_rows, per)
+    aw2_m = aw2.reshape(seg_rows, per)
+    aw3_m = aw3.reshape(seg_rows, per)
+    la2 = jnp.where(is_act & upd, cycle, la_m)
+    # tFAW window: replace the first-minimum slot (jnp.argmin ties to the
+    # first occurrence; this select chain reproduces that exactly)
+    awm = jnp.minimum(jnp.minimum(aw0_m, aw1_m), jnp.minimum(aw2_m, aw3_m))
+    s0 = aw0_m == awm
+    s1 = (aw1_m == awm) & ~s0
+    s2 = (aw2_m == awm) & ~s0 & ~s1
+    s3 = ~s0 & ~s1 & ~s2
+    hit_act = is_act & upd
+    aw0_2 = jnp.where(hit_act & s0, cycle, aw0_m).reshape(1, total)
+    aw1_2 = jnp.where(hit_act & s1, cycle, aw1_m).reshape(1, total)
+    aw2_2 = jnp.where(hit_act & s2, cycle, aw2_m).reshape(1, total)
+    aw3_2 = jnp.where(hit_act & s3, cycle, aw3_m).reshape(1, total)
+    la2 = la2.reshape(1, total)
+    lr2 = jnp.where(is_rd & upd, cycle,
+                    lr.reshape(seg_rows, per)).reshape(1, total)
+    lw2 = jnp.where(is_wr & upd, cycle,
+                    lw.reshape(seg_rows, per)).reshape(1, total)
+
+    # ---- phase 4: response arbitration + respQueue push --------------------
+    resp_full = resp_count >= resp_limit                        # [L]
+    bids_r = ((st == S_RESP_PEND).reshape(lanes, b)
+              & ~resp_full[:, None])
+    bi = jax.lax.broadcasted_iota(jnp.int32, (lanes, b), 1)
+    rot_r = (bi - resp_rr[:, None]) % b
+    key_r = jnp.where(bids_r, rot_r, b)
+    m_r = jnp.min(key_r, axis=1)                                # [L]
+    any_resp = m_r < b
+    accept_m = bids_r & (rot_r == m_r[:, None])
+    accept = accept_m.reshape(1, total)
+    resp_rr2 = jnp.where(any_resp, (resp_rr + m_r + 1) % b, resp_rr)
+    a_i = accept_m.astype(jnp.int32)
+    item = jnp.stack([
+        jnp.sum(a_i * cur_addr.reshape(lanes, b), axis=1),
+        jnp.sum(a_i * cur_write.reshape(lanes, b), axis=1),
+        jnp.sum(a_i * cur_data.reshape(lanes, b), axis=1),
+        jnp.sum(a_i * cur_id.reshape(lanes, b), axis=1),
+    ], axis=1)                                                  # [L, F]
+    old = resp_ref[...].reshape(lanes, qr, nf)
+    widx = (resp_head + resp_count) % qr                        # [L]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (lanes, qr), 1)
+    at_w = (qi == widx[:, None]) & any_resp[:, None]
+    resp_out_ref[...] = jnp.where(
+        at_w[:, :, None], item[:, None, :], old).reshape(lanes * qr, nf)
+    resp_count1 = resp_count + any_resp.astype(jnp.int32)
+
+    # ---- phase 5: FSM clock edge + bank-queue pop bookkeeping --------------
+    new_rows, (want_pop, rw_done, completed) = _fsm_combinational(
+        topo, rp, cycle, rows, grant, accept, queue_nonempty, pop_rows)
+    wp = want_pop.astype(jnp.int32)
+    qhead2 = (qhead + wp) % q_cap
+    qcount2 = qcount - wp
+
+    # ---- phase 7: flow-through respQueue ack (Fifo.pop post-push) ----------
+    ack = resp_count1 > 0                                       # [L]
+    head_oh = (qi == resp_head[:, None]).astype(jnp.int32)
+    head_row = jnp.sum(old * head_oh[:, :, None], axis=1)       # [L, F]
+    fitem = jnp.where((any_resp & (widx == resp_head))[:, None],
+                      item, head_row)
+    resp_head2 = (resp_head + ack.astype(jnp.int32)) % qr
+    resp_count2 = resp_count1 - ack.astype(jnp.int32)
+
+    # ---- event-horizon bound at nxt on the post-edge state -----------------
+    st2, timer2, idle2, rdue2 = new_rows[0], new_rows[1], new_rows[2], new_rows[3]
+    cur_write2 = new_rows[5]
+    local = _event_bound_combinational(rp2, nxt, st2, timer2, idle2, rdue2)
+    cmds_n = _compute_cmds(st2, cur_write2)
+    bids_n = cmds_n != CMD_NOP
+    legal_n = _legal_at(rp2, cmds_n, la2, aw0_2, aw1_2, aw2_2, aw3_2, lr2,
+                        lw2)
+    eligible_n = bids_n & (nxt >= legal_n)
+    blocked_n = bids_n & ~eligible_n
+    # wait mask must match repro.core.bank_fsm.wait_mask exactly
+    in_wait_n = ((st2 == S_ACT_WAIT) | (st2 == S_RW_WAIT)
+                 | (st2 == S_PRE_WAIT) | (st2 == S_REF_WAIT)
+                 | (st2 == S_SREF_EXIT_WAIT))
+    idle_n = st2 == S_IDLE
+    sref_n = st2 == S_SREF
+    bq_valid_n = qcount2 > 0
+    inert = in_wait_n | blocked_n | ((idle_n | sref_n) & ~bq_valid_n)
+    gate = jnp.min(inert.astype(jnp.int32).reshape(lanes, b), axis=1) == 1
+    per_bank = jnp.min(jnp.where(blocked_n, legal_n - nxt,
+                                 local).reshape(lanes, b), axis=1)
+    # next operating-point boundary is an event (ParamSchedule.next_boundary)
+    bnd = bnd_ref[...].reshape(lanes, -1)
+    nb = jnp.min(jnp.where(bnd > nxt, bnd, SCHEDULE_INF), axis=1)
+    b_val = jnp.minimum(jnp.minimum(per_bank, arrival_rel), horizon - nxt)
+    b_val = jnp.minimum(b_val, nb - nxt)
+    maybe = (req_count == 0) & (resp_count2 == 0)
+    delta = jnp.where(maybe & gate, jnp.maximum(b_val, 0), 0)   # [L]
+
+    # ---- stores (one [22, L*B] output; row map in the module docstring) ----
+    bank_out_ref[...] = jnp.concatenate(
+        list(new_rows)
+        + [want_pop.astype(jnp.int32), rw_done.astype(jnp.int32),
+           completed.astype(jnp.int32), qhead2, qcount2,
+           la2, aw0_2, aw1_2, aw2_2, aw3_2, lr2, lw2], axis=0)
+    scal_out_ref[...] = jnp.concatenate([
+        jnp.stack([delta, resp_rr2, resp_head2, resp_count2,
+                   ack.astype(jnp.int32)], axis=1),
+        fitem, cmd_rr2, issued,
+    ], axis=1).astype(jnp.int32)
+
+
+def fused_step_pallas(topo: Topology, bank_rows, resp_buf, rp_mat, bounds,
+                      scal, interpret: bool = True, lanes: int = 1):
+    """Invoke the fused hot-loop kernel (whole-array blocks, no grid).
+
+    All shape/ordering contracts are in the module docstring.
+    ``bank_rows`` carries ``lanes * topo.num_banks`` lane-major positions
+    on axis 1 (no padding — block width equals the folded bank count; see
+    the split wrappers' ``_block_b`` for why small topologies must not
+    pad). Returns ``(bank_rows2 [22, L*B], resp_buf2, scal2)``."""
+    _count_invocation()
+    total = bank_rows.shape[1]
+    assert bank_rows.shape[0] == NUM_BANK_ROWS_IN
+    assert total == lanes * topo.num_banks, (
+        f"bank width {total} != lanes {lanes} * banks {topo.num_banks}")
+    channels = topo.channels
+    kernel = functools.partial(_fused_kernel, topo, lanes)
+    out_shape = [
+        jax.ShapeDtypeStruct((NUM_BANK_ROWS_OUT, total), jnp.int32),
+        jax.ShapeDtypeStruct(resp_buf.shape, jnp.int32),
+        jax.ShapeDtypeStruct((lanes, NUM_SCAL_OUT + 2 * channels),
+                             jnp.int32),
+    ]
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)(
+        bank_rows, resp_buf, rp_mat, bounds, scal)
+
+
+def _noninterpret_ok(topo: Topology, num_segments: int, lanes: int) -> bool:
+    """One-shot probe: compile + run this topology's fused kernel with
+    ``interpret=False`` on zero inputs. Cached per (topology, S, L); any
+    failure (no Mosaic/Triton lowering, unsupported gathers on the
+    backend, driver gaps) degrades to interpret mode with a warning
+    instead of crashing mid-sweep."""
+    key = (topo, num_segments, lanes)
+    cached = _FUSED_NONINTERPRET_OK.get(key)
+    if cached is not None:
+        return cached
+    try:
+        from repro.core.params import NUM_RUNTIME_PARAMS
+
+        b = lanes * topo.num_banks
+        z = functools.partial(jnp.zeros, dtype=jnp.int32)
+        out = fused_step_pallas(
+            topo, z((NUM_BANK_ROWS_IN, b)),
+            z((lanes * topo.resp_queue_size, 4)),
+            z((lanes * num_segments, NUM_RUNTIME_PARAMS)),
+            z((lanes * num_segments, 1)),
+            z((lanes, NUM_SCAL_IN + topo.channels)),
+            interpret=False, lanes=lanes)
+        jax.block_until_ready(out)
+        ok = True
+    except Exception as e:  # noqa: BLE001 - any lowering failure => fall back
+        warnings.warn(
+            f"fused kernel: interpret=False unavailable on backend "
+            f"{jax.default_backend()!r} ({type(e).__name__}); falling back "
+            f"to interpret mode", RuntimeWarning, stacklevel=2)
+        ok = False
+    _FUSED_NONINTERPRET_OK[key] = ok
+    return ok
+
+
+def fused_interpret(topo: Topology, num_segments: int, lanes: int = 1) -> bool:
+    """Interpret-mode decision for the fused kernel: the env override and
+    CPU default of :func:`repro.kernels.bank_fsm.ops.default_interpret`,
+    but with the non-interpret probe compiling *this* kernel for *this*
+    topology and batch width (the fused kernel's segmented reductions and
+    masked scatters are heavier than anything the tiny generic probe can
+    vouch for)."""
+    env = os.environ.get("MEMSIM_PALLAS_INTERPRET", "").strip().lower()
+    if env and env != "auto":
+        return env not in ("0", "false", "no")
+    if jax.default_backend() == "cpu":
+        return True
+    return not _noninterpret_ok(topo, num_segments, lanes)

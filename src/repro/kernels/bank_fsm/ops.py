@@ -3,7 +3,8 @@
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,59 @@ from repro.kernels.bank_fsm.ref import bank_event_bound_ref, bank_fsm_step_ref
 # traced cycle loops, and a module-level jnp constant materialized during
 # tracing would leak that trace's context into later traces
 _FAR_FUTURE = 0x3FFFFFFF
+
+# one-shot probe result: can this process compile+run a Pallas kernel with
+# interpret=False? (None = not probed yet)
+_NONINTERPRET_OK: Optional[bool] = None
+
+
+def _block_b(b: int) -> int:
+    """Bank-axis block width: clamp to the actual bank count so small
+    topologies (e.g. 8 banks) don't pad 16x per call. ``b`` is a power of
+    two (Topology.validate), so ``min(128, b)`` always divides the padded
+    extent; the wrappers assert this."""
+    return min(128, b)
+
+
+def _noninterpret_supported() -> bool:
+    """Probe (once) whether interpret=False Pallas compiles and runs on the
+    present jax backend. CPU has no Mosaic/Triton lowering, so this is
+    False there; on TPU/GPU a failure of the tiny probe kernel (missing
+    libtpu features, old drivers ...) also degrades cleanly to interpret
+    mode instead of crashing mid-sweep."""
+    global _NONINTERPRET_OK
+    if _NONINTERPRET_OK is None:
+        try:
+            from jax.experimental import pallas as pl
+
+            def _probe(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1
+
+            x = jnp.zeros((8, 128), jnp.int32)
+            out = pl.pallas_call(
+                _probe, out_shape=jax.ShapeDtypeStruct((8, 128), jnp.int32),
+                interpret=False)(x)
+            jax.block_until_ready(out)
+            _NONINTERPRET_OK = True
+        except Exception:  # noqa: BLE001 - any lowering failure => fall back
+            _NONINTERPRET_OK = False
+    return _NONINTERPRET_OK
+
+
+def default_interpret() -> bool:
+    """Pick the Pallas execution mode for this process.
+
+    ``MEMSIM_PALLAS_INTERPRET=1/0`` forces interpret / non-interpret;
+    unset (or ``auto``), interpret mode is used on CPU (where there is no
+    native lowering) and non-interpret on TPU/GPU when the one-shot probe
+    kernel compiles, falling back to interpret otherwise. The result is a
+    plain Python bool baked into the traced program as a static."""
+    env = os.environ.get("MEMSIM_PALLAS_INTERPRET", "").strip().lower()
+    if env and env != "auto":
+        return env not in ("0", "false", "no")
+    if jax.default_backend() == "cpu":
+        return True
+    return not _noninterpret_supported()
 
 
 def _pad_banks(state: Array, inputs: Array, pop: Array, padded_b: int):
@@ -59,8 +113,9 @@ def bank_event_bound(
     if not use_pallas:
         return bank_event_bound_ref(state, rp_mat, bounds, cycle2d)[0]
     b = state.shape[1]
-    block_b = 128
+    block_b = _block_b(b)
     padded_b = ((b + block_b - 1) // block_b) * block_b
+    assert padded_b % block_b == 0
     ps, _, _ = _pad_banks(state, jnp.zeros((3, b), jnp.int32),
                           jnp.zeros((4, b), jnp.int32), padded_b)
     bound = bank_event_bound_pallas(ps, rp_mat, bounds, cycle2d,
@@ -105,8 +160,9 @@ def bank_fsm_step(
         return bank_fsm_step_ref(topo, state, inputs, pop, rp_mat, bounds,
                                  cycle2d)
     b = state.shape[1]
-    block_b = 128
+    block_b = _block_b(b)
     padded_b = ((b + block_b - 1) // block_b) * block_b
+    assert padded_b % block_b == 0
     ps, pi, pp = _pad_banks(state, inputs, pop, padded_b)
     new_state, flags = bank_fsm_step_pallas(
         topo, ps, pi, pp, rp_mat, bounds, cycle2d, block_b=block_b,

@@ -115,6 +115,85 @@ def test_pallas_backend_bit_exact():
     assert_bit_identical(ref, fast, "pallas")
 
 
+# horizon for the fused-backend matrix: every executed cycle pays an
+# interpret-mode Pallas dispatch, so the 32-combo sweep keeps it modest
+FUSED_CYCLES = 1_500
+
+
+def _fused_dvfs(cfg):
+    """A 3-segment DVFS schedule with both boundaries inside FUSED_CYCLES,
+    so the fused kernel's in-kernel segment resolution and the
+    boundary-is-an-event skip cap are both exercised."""
+    from repro.core.engine import lane_schedule
+
+    return lane_schedule(cfg, [
+        (0, {}),
+        (400, {"tCL": cfg.tCL + 4, "tRCDRD": cfg.tRCDRD + 2}),
+        (900, {"tRP": cfg.tRP + 3, "tCL": cfg.tCL + 2}),
+    ])
+
+
+@pytest.mark.parametrize("bench", sorted(BENCHMARKS))
+@pytest.mark.parametrize("page_policy", ["closed", "open"])
+@pytest.mark.parametrize("sched_policy", ["fcfs", "frfcfs"])
+@pytest.mark.parametrize("schedule", ["constant", "dvfs"])
+def test_fused_backend_bit_exact(bench, page_policy, sched_policy, schedule):
+    """The fused single-dispatch hot loop (FSM edge + queue ops + arbiters
+    + event bound in ONE Pallas call) vs the seed per-cycle engine, on
+    every seed trace x page policy x scheduler x schedule combination."""
+    tr = small_trace(bench)
+    kw = dict(page_policy=page_policy, sched_policy=sched_policy)
+    cfg_ref = MemSimConfig(queue_size=16, **kw)
+    params = _fused_dvfs(cfg_ref) if schedule == "dvfs" else None
+    ref = simulate(cfg_ref, tr, num_cycles=FUSED_CYCLES, params=params)
+    fast = simulate_fast(
+        MemSimConfig(queue_size=64, fsm_backend="fused", **kw), tr,
+        num_cycles=FUSED_CYCLES, queue_size=16, params=params)
+    assert_bit_identical(
+        ref, fast, f"fused {bench}/{page_policy}/{sched_policy}/{schedule}")
+
+
+def test_fused_backend_batch_vmap_bit_exact():
+    """The fused kernel under vmap (shared-clock batch runner): each lane
+    of a queue-depth batch matches its individual seed run."""
+    tr = small_trace("trace_example")
+    qs = [4, 16]
+    batch = simulate_batch(
+        MemSimConfig(queue_size=32, fsm_backend="fused"), [tr, tr],
+        num_cycles=FUSED_CYCLES, queue_sizes=qs, batch_mode="vmap")
+    for q, res in zip(qs, batch):
+        ref = simulate(MemSimConfig(queue_size=q), tr,
+                       num_cycles=FUSED_CYCLES)
+        assert_bit_identical(ref, res, f"fused vmap q={q}")
+
+
+def test_aot_cache_lru_eviction(monkeypatch, caplog):
+    """The AOT executable cache is a bounded LRU: MEMSIM_AOT_CACHE_SIZE
+    caps it, the least-recently-used entry is dropped on overflow, and
+    evictions are logged."""
+    from repro.core import engine as engine_mod
+
+    cache = engine_mod._AotLruCache()
+    monkeypatch.setenv("MEMSIM_AOT_CACHE_SIZE", "2")
+    assert cache.maxsize() == 2
+    cache["a"] = 1
+    cache["b"] = 2
+    assert cache["a"] == 1            # refresh recency: "b" is now LRU
+    with caplog.at_level("INFO", logger="repro.core.engine"):
+        cache["c"] = 3
+    assert "a" in cache and "c" in cache and "b" not in cache
+    assert len(cache) == 2
+    assert any("evicted" in rec.message for rec in caplog.records)
+    monkeypatch.setenv("MEMSIM_AOT_CACHE_SIZE", "0")  # clamped to >= 1
+    assert cache.maxsize() == 1
+    cache["d"] = 4
+    assert len(cache) == 1 and "d" in cache
+    monkeypatch.setenv("MEMSIM_AOT_CACHE_SIZE", "not-a-number")
+    assert cache.maxsize() == engine_mod._AotLruCache._DEFAULT
+    cache.clear()
+    assert len(cache) == 0
+
+
 @pytest.mark.parametrize("batch_mode", ["lanes", "vmap"])
 def test_batch_mixed_traces_and_queue_sizes(batch_mode):
     """(trace, runtime-config) lanes — padded and batched in both modes

@@ -149,6 +149,118 @@ def test_bank_fsm_kernel_multi_cycle_rollout():
         assert (state_r == state_p).all() and (f_r == f_p).all(), cycle
 
 
+def _seam_cfg(**kw):
+    """Small topology for the fused-step audits (fast in interpret mode)."""
+    return MemSimConfig(channels=2, ranks=1, bankgroups=2, banks_per_group=2,
+                        queue_size=16, resp_queue_size=8, page_policy="open",
+                        sched_policy="frfcfs", **kw)
+
+
+def test_fused_step_schedule_boundary_seam():
+    """Per-cycle audit of the fused single-dispatch step across
+    ParamSchedule boundaries: stepping the SAME state through
+    ``fused_cycle_step`` and the jnp ``cycle_step`` must agree on the full
+    SimState pytree at every cycle — including the seam cycles (boundary,
+    boundary-1, boundary+1) where the operating point flips and the
+    in-kernel segment resolution must land on the right row."""
+    import dataclasses
+
+    from repro.core.engine import lane_schedule
+    from repro.core.fused_step import fused_cycle_step
+    from repro.core.simulator import cycle_step, init_state
+    from repro.traces import BENCHMARKS
+
+    cfg = _seam_cfg(fsm_backend="fused")
+    sched = lane_schedule(cfg, [
+        (0, {}), (120, {"tCL": 20, "tRCDRD": 18}),
+        (700, {"tCL": 28, "tRP": 17})])
+    topo = cfg.topology()
+    topo_jnp = dataclasses.replace(topo, fsm_backend="jnp")
+    trace = BENCHMARKS["trace_example"](n=60, gap=6)
+    state = init_state(topo, sched, trace.num_requests)
+
+    step_ref = jax.jit(lambda s, t: cycle_step(topo_jnp, sched, trace, s, t))
+    # horizon = cycle + 1 clamps the returned delta to 0 (pure per-cycle)
+    step_fus = jax.jit(
+        lambda s, t: fused_cycle_step(topo, sched, trace, s, t, t + 1))
+    for cycle in range(750):
+        t = jnp.int32(cycle)
+        ref = step_ref(state, t)
+        fus, delta = step_fus(state, t)
+        assert int(delta) == 0
+        leaves_r = jax.tree_util.tree_leaves(ref)
+        leaves_f = jax.tree_util.tree_leaves(fus)
+        for lr, lf in zip(leaves_r, leaves_f):
+            np.testing.assert_array_equal(
+                np.asarray(lr), np.asarray(lf), err_msg=f"cycle {cycle}")
+        state = ref
+
+
+def test_fused_kernel_skip_rollout_matches_unfused():
+    """Event-driven rollout: the fused kernel's (state, delta) per executed
+    cycle must equal jnp ``cycle_step`` + ``engine._next_event`` (two
+    dispatches + glue) followed by the shared ``_apply_skip``."""
+    from repro.core import engine as eng
+    from repro.core.engine import lane_schedule
+    from repro.core.fused_step import fused_cycle_step
+    from repro.core.simulator import cycle_step, init_state
+    from repro.traces import BENCHMARKS
+
+    cfg = _seam_cfg()
+    sched = lane_schedule(cfg, [
+        (0, {}), (150, {"tCL": 20, "tRCDRD": 18}), (400, {"tRP": 17})])
+    topo = cfg.topology()
+    trace = BENCHMARKS["trace_example"](n=40, gap=8)
+    num_cycles = 4_000
+    state = init_state(topo, sched, trace.num_requests)
+
+    step_ref = jax.jit(lambda s, t: cycle_step(topo, sched, trace, s, t))
+    next_ev = jax.jit(
+        lambda s, nx: eng._next_event(topo, sched, trace, s, nx, num_cycles))
+    step_fus = jax.jit(
+        lambda s, t: fused_cycle_step(topo, sched, trace, s, t, num_cycles))
+    skip = jax.jit(
+        lambda s, d, nx: eng._apply_skip(topo, sched, s, d, nx))
+
+    t, executed = 0, 0
+    while t < num_cycles and executed < 120:
+        tj = jnp.int32(t)
+        ref = step_ref(state, tj)
+        d_ref = int(next_ev(ref, tj + 1))
+        fus, d_fus = step_fus(state, tj)
+        assert d_ref == int(d_fus), f"delta diverged at cycle {t}"
+        for lr, lf in zip(jax.tree_util.tree_leaves(ref),
+                          jax.tree_util.tree_leaves(fus)):
+            np.testing.assert_array_equal(
+                np.asarray(lr), np.asarray(lf), err_msg=f"cycle {t}")
+        state = skip(ref, jnp.int32(d_ref), tj + 1)
+        t += 1 + d_ref
+        executed += 1
+    assert t > executed, "rollout never skipped — trace too dense to audit"
+
+
+def test_fused_kernel_one_dispatch_per_cycle():
+    """The acceptance metric: tracing one executed cycle of the fused path
+    invokes the Pallas machinery exactly once, vs two for the split
+    kernels (FSM step + event bound)."""
+    from repro.core.engine import lane_schedule
+    from repro.core.fused_step import fused_cycle_step
+    from repro.core.simulator import init_state
+    from repro.kernels.bank_fsm import bank_fsm as bf
+    from repro.traces import BENCHMARKS
+
+    cfg = _seam_cfg(fsm_backend="fused")
+    sched = lane_schedule(cfg, None)
+    topo = cfg.topology()
+    trace = BENCHMARKS["trace_example"](n=20, gap=8)
+    state = init_state(topo, sched, trace.num_requests)
+    before = bf.trace_invocation_count()
+    jax.make_jaxpr(
+        lambda s: fused_cycle_step(topo, sched, trace, s, jnp.int32(3),
+                                   jnp.int32(100)))(state)
+    assert bf.trace_invocation_count() - before == 1
+
+
 # ------------------------------------------------------------- addr_map ----
 
 @pytest.mark.parametrize("n", [64, 1000, 4096])
