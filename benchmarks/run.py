@@ -15,6 +15,11 @@ Env knobs:
                            subset, which lower-bounds the speedup because
                            the batched engine amortizes its single compile
                            over more points)
+  MEMSIM_EXEC_CACHE_DIR    persistent executable cache (bench_stream manages
+                           its own temp dir for its subprocess legs; setting
+                           this globally additionally persists the other
+                           benches' programs — bench_fused clears/disables it
+                           around its reconstructed-baseline leg)
 """
 
 from __future__ import annotations
@@ -398,19 +403,29 @@ def bench_fused() -> None:
 
     # PR-5 baseline leg first: jit/AOT caches key on (topo, shapes), not
     # on the traced-through helper, so each swap must drop compiled
-    # programs on both sides of the leg
+    # programs on both sides of the leg — including the persistent
+    # on-disk executable cache (a stale blob from a previous run would be
+    # served for the monkeypatched baseline AND a baseline compile could
+    # be published for later legs, corrupting both sets of numbers; the
+    # baseline leg therefore runs with the persistent layer disabled and
+    # its on-disk entries for this key space cleared on both sides)
+    from repro.core import exec_cache
+
     cur_memory_phase = sim._memory_phase
     sim._memory_phase = pr5_memory_phase
     with eng._aot_lock:
         eng._aot_cache.clear()
     jax.clear_caches()
+    exec_cache.clear()
     try:
-        _, first_5, steady_5 = run_sweep("pallas")
+        with exec_cache.disabled():
+            _, first_5, steady_5 = run_sweep("pallas")
     finally:
         sim._memory_phase = cur_memory_phase
     with eng._aot_lock:
         eng._aot_cache.clear()
     jax.clear_caches()
+    exec_cache.clear()
 
     res_unfused, first_u, steady_u = run_sweep("pallas")
     res_fused, first_f, steady_f = run_sweep("fused")
@@ -443,6 +458,209 @@ def bench_fused() -> None:
          f"bit_identical={not mismatches};"
          f"speedup_vs_pr5={round(speedup_pr5, 2)}x;"
          f"speedup_vs_inplace_unfused={round(speedup, 2)}x")
+
+
+#: Child-process body of ``bench_stream``: runs one streaming sweep leg in
+#: a FRESH interpreter (cold/warm legs must not inherit this process's
+#: in-memory AOT cache — the whole point is the persistent on-disk layer)
+#: and prints a RESULT json line. argv: mode small; env:
+#: MEMSIM_EXEC_CACHE_DIR (persistent cache), MEMSIM_BENCH_CKPT (checkpoint
+#: dir, optional), MEMSIM_SMOKE.
+_STREAM_CHILD = r"""
+import hashlib, json, os, signal, sys, time
+import numpy as np
+mode, small = sys.argv[1], sys.argv[2] == "1"
+from repro.core.params import MemSimConfig
+from repro.core import engine as eng
+from repro.core import sweep_stream
+from repro.traces.microbench import trace_example
+
+smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+cfg = MemSimConfig(queue_size=8, mem_words=1 << 10)
+tr = trace_example(n=4 if smoke else 12)
+nc = int(np.asarray(tr.t).max()) + (150 if smoke else 600)
+if small:
+    grid = {"tCL": [14, 18], "tRP": [10, 14], "tREFI": [3600, 7200],
+            "queue_size": [8, 16], "page_policy": ["closed", "open"],
+            "sched_policy": ["fcfs", "frfcfs"]}          # 64 points
+    kw = dict(chunk_lanes=16)                            # 4 chunks
+else:
+    grid = {"tCL": list(range(10, 20)), "tRP": [10, 12, 14, 16, 18],
+            "tRCDRD": [10, 12, 14, 16, 18], "tREFI": [3600, 7200],
+            "queue_size": [8, 16, 64], "page_policy": ["closed", "open"],
+            "sched_policy": ["fcfs", "frfcfs"]}          # 6000 points
+    if not smoke:
+        grid["tRCDWR"] = [10, 14]                        # -> 12000 points
+    kw = dict(memory_budget_bytes=64 << 20)
+ck = os.environ.get("MEMSIM_BENCH_CKPT") or None
+if mode == "kill":
+    def _hook(ci):
+        if ci >= 1:
+            os.kill(os.getpid(), signal.SIGKILL)
+    sweep_stream._pre_commit_hook = _hook
+tm = {}
+t0 = time.time()
+res = eng.sweep_grid(cfg, tr, grid, nc, stream=True, checkpoint_dir=ck,
+                     timings=tm, **kw)
+wall = time.time() - t0
+h = hashlib.sha256()
+for r in res:
+    for a in (r.t_admit, r.t_dispatch, r.t_start, r.t_complete, r.rdata):
+        h.update(np.ascontiguousarray(np.asarray(a, np.int32)).tobytes())
+    for k in sorted(r.counters):
+        h.update(np.ascontiguousarray(
+            np.asarray(r.counters[k], np.int64)).tobytes())
+    h.update(np.int64(r.blocked_arrival).tobytes())
+    h.update(np.int64(r.blocked_dispatch).tobytes())
+print("RESULT " + json.dumps({
+    "wall_s": wall, "lanes": len(res), "digest": h.hexdigest(),
+    "timings": {k: v for k, v in tm.items() if k != "per_chunk"},
+    "cache": eng.aot_cache_stats()}))
+"""
+
+
+def bench_stream() -> None:
+    """Tentpole acceptance: the streaming mega-sweep executor.
+
+    Four subprocess legs over a shared persistent executable cache
+    directory (fresh interpreters — the in-memory AOT cache cannot help,
+    which is exactly the point):
+
+      * **cold**: a >=10^4-point runtime grid (6000 points under
+        ``MEMSIM_SMOKE`` so CI stays in budget) streamed under a 64 MiB
+        memory budget — fresh compiles, blobs published to the cache;
+      * **warm**: the identical sweep again — acceptance: **zero**
+        recompiles, warm "compile wall" (the disk deserialize time) <=
+        0.05x the cold compile wall;
+      * **kill** + **resume**: a small checkpointed sweep SIGKILLed from
+        the pre-commit hook mid-chunk, then re-invoked — acceptance: the
+        resumed result table is bit-identical (sha256 over every record
+        array, counter and blocked total of every lane) to an
+        uninterrupted in-process run of the same sweep.
+
+    JSON: ``engine.stream`` (budget adherence, cold/warm compile walls,
+    cache hit counters, resume overhead, both digests).
+    """
+    import subprocess
+    import sys
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import engine as eng
+    from repro.core.params import MemSimConfig
+    from repro.traces.microbench import trace_example
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+
+    def leg(mode: str, small: bool, env: Dict) -> Dict:
+        p = subprocess.run(
+            [sys.executable, "-c", _STREAM_CHILD, mode, "1" if small else "0"],
+            env=env, capture_output=True, text=True)
+        if mode == "kill":
+            # SIGKILLed from the pre-commit hook -> negative returncode
+            assert p.returncode < 0, (
+                f"kill leg survived: rc={p.returncode}\n{p.stderr[-2000:]}")
+            return {}
+        assert p.returncode == 0, f"{mode} leg failed:\n{p.stderr[-4000:]}"
+        line = [ln for ln in p.stdout.splitlines()
+                if ln.startswith("RESULT ")][-1]
+        return json.loads(line[len("RESULT "):])
+
+    with tempfile.TemporaryDirectory() as cache_dir, \
+            tempfile.TemporaryDirectory() as ckpt_dir:
+        env = dict(os.environ, MEMSIM_EXEC_CACHE_DIR=cache_dir)
+        env.pop("MEMSIM_BENCH_CKPT", None)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ("src", env.get("PYTHONPATH", "")) if p)
+
+        t0 = time.time()
+        cold = leg("run", small=False, env=env)
+        warm = leg("run", small=False, env=env)
+
+        # kill/resume on a small checkpointed sweep (shares the now-warm
+        # executable cache; its chunk shape compiles its own program)
+        kenv = dict(env, MEMSIM_BENCH_CKPT=ckpt_dir)
+        leg("kill", small=True, env=kenv)
+        resumed = leg("run", small=True, env=kenv)
+        total_wall = time.time() - t0
+
+    # uninterrupted reference for the kill/resume digest, in-process (the
+    # persistent cache env var is NOT set here, so this run is independent
+    # of the blobs the legs published)
+    tr = trace_example(n=4 if smoke else 12)
+    nc = int(np.asarray(tr.t).max()) + (150 if smoke else 600)
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 10)
+    small_grid = {"tCL": [14, 18], "tRP": [10, 14], "tREFI": [3600, 7200],
+                  "queue_size": [8, 16], "page_policy": ["closed", "open"],
+                  "sched_policy": ["fcfs", "frfcfs"]}
+    t1 = time.time()
+    ures = eng.sweep_grid(cfg, tr, small_grid, nc, stream=True,
+                          chunk_lanes=16)
+    uninterrupted_wall = time.time() - t1
+    import hashlib
+    h = hashlib.sha256()
+    for r in ures:
+        for a in (r.t_admit, r.t_dispatch, r.t_start, r.t_complete,
+                  r.rdata):
+            h.update(np.ascontiguousarray(np.asarray(a, np.int32))
+                     .tobytes())
+        for k in sorted(r.counters):
+            h.update(np.ascontiguousarray(
+                np.asarray(r.counters[k], np.int64)).tobytes())
+        h.update(np.int64(r.blocked_arrival).tobytes())
+        h.update(np.int64(r.blocked_dispatch).tobytes())
+    udigest = h.hexdigest()
+
+    ct, wt = cold["timings"], warm["timings"]
+    budget = 64 << 20
+    cold_compile = ct.get("compile_s", 0.0)
+    # a warm process never recompiles (asserted below), so its compile wall
+    # is the XLA compile seconds alone; deserializing cached blobs is a
+    # separate, much cheaper acquisition cost reported on its own
+    warm_compile = wt.get("compile_s", 0.0)
+    warm_load = warm["cache"]["disk"].get("load_s", 0.0)
+    ratio = warm_compile / max(cold_compile, 1e-9)
+    reuse_ratio = (warm_compile + warm_load) / max(cold_compile, 1e-9)
+    resume_identical = resumed["digest"] == udigest
+    _ENGINE["stream"] = {
+        "lanes": cold["lanes"],
+        "chunk_lanes": ct.get("chunk_lanes"),
+        "chunks": ct.get("chunks"),
+        "memory_budget_bytes": budget,
+        "lane_bytes": ct.get("lane_bytes"),
+        "peak_chunk_bytes": ct.get("peak_chunk_bytes"),
+        "within_budget": ct.get("peak_chunk_bytes", budget + 1) <= budget,
+        "cold_wall_s": round(cold["wall_s"], 2),
+        "cold_compiles": ct.get("compiles"),
+        "cold_compile_s": round(cold_compile, 2),
+        "cold_run_s": round(ct.get("run_s", 0.0), 2),
+        "warm_wall_s": round(warm["wall_s"], 2),
+        "warm_compiles": wt.get("compiles"),
+        "warm_compile_s": round(warm_compile, 3),
+        "warm_disk_hits": warm["cache"]["disk"].get("hits"),
+        "warm_disk_load_s": round(warm_load, 3),
+        "warm_cold_compile_ratio": round(ratio, 4),
+        "warm_cold_reuse_ratio": round(reuse_ratio, 4),
+        "zero_warm_recompiles": wt.get("compiles") == 0,
+        "warm_compile_below_0p05_cold": ratio <= 0.05,
+        "resume_chunks_total": resumed["timings"].get("chunks"),
+        "resume_chunks_restored": resumed["timings"].get("chunks_resumed"),
+        "resume_wall_s": round(resumed["wall_s"], 2),
+        "uninterrupted_wall_s": round(uninterrupted_wall, 2),
+        "resume_bit_identical": resume_identical,
+        "digest_resumed": resumed["digest"],
+        "digest_uninterrupted": udigest,
+    }
+    assert wt.get("compiles") == 0, \
+        f"warm leg recompiled: {wt.get('compiles')}"
+    assert resume_identical, "resumed sweep != uninterrupted sweep"
+    _row("engine_stream", total_wall * 1e6 / max(cold["lanes"], 1),
+         f"lanes={cold['lanes']};chunks={ct.get('chunks')};"
+         f"warm_compiles={wt.get('compiles')};"
+         f"warm/cold_compile={round(ratio, 4)};"
+         f"within_budget={_ENGINE['stream']['within_budget']};"
+         f"resume_bit_identical={resume_identical}")
 
 
 def bench_dvfs() -> None:
@@ -871,6 +1089,40 @@ def _jsonify(obj):
     return obj
 
 
+def _cache_stats_delta(before: Dict, after: Dict) -> Dict:
+    """Counter deltas of ``repro.core.engine.aot_cache_stats()`` across one
+    bench (hits/misses/evictions of the in-memory LRU, hits/misses/writes/
+    load wall of the persistent disk layer), plus the LRU's current
+    occupancy — the per-bench cache behaviour exported into each
+    ``engine.*`` JSON section so cache-thrash regressions are visible in
+    the perf trajectory, not just the log."""
+    mem_keys = ("hits", "misses", "evictions")
+    disk_keys = ("hits", "misses", "writes", "errors", "load_s")
+    out = {
+        "memory": {k: after["memory"][k] - before["memory"][k]
+                   for k in mem_keys},
+        "disk": {k: round(after["disk"][k] - before["disk"][k], 4)
+                 for k in disk_keys},
+    }
+    out["memory"]["entries"] = after["memory"]["entries"]
+    out["memory"]["maxsize"] = after["memory"]["maxsize"]
+    return out
+
+
+def _with_cache_stats(bench) -> None:
+    """Run one bench function; attach the AOT-cache counter delta it caused
+    to every ``engine`` section it created."""
+    from repro.core.engine import aot_cache_stats
+
+    before = aot_cache_stats()
+    keys_before = set(_ENGINE)
+    bench()
+    delta = _cache_stats_delta(before, aot_cache_stats())
+    for k in set(_ENGINE) - keys_before:
+        if isinstance(_ENGINE[k], dict):
+            _ENGINE[k]["aot_cache"] = delta
+
+
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--json", metavar="OUT", default=None,
@@ -883,17 +1135,21 @@ def main(argv=None) -> None:
     bench_fig7()
     bench_fig8()
     bench_fig9()
-    bench_engine()
-    bench_event_skip()
-    bench_fused()
-    bench_dvfs()
-    bench_param_grid()
-    bench_topo_grid()
-    bench_mesh_scaleout()
+    _with_cache_stats(bench_engine)
+    _with_cache_stats(bench_event_skip)
+    _with_cache_stats(bench_fused)
+    _with_cache_stats(bench_stream)
+    _with_cache_stats(bench_dvfs)
+    _with_cache_stats(bench_param_grid)
+    _with_cache_stats(bench_topo_grid)
+    _with_cache_stats(bench_mesh_scaleout)
     bench_open_page()
     bench_effective_bw()
-    bench_llm_grid()
+    _with_cache_stats(bench_llm_grid)
     bench_roofline()
+
+    from repro.core.engine import aot_cache_stats
+    _ENGINE["aot_cache_total"] = aot_cache_stats()
 
     if args.json:
         payload = _jsonify({"rows": _ROWS, "engine": _ENGINE,

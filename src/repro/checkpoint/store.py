@@ -21,12 +21,14 @@ Fault-tolerance contract:
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
+import tempfile
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -149,3 +151,117 @@ class CheckpointStore:
         return (jax.tree_util.tree_unflatten(p_def, new_p),
                 jax.tree_util.tree_unflatten(o_def, new_o),
                 int(manifest["step"]), manifest.get("extra", {}))
+
+
+# --------------------------------------------------------------------------
+# chunk-granular checkpointing for streaming mega-sweeps
+# --------------------------------------------------------------------------
+
+class SweepCheckpoint:
+    """Kill/resume store for a chunked (streaming) sweep.
+
+    Layout::
+
+        <dir>/manifest.json    # sweep fingerprint, grid meta, chunk bounds
+        <dir>/chunk_00042.npz  # reduced results + meta of one finished chunk
+
+    Same fault-tolerance discipline as :class:`CheckpointStore`: every file
+    is written to a temp name in the same directory and published with
+    ``os.replace``, so a SIGKILL mid-chunk leaves either the previous state
+    or nothing — never a torn chunk. The *manifest* carries the caller's
+    sweep fingerprint (a digest over the grid definition, lane configs,
+    traces and chunking) and per-chunk digests; the streaming executor
+    refuses to resume when the fingerprint of the on-disk manifest does not
+    match the sweep being (re)launched, so a silently-edited grid can never
+    splice stale chunks into fresh results.
+    """
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- manifest ------------------------------------------------------
+
+    def read_manifest(self) -> Optional[Dict]:
+        path = os.path.join(self.dir, self.MANIFEST)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def write_manifest(self, manifest: Dict) -> None:
+        path = os.path.join(self.dir, self.MANIFEST)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=".tmp_manifest_")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp, path)                    # atomic publish
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.remove(tmp)
+            raise
+
+    # ---- chunks --------------------------------------------------------
+
+    def _chunk_path(self, idx: int) -> str:
+        return os.path.join(self.dir, f"chunk_{idx:05d}.npz")
+
+    def save_chunk(self, idx: int, arrays: Dict[str, np.ndarray],
+                   meta: Dict) -> str:
+        """Atomically publish one finished chunk: named arrays plus a JSON
+        ``meta`` dict (stored as a zero-dim unicode array — no pickle)."""
+        final = self._chunk_path(idx)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, prefix=".tmp_chunk_",
+                                   suffix=".npz")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, __meta__=np.asarray(json.dumps(meta)),
+                         **{k: np.asarray(v) for k, v in arrays.items()})
+            os.replace(tmp, final)                   # atomic publish
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.remove(tmp)
+            raise
+        return final
+
+    def load_chunk(self, idx: int) -> Optional[Tuple[Dict[str, np.ndarray],
+                                                     Dict]]:
+        """Load a finished chunk, or None if absent/unreadable (an
+        unreadable chunk is dropped so the executor recomputes it)."""
+        path = self._chunk_path(idx)
+        if not os.path.exists(path):
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as data:
+                meta = json.loads(str(data["__meta__"]))
+                arrays = {k: data[k] for k in data.files if k != "__meta__"}
+        except Exception:
+            with contextlib.suppress(OSError):
+                os.remove(path)
+            return None
+        return arrays, meta
+
+    def done_chunks(self) -> List[int]:
+        """Indices of chunks with a published blob (sorted)."""
+        out = []
+        for fn in os.listdir(self.dir):
+            if fn.startswith("chunk_") and fn.endswith(".npz"):
+                try:
+                    out.append(int(fn[len("chunk_"):-len(".npz")]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def clear(self) -> None:
+        """Drop the manifest and every chunk (fresh-start / refused
+        resume with ``resume=False``)."""
+        for fn in os.listdir(self.dir):
+            if fn == self.MANIFEST or fn.startswith("chunk_") \
+                    or fn.startswith(".tmp_"):
+                with contextlib.suppress(OSError):
+                    os.remove(os.path.join(self.dir, fn))

@@ -16,6 +16,7 @@ from repro.core.params import (
 from repro.core.simulator import SimResult, Trace, simulate
 from repro.core.engine import (
     TopoGridResult,
+    aot_cache_stats,
     grid_points,
     lane_schedule,
     simulate_fast,
@@ -26,6 +27,7 @@ from repro.core.engine import (
     sweep_topologies,
     topo_grid_points,
 )
+from repro.core.sweep_stream import stream_sweep
 from repro.core.ideal import simulate_ideal, ideal_latencies
 from repro.core import stats
 
@@ -47,6 +49,8 @@ __all__ = [
     "sweep_grid",
     "sweep_queue_sizes",
     "sweep_topologies",
+    "stream_sweep",
+    "aot_cache_stats",
     "topo_grid_points",
     "TopoGridResult",
     "simulate_ideal",

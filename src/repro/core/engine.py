@@ -70,6 +70,19 @@ those bottlenecks while staying **bit-exact** against the reference:
    across visible devices, and the per-lane results merge into one
    :class:`TopoGridResult` table keyed by the full config point.
 
+6. **Streaming mega-sweeps** — above a lane threshold (or whenever a
+   checkpoint directory is given) :func:`sweep_grid` and
+   :func:`sweep_topologies` hand the grid to
+   :mod:`repro.core.sweep_stream`: the lane space is chunked into
+   fixed-size batches that stream through a configurable memory budget,
+   chunk N+1's host-side prep and any pending topology compiles overlap
+   chunk N's device execution, completed chunks checkpoint their reduced
+   results (``repro.checkpoint.store.SweepCheckpoint``) so a killed sweep
+   resumes from the last committed chunk, and compiled executables persist
+   *across processes* via the on-disk cache (:mod:`repro.core.exec_cache`,
+   ``MEMSIM_EXEC_CACHE_DIR``) — a warm re-invoke of the same topology set
+   does zero recompiles. Bit-exact vs the materializing path.
+
 Exactness contract: for any ``cfg`` with capacity ``C``, trace, horizon and
 runtime limit ``q <= C``,
 
@@ -99,6 +112,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from repro.core import exec_cache
 from repro.core import power as power_lib
 from repro.core.bank_fsm import cycles_until_actionable, wait_mask
 from repro.core.params import (
@@ -472,6 +486,14 @@ def _lane_executable(topo: Topology, n_max: int, num_segments: int,
         cached = _aot_cache.get(key)
     if cached is not None:
         return cached, 0.0
+    disk_key = (exec_cache.make_key("lane_executable", key, ())
+                if exec_cache.cache_dir() is not None else None)
+    if disk_key is not None:
+        cached = exec_cache.load(disk_key)
+        if cached is not None:
+            with _aot_lock:
+                _aot_cache[key] = cached
+            return cached, 0.0
 
     def sds(shape):
         return jax.ShapeDtypeStruct(shape, jnp.int32, sharding=sharding)
@@ -493,6 +515,8 @@ def _lane_executable(topo: Topology, n_max: int, num_segments: int,
     compile_s = time.perf_counter() - t0
     with _aot_lock:
         _aot_cache[key] = compiled
+    if disk_key is not None:
+        exec_cache.store(disk_key, compiled)
     return compiled, compile_s
 
 
@@ -616,14 +640,18 @@ class _AotLruCache:
     bound. Capacity comes from ``MEMSIM_AOT_CACHE_SIZE`` (default 64,
     clamped to >= 1), re-read on every insert so a live process can be
     resized; the least-recently-used entry is dropped on overflow and each
-    eviction is logged (a hot sweep thrashing the cache shows up in the log
-    long before it shows up as recompile wall-clock). Not internally
-    locked — every call site already holds ``_aot_lock``."""
+    eviction is logged AND counted — ``stats()`` exposes lifetime
+    hits/misses/evictions so cache thrash is observable in the BENCH JSON
+    ``engine.*`` sections, not just the log. Not internally locked —
+    every call site already holds ``_aot_lock``."""
 
     _DEFAULT = 64
 
     def __init__(self) -> None:
         self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def maxsize(self) -> int:
         raw = os.environ.get("MEMSIM_AOT_CACHE_SIZE", "").strip()
@@ -635,8 +663,10 @@ class _AotLruCache:
 
     def get(self, key, default=None):
         if key in self._entries:
+            self.hits += 1
             self._entries.move_to_end(key)
             return self._entries[key]
+        self.misses += 1
         return default
 
     def __getitem__(self, key):
@@ -647,8 +677,10 @@ class _AotLruCache:
     def __contains__(self, key) -> bool:
         # a presence probe precedes every reuse, so it refreshes recency too
         if key in self._entries:
+            self.hits += 1
             self._entries.move_to_end(key)
             return True
+        self.misses += 1
         return False
 
     def __setitem__(self, key, value) -> None:
@@ -657,6 +689,7 @@ class _AotLruCache:
         limit = self.maxsize()
         while len(self._entries) > limit:
             old_key, _ = self._entries.popitem(last=False)
+            self.evictions += 1
             _logger.info(
                 "AOT cache evicted %r (%d executables > MEMSIM_AOT_CACHE_SIZE"
                 "=%d); evicted programs recompile on next use", old_key,
@@ -666,7 +699,15 @@ class _AotLruCache:
         return len(self._entries)
 
     def clear(self) -> None:
+        # lifetime hit/miss/eviction counters survive a clear() on purpose:
+        # benches snapshot-and-diff them around each leg, and tests clear
+        # the entries to re-count compiles without losing the trajectory
         self._entries.clear()
+
+    def stats(self) -> Dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._entries),
+                "maxsize": self.maxsize()}
 
 
 _aot_cache = _AotLruCache()
@@ -718,19 +759,43 @@ def _sched_i32(params) -> ParamSchedule:
             *[jnp.asarray(v, jnp.int32) for v in sched.values]))
 
 
+def _jit_name(jitted) -> str:
+    """Stable cross-process identifier of a jitted runner (``id()`` is
+    process-local, so the persistent cache cannot key on it)."""
+    fn = getattr(jitted, "__wrapped__", None)
+    return getattr(fn, "__qualname__", None) or repr(jitted)
+
+
 def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
     """Phase one of the split AOT pipeline: trace + lower (holds the GIL,
     so callers run it sequentially). Returns ``(key, lowered, lower_s,
     cached)``; on a cache hit ``lowered`` is None and ``cached`` carries
     the executable itself — a strong reference, because the bounded LRU
-    may evict the entry between this probe and the caller's use."""
+    may evict the entry between this probe and the caller's use.
+
+    Misses in the in-memory LRU fall through to the persistent on-disk
+    executable cache (:mod:`repro.core.exec_cache`, enabled via
+    ``MEMSIM_EXEC_CACHE_DIR``): a previously compiled program — from an
+    earlier *process* — deserializes in milliseconds, is published to the
+    in-memory cache, and counts as a cache hit, not a fresh compile
+    (``timings["compiles"]`` stays 0; the load wall is accounted in
+    ``exec_cache.stats()["load_s"]``)."""
     shapes = tuple((tuple(x.shape), str(x.dtype))
                    for x in jax.tree_util.tree_leaves(dyn_args))
-    key = (id(jitted), static_key, shapes)
+    mem_key = (id(jitted), static_key, shapes)
+    disk_key = (exec_cache.make_key(_jit_name(jitted), static_key, shapes)
+                if exec_cache.cache_dir() is not None else None)
+    key = (mem_key, disk_key)
     with _aot_lock:
-        cached = _aot_cache.get(key)
+        cached = _aot_cache.get(mem_key)
     if cached is not None:
         return key, None, 0.0, cached
+    if disk_key is not None:
+        cached = exec_cache.load(disk_key)
+        if cached is not None:
+            with _aot_lock:
+                _aot_cache[mem_key] = cached
+            return key, None, 0.0, cached
     t0 = time.perf_counter()
     lowered = jitted.lower(*all_args)
     return key, lowered, time.perf_counter() - t0, None
@@ -738,13 +803,29 @@ def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
 
 def _aot_finish(key: tuple, lowered) -> Tuple[object, float]:
     """Phase two: XLA compilation (releases the GIL — safe and profitable
-    to run from worker threads), then publish to the cache."""
+    to run from worker threads), then publish to the in-memory cache and,
+    when enabled, the persistent on-disk executable cache."""
+    mem_key, disk_key = key
     t0 = time.perf_counter()
     compiled = lowered.compile()
     compile_s = time.perf_counter() - t0
     with _aot_lock:
-        _aot_cache[key] = compiled
+        _aot_cache[mem_key] = compiled
+    if disk_key is not None:
+        exec_cache.store(disk_key, compiled)
     return compiled, compile_s
+
+
+def aot_cache_stats() -> Dict:
+    """Lifetime observability of both executable-cache layers: the
+    in-process bounded LRU (hits / misses / evictions / entries) and the
+    persistent on-disk cache (hits / misses / writes / load wall). The
+    benches snapshot-and-diff this around each leg and export the deltas
+    into the BENCH JSON ``engine.*`` sections, so cache-thrash regressions
+    show up in the perf trajectory, not just the log."""
+    with _aot_lock:
+        mem = _aot_cache.stats()
+    return {"memory": mem, "disk": exec_cache.stats()}
 
 
 def _aot_compile(jitted, all_args: tuple, dyn_args: tuple,
@@ -1075,6 +1156,18 @@ def lane_schedule(cfg: MemSimConfig, spec) -> ParamSchedule:
     return ParamSchedule.from_segments(segs)
 
 
+def _stream_threshold() -> int:
+    """Lane count at which :func:`sweep_grid` / :func:`sweep_topologies`
+    switch to the streaming executor by default (``MEMSIM_STREAM_THRESHOLD``,
+    default 4096, re-read per call)."""
+    raw = os.environ.get("MEMSIM_STREAM_THRESHOLD", "").strip()
+    try:
+        v = int(raw) if raw else 4096
+    except ValueError:
+        v = 4096
+    return max(1, v)
+
+
 def grid_points(grid: Mapping[str, Sequence]) -> List[Dict]:
     """Expand an axis dict into the Cartesian product of override dicts,
     last axis fastest (``itertools.product`` order, deterministic)."""
@@ -1096,6 +1189,11 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
                cycle_skip: bool = True,
                shard: bool = True,
                batch_mode: str = "auto",
+               stream: Optional[bool] = None,
+               chunk_lanes: Optional[int] = None,
+               memory_budget_bytes: Optional[int] = None,
+               checkpoint_dir: Optional[str] = None,
+               resume: bool = True,
                timings: Optional[dict] = None) -> List[SimResult]:
     """Run a full runtime-parameter grid through ONE compiled program.
 
@@ -1118,6 +1216,20 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
     :class:`SimResult` per point with ``result.cfg`` set to that point's
     full ``MemSimConfig``.
 
+    Streaming: grids at or above :func:`_stream_threshold` lanes (env
+    ``MEMSIM_STREAM_THRESHOLD``, default 4096) — or any call that gives a
+    ``checkpoint_dir`` or sets ``stream=True`` — run through the streaming
+    executor (:func:`repro.core.sweep_stream.stream_sweep`): the lane
+    space is chunked (``chunk_lanes``, or derived from
+    ``memory_budget_bytes``), each chunk executes as one batched device
+    program while the next chunk's host prep overlaps, completed chunks
+    checkpoint to ``checkpoint_dir`` (kill/resume), and compiled
+    executables persist across processes via ``MEMSIM_EXEC_CACHE_DIR``.
+    Results are bit-exact vs this materializing path; ``batch_mode`` /
+    ``shard`` do not apply to the streamed chunks (each chunk is a
+    vmap-style batched program on its topology's device). Pass
+    ``stream=False`` to force the materializing path.
+
     Example::
 
         sweep_grid(MemSimConfig(), trace, {
@@ -1128,6 +1240,18 @@ def sweep_grid(cfg: MemSimConfig, trace: Trace,
         })
     """
     points = grid_points(grid)
+    if stream is None:
+        stream = checkpoint_dir is not None or len(points) >= _stream_threshold()
+    if stream:
+        from repro.core.sweep_stream import stream_sweep
+
+        return list(stream_sweep(
+            cfg, trace, grid, num_cycles, capacity=capacity,
+            resp_capacity=resp_capacity, cycle_skip=cycle_skip,
+            chunk_lanes=chunk_lanes,
+            memory_budget_bytes=memory_budget_bytes,
+            checkpoint_dir=checkpoint_dir, resume=resume,
+            timings=timings).results)
     # per-point full configs: __post_init__ validates the policy strings,
     # validate() the cross-field constraints (e.g. tREFI > tRFC) the seed
     # path would enforce — a bad grid point fails here, not silently
@@ -1243,6 +1367,11 @@ def sweep_topologies(cfg: MemSimConfig,
                      resp_capacity: Optional[int] = None,
                      cycle_skip: bool = True,
                      max_workers: Optional[int] = None,
+                     stream: Optional[bool] = None,
+                     chunk_lanes: Optional[int] = None,
+                     memory_budget_bytes: Optional[int] = None,
+                     checkpoint_dir: Optional[str] = None,
+                     resume: bool = True,
                      timings: Optional[dict] = None) -> TopoGridResult:
     """Run a full (topology x runtime-params x policy x depth) grid with
     ONE overlapped compile per distinct hardware shape.
@@ -1280,6 +1409,14 @@ def sweep_topologies(cfg: MemSimConfig,
     pass 1 for fully sequential execution). Re-invoking with the same
     shapes reuses every compiled program (``timings["compiles"] == 0``).
 
+    Streaming: grids at or above :func:`_stream_threshold` points — or any
+    call giving ``checkpoint_dir`` or ``stream=True`` — route through
+    :func:`repro.core.sweep_stream.stream_sweep` (chunked lane execution
+    under a memory budget, kill/resume checkpointing, persistent
+    cross-process executable cache via ``MEMSIM_EXEC_CACHE_DIR``);
+    bit-exact vs this materializing path. ``stream=False`` forces the
+    materializing path.
+
     Example::
 
         sweep_topologies(MemSimConfig(), trace, {
@@ -1296,6 +1433,18 @@ def sweep_topologies(cfg: MemSimConfig,
     from repro.distributed.shard import round_robin_devices
 
     points = topo_grid_points(grid)
+    if stream is None:
+        stream = (checkpoint_dir is not None
+                  or len(points) >= _stream_threshold())
+    if stream:
+        from repro.core.sweep_stream import stream_sweep
+
+        return stream_sweep(
+            cfg, trace, grid, num_cycles, capacity=capacity,
+            resp_capacity=resp_capacity, cycle_skip=cycle_skip,
+            max_workers=max_workers, chunk_lanes=chunk_lanes,
+            memory_budget_bytes=memory_budget_bytes,
+            checkpoint_dir=checkpoint_dir, resume=resume, timings=timings)
     lane_cfgs = [dataclasses.replace(
         cfg, **{k: v for k, v in ov.items() if k != "schedule"}).validate()
         for ov in points]

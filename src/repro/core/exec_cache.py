@@ -1,0 +1,216 @@
+"""Persistent on-disk cache of AOT-compiled XLA executables.
+
+The in-process ``engine._aot_cache`` already makes a *re-invoke* free, but
+every new process pays the full compile wall again — and for warm
+mega-sweep workloads compile time now dominates the way per-cycle stepping
+once did. This module serializes compiled executables
+(``jax.experimental.serialize_executable``) to an on-disk directory so a
+fresh process re-loads a previously compiled program in milliseconds
+instead of recompiling it: a warm re-invoke of the same topology set does
+**zero** recompiles.
+
+Keying / invalidation: an entry's key is the SHA-256 of
+
+    (ENGINE_ABI_VERSION, jax version, jaxlib version, XLA backend,
+     visible device count, runner name, static key [Topology, horizon
+     statics, device id], dynamic-argument shapes/dtypes)
+
+so any of these changing — a jaxlib upgrade, a different host device
+topology, an engine ABI bump (``ENGINE_ABI_VERSION`` must be raised
+whenever the compiled programs' semantics change in a way the type
+signature does not capture, e.g. a kernel bugfix), or simply a different
+``Topology``/batch shape — misses cleanly and recompiles. Entries are
+self-contained blobs; deleting any or all of them is always safe.
+
+Storage contract:
+  * enabled iff ``MEMSIM_EXEC_CACHE_DIR`` is set (non-empty) — tier-1
+    tests and compile-count assertions run with it unset, so the
+    persistent layer can never make a "fresh compile" observation lie;
+  * writes are atomic (temp file + ``os.replace``), so a killed process
+    never publishes a torn blob;
+  * loads are fail-safe: any deserialization error counts as a miss,
+    deletes the corrupt entry, and falls through to a normal compile.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import logging
+import os
+import pickle
+import tempfile
+import threading
+import time
+from typing import Dict, Optional
+
+_logger = logging.getLogger(__name__)
+
+#: Bump whenever the compiled engine programs change semantics in a way
+#: their type signature does not capture (kernel bugfixes, new carried
+#: state, reordered outputs). Part of every cache key, and of the CI
+#: ``actions/cache`` key, so stale executables can never be served.
+ENGINE_ABI_VERSION = 1
+
+_SUFFIX = ".xc"
+
+_lock = threading.Lock()
+_stats: Dict[str, float] = {"hits": 0, "misses": 0, "writes": 0,
+                            "errors": 0, "load_s": 0.0}
+_disabled_depth = 0
+
+
+def cache_dir() -> Optional[str]:
+    """The persistent cache directory, or None when the cache is off.
+
+    Re-read from ``MEMSIM_EXEC_CACHE_DIR`` on every call so a live
+    process (or a test) can point it elsewhere; an unset/empty variable
+    disables the persistent layer entirely."""
+    if _disabled_depth > 0:
+        return None
+    d = os.environ.get("MEMSIM_EXEC_CACHE_DIR", "").strip()
+    return d or None
+
+
+@contextlib.contextmanager
+def disabled():
+    """Context manager: ignore the persistent cache (neither load nor
+    store) for the duration — used by benchmarks that reconstruct
+    historical baselines by monkeypatching traced-through code, which the
+    key cannot see (serving or publishing blobs there would silently
+    corrupt the baseline *and* the cache)."""
+    global _disabled_depth
+    with _lock:
+        _disabled_depth += 1
+    try:
+        yield
+    finally:
+        with _lock:
+            _disabled_depth -= 1
+
+
+def make_key(name: str, static_key: tuple, shapes: tuple) -> str:
+    """Stable cross-process cache key (hex SHA-256). ``name`` identifies
+    the runner function (``id()`` is process-local, so the in-memory key
+    cannot be reused here); ``static_key``/``shapes`` are the same
+    components the in-memory AOT cache keys on, whose ``repr`` is
+    deterministic (ints, strings, frozen dataclasses, nested tuples)."""
+    import jax
+    import jaxlib
+
+    material = repr((
+        ENGINE_ABI_VERSION,
+        jax.__version__,
+        jaxlib.__version__,
+        jax.default_backend(),
+        len(jax.devices()),
+        name,
+        static_key,
+        shapes,
+    ))
+    return hashlib.sha256(material.encode()).hexdigest()
+
+
+def _path(d: str, key: str) -> str:
+    return os.path.join(d, key + _SUFFIX)
+
+
+def load(key: str):
+    """Deserialize + load the executable for ``key``, or None on miss.
+
+    Any failure (torn/corrupt blob, incompatible jax internals, changed
+    device topology that slipped past the key) deletes the entry and
+    reports a miss — the caller falls back to a plain compile."""
+    d = cache_dir()
+    if d is None:
+        return None
+    path = _path(d, key)
+    if not os.path.exists(path):
+        with _lock:
+            _stats["misses"] += 1
+        return None
+    t0 = time.perf_counter()
+    try:
+        from jax.experimental import serialize_executable
+
+        with open(path, "rb") as f:
+            serialized, in_tree, out_tree = pickle.load(f)
+        exe = serialize_executable.deserialize_and_load(
+            serialized, in_tree, out_tree)
+    except Exception as e:  # pragma: no cover - corrupt/incompatible blob
+        with _lock:
+            _stats["errors"] += 1
+            _stats["misses"] += 1
+        _logger.warning("exec cache: dropping unloadable entry %s (%s)",
+                        path, e)
+        with contextlib.suppress(OSError):
+            os.remove(path)
+        return None
+    with _lock:
+        _stats["hits"] += 1
+        _stats["load_s"] += time.perf_counter() - t0
+    return exe
+
+
+def store(key: str, compiled) -> bool:
+    """Serialize ``compiled`` under ``key`` (atomic publish). Returns
+    whether a blob was written; failures are logged, never raised — the
+    persistent layer is an accelerator, not a correctness dependency."""
+    d = cache_dir()
+    if d is None:
+        return False
+    try:
+        from jax.experimental import serialize_executable
+
+        serialized, in_tree, out_tree = serialize_executable.serialize(
+            compiled)
+        blob = pickle.dumps((serialized, in_tree, out_tree))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_", suffix=_SUFFIX)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, _path(d, key))  # atomic publish
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.remove(tmp)
+            raise
+    except Exception as e:  # pragma: no cover - serialization best-effort
+        with _lock:
+            _stats["errors"] += 1
+        _logger.warning("exec cache: failed to store %s (%s)", key, e)
+        return False
+    with _lock:
+        _stats["writes"] += 1
+    return True
+
+
+def clear() -> int:
+    """Remove every cache blob (and stale temp files) from the cache
+    directory. Returns the number of entries removed. A no-op when the
+    cache is disabled."""
+    d = os.environ.get("MEMSIM_EXEC_CACHE_DIR", "").strip()
+    if not d or not os.path.isdir(d):
+        return 0
+    removed = 0
+    for fn in os.listdir(d):
+        if fn.endswith(_SUFFIX):
+            with contextlib.suppress(OSError):
+                os.remove(os.path.join(d, fn))
+                removed += 1
+    return removed
+
+
+def stats() -> Dict:
+    """Lifetime counters of this process: hits / misses / writes / errors
+    plus the cumulative deserialize wall ``load_s`` (the benches
+    snapshot-and-diff these around each leg)."""
+    with _lock:
+        out = dict(_stats)
+    out["load_s"] = round(out["load_s"], 4)
+    d = os.environ.get("MEMSIM_EXEC_CACHE_DIR", "").strip()
+    out["enabled"] = bool(d)
+    out["entries"] = (
+        sum(1 for fn in os.listdir(d) if fn.endswith(_SUFFIX))
+        if d and os.path.isdir(d) else 0)
+    return out

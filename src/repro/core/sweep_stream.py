@@ -1,0 +1,506 @@
+"""Streaming mega-sweep executor: chunked lanes, pipelined prep/compile,
+kill/resume checkpointing, persistent cross-process executable cache.
+
+The materializing sweeps (:func:`repro.core.engine.sweep_grid` /
+:func:`~repro.core.engine.sweep_topologies`) stage every lane of the grid
+at once: fine at 10^3 points, hopeless at the 10^5-10^6-point campaigns
+the ROADMAP north-star wants, where the stacked traces + per-lane state
+alone exceed host/device memory and a single crash loses hours of work.
+This module is the streaming path both sweep entry points route to above
+:func:`~repro.core.engine._stream_threshold` lanes:
+
+* **Chunking under a memory budget** — the lane space is split,
+  topology-major, into fixed-shape chunks of ``chunk_lanes`` lanes (the
+  last chunk of each topology padded with bit-inert sentinel lanes, so
+  every chunk of a topology reuses ONE compiled program). ``chunk_lanes``
+  is given directly or derived from ``memory_budget_bytes`` via
+  :func:`lane_footprint_bytes` (budget covers the executing chunk plus
+  the prefetched one).
+
+* **Pipelining** — all per-topology programs are lowered up front and
+  compiled concurrently on a thread pool (XLA releases the GIL), so
+  topology K+1's compile overlaps topology K's chunk execution; a
+  single-worker prep executor stages chunk N+1's host-side arrays (pad,
+  stack, ``device_put``) while chunk N executes on device. Reuses the
+  ``_aot_lower`` / ``_aot_finish`` split and the round-robin multi-device
+  placement of the materializing multi-topology path.
+
+* **Persistent executables** — compiles go through the engine AOT cache,
+  which (when ``MEMSIM_EXEC_CACHE_DIR`` is set) falls back to / publishes
+  into the on-disk serialized-executable cache
+  (:mod:`repro.core.exec_cache`), so a warm re-invoke of the same
+  topology set — in a *fresh process* — performs zero recompiles.
+
+* **Kill/resume** — with ``checkpoint_dir`` set, every finished chunk's
+  reduced results publish atomically through
+  :class:`repro.checkpoint.store.SweepCheckpoint` together with a
+  manifest fingerprinting the entire sweep (grid points, lane configs,
+  schedules, traces, horizon, chunking). A killed sweep re-invoked with
+  the same arguments resumes from the last committed chunk; a manifest
+  whose fingerprint does not match the relaunched sweep raises
+  ``ValueError`` under ``resume=True`` (pass ``resume=False`` to clear
+  and start over) — stale chunks can never be spliced into a different
+  grid's results.
+
+Bit-exactness: each chunk is the same vmap shared-clock batched program
+the materializing path runs, and per-lane results are independent of
+batch composition (sentinel lanes are inert; established by the shard-pad
+and topo-sweep equivalence tests) — so chunked, resumed, and
+materializing executions of one grid agree bit-for-bit, per lane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as _eng
+from repro.core import exec_cache
+from repro.core.params import MemSimConfig, ParamSchedule, RuntimeParams
+from repro.core.simulator import SimResult, Trace, init_state
+
+#: Test seam: when set, called as ``_pre_commit_hook(chunk_index)`` after a
+#: chunk's results are computed but *before* the chunk is committed to the
+#: checkpoint store — the window a crash would lose that chunk's work. The
+#: kill/resume test SIGKILLs the process from here to exercise recovery
+#: deterministically.
+_pre_commit_hook: Optional[Callable[[int], None]] = None
+
+#: Default lanes per chunk when neither ``chunk_lanes`` nor
+#: ``memory_budget_bytes`` is given.
+DEFAULT_CHUNK_LANES = 256
+
+#: Hard ceiling on a derived chunk size — beyond this, host staging wall
+#: time dominates and the prefetch pipeline stalls.
+MAX_CHUNK_LANES = 1024
+
+
+# --------------------------------------------------------------------------
+# memory budget -> chunk size
+# --------------------------------------------------------------------------
+
+def lane_footprint_bytes(topo, n_max: int, s_max: int) -> int:
+    """Bytes of device memory one lane of a batched chunk pins: the full
+    per-lane :class:`SimState` register file (shapes via
+    :func:`jax.eval_shape` — no allocation), its padded trace rows, its
+    padded schedule, and the depth-limit scalars. Everything the engine
+    carries is int32."""
+    seg = jax.ShapeDtypeStruct((s_max,), jnp.int32)
+    sched = ParamSchedule(
+        boundaries=seg,
+        values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
+    state = jax.eval_shape(
+        lambda s: init_state(topo, s, n_max, jnp.int32(1), jnp.int32(1)),
+        sched)
+    state_b = sum(4 * int(np.prod(leaf.shape))
+                  for leaf in jax.tree_util.tree_leaves(state))
+    trace_b = 4 * 4 * n_max                       # t/addr/is_write/wdata
+    sched_b = 4 * (1 + len(RuntimeParams._fields)) * s_max
+    return state_b + trace_b + sched_b + 8        # + queue/resp limits
+
+
+def _resolve_chunk_lanes(chunk_lanes: Optional[int],
+                         memory_budget_bytes: Optional[int],
+                         lane_bytes: int, n_points: int) -> int:
+    """An explicit ``chunk_lanes`` wins; else a budget covers two chunks
+    (executing + prefetched); else :data:`DEFAULT_CHUNK_LANES`. Always at
+    least one lane — a budget below one lane's footprint still streams,
+    one lane at a time (the alternative is refusing to run at all)."""
+    if chunk_lanes is not None:
+        if chunk_lanes < 1:
+            raise ValueError(f"chunk_lanes must be >= 1, got {chunk_lanes}")
+        return min(chunk_lanes, max(1, n_points))
+    if memory_budget_bytes is not None:
+        derived = memory_budget_bytes // (2 * lane_bytes)
+        return max(1, min(int(derived), MAX_CHUNK_LANES, max(1, n_points)))
+    return min(DEFAULT_CHUNK_LANES, max(1, n_points))
+
+
+# --------------------------------------------------------------------------
+# sweep fingerprinting (resume safety)
+# --------------------------------------------------------------------------
+
+def _trace_digest(tr: Trace) -> str:
+    h = hashlib.sha256()
+    for arr in (tr.t, tr.addr, tr.is_write, tr.wdata):
+        h.update(np.ascontiguousarray(np.asarray(arr, np.int32)).tobytes())
+    return h.hexdigest()
+
+
+def _sched_bytes(sc: ParamSchedule) -> bytes:
+    parts = [np.ascontiguousarray(
+        np.asarray(sc.boundaries, np.int32)).tobytes()]
+    parts += [np.ascontiguousarray(np.asarray(v, np.int32)).tobytes()
+              for v in sc.values]
+    return b"".join(parts)
+
+
+def sweep_fingerprint(lane_cfgs: Sequence[MemSimConfig],
+                      scheds: Sequence[ParamSchedule],
+                      trace_list: Sequence[Trace],
+                      qs: Sequence[int], rs: Sequence[int],
+                      num_cycles: int, cap: int, rcap: int,
+                      cycle_skip: bool, chunk_lanes: int) -> str:
+    """Hex digest identifying a streaming sweep for resume purposes: the
+    exact lane configs (full ``repr`` — every timing/policy field), the
+    resolved per-lane schedules and depth limits, the trace *contents*,
+    the horizon, static capacities, the engine ABI version, and the chunk
+    geometry (chunk boundaries are a function of ``chunk_lanes``, so two
+    runs only share chunk files when they agree on it). Anything that
+    could change a lane's bits — or which lanes land in which chunk —
+    changes the fingerprint, and resume refuses to splice."""
+    h = hashlib.sha256()
+    h.update(repr((exec_cache.ENGINE_ABI_VERSION, num_cycles, cap, rcap,
+                   bool(cycle_skip), chunk_lanes,
+                   len(lane_cfgs))).encode())
+    tr_digests: Dict[int, str] = {}
+    for cfg_i, sc, tr, q, r in zip(lane_cfgs, scheds, trace_list, qs, rs):
+        h.update(repr((cfg_i, q, r)).encode())
+        h.update(_sched_bytes(sc))
+        d = tr_digests.get(id(tr))
+        if d is None:
+            d = tr_digests[id(tr)] = _trace_digest(tr)
+        h.update(d.encode())
+    return h.hexdigest()
+
+
+def _chunk_digest(fingerprint: str, ci: int, lane_idx: Sequence[int]) -> str:
+    return hashlib.sha256(
+        (fingerprint + repr((ci, tuple(lane_idx)))).encode()).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# the executor
+# --------------------------------------------------------------------------
+
+#: Per-lane record arrays checkpointed for each chunk (``[L, n_max]``).
+_RECORD_KEYS = ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata")
+
+
+def stream_sweep(cfg: MemSimConfig,
+                 trace: Union[Trace, Sequence[Trace]],
+                 grid,
+                 num_cycles: int = 100_000,
+                 *, capacity: Optional[int] = None,
+                 resp_capacity: Optional[int] = None,
+                 cycle_skip: bool = True,
+                 max_workers: Optional[int] = None,
+                 chunk_lanes: Optional[int] = None,
+                 memory_budget_bytes: Optional[int] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 resume: bool = True,
+                 timings: Optional[dict] = None) -> "_eng.TopoGridResult":
+    """Stream a (topology x runtime) grid through chunked batched programs.
+
+    Accepts the same grid language as
+    :func:`repro.core.engine.sweep_topologies` (runtime-only grids — the
+    :func:`~repro.core.engine.sweep_grid` case — are the single-topology
+    special case) and returns the same merged
+    :class:`~repro.core.engine.TopoGridResult`, bit-identical per lane to
+    the materializing paths. See the module docstring for the chunking /
+    pipelining / checkpointing contract, and
+    :func:`repro.core.engine.sweep_grid` for the knob semantics.
+    """
+    from jax.sharding import SingleDeviceSharding
+
+    from repro.checkpoint.store import SweepCheckpoint
+    from repro.distributed.shard import round_robin_devices
+
+    # ---- expand the grid exactly like the materializing paths ----------
+    points = _eng.topo_grid_points(grid)
+    lane_cfgs = [dataclasses.replace(
+        cfg, **{k: v for k, v in ov.items() if k != "schedule"}).validate()
+        for ov in points]
+    n_points = len(points)
+    if isinstance(trace, Trace):
+        trace_list = [trace] * n_points
+    else:
+        trace_list = list(trace)
+        if len(trace_list) != n_points:
+            raise ValueError(
+                f"got {len(trace_list)} traces for {n_points} grid points")
+
+    qs = [c.queue_size for c in lane_cfgs]
+    rs = [c.resp_queue_size for c in lane_cfgs]
+    cap = max(qs) if capacity is None else capacity
+    rcap = max(rs) if resp_capacity is None else resp_capacity
+    if cap < max(qs):
+        raise ValueError("capacity below largest swept queue size")
+    if rcap < max(rs):
+        raise ValueError("resp_capacity below largest swept resp queue size")
+
+    scheds = [_eng._sched_i32(_eng.lane_schedule(c, ov.get("schedule")))
+              for c, ov in zip(lane_cfgs, points)]
+    s_max = max(sc.num_segments for sc in scheds)
+    scheds = [sc.pad_to(s_max) for sc in scheds]
+    n_max = max(int(tr.num_requests) for tr in trace_list)
+
+    # group points by distinct compiled topology (as sweep_topologies)
+    topologies: List = []
+    topo_of_point: List[int] = []
+    for c in lane_cfgs:
+        t = dataclasses.replace(c, queue_size=cap,
+                                resp_queue_size=rcap).topology()
+        if t not in topologies:
+            topologies.append(t)
+        topo_of_point.append(topologies.index(t))
+    n_topos = len(topologies)
+    groups = [[i for i, ti in enumerate(topo_of_point) if ti == gi]
+              for gi in range(n_topos)]
+    devices = round_robin_devices(n_topos)
+
+    # ---- chunk plan: topology-major, fixed (L, n_max) batch shape ------
+    lane_bytes = max(lane_footprint_bytes(t, n_max, s_max)
+                     for t in topologies)
+    L = _resolve_chunk_lanes(chunk_lanes, memory_budget_bytes, lane_bytes,
+                             n_points)
+    chunks: List[Tuple[int, List[int]]] = []   # (topo group, lane indices)
+    for gi in range(n_topos):
+        idxs = groups[gi]
+        for off in range(0, len(idxs), L):
+            chunks.append((gi, idxs[off:off + L]))
+    n_chunks = len(chunks)
+
+    fp = sweep_fingerprint(lane_cfgs, scheds, trace_list, qs, rs,
+                           num_cycles, cap, rcap, cycle_skip, L)
+
+    # ---- checkpoint store: validate-or-refuse, find committed chunks ---
+    ckpt = SweepCheckpoint(checkpoint_dir) if checkpoint_dir else None
+    done: Dict[int, Tuple[Dict[str, np.ndarray], Dict]] = {}
+    if ckpt is not None:
+        existing = ckpt.read_manifest()
+        if existing is not None and existing.get("fingerprint") != fp:
+            if resume:
+                raise ValueError(
+                    f"checkpoint at {checkpoint_dir!r} belongs to a "
+                    "different sweep (grid / configs / traces / horizon / "
+                    "chunking changed); pass resume=False to discard it")
+            ckpt.clear()
+            existing = None
+        if existing is None or not resume:
+            if not resume:
+                ckpt.clear()
+            ckpt.write_manifest({
+                "version": 1,
+                "fingerprint": fp,
+                "n_points": n_points,
+                "n_chunks": n_chunks,
+                "chunk_lanes": L,
+                "num_cycles": int(num_cycles),
+                "grid_axes": list(grid),
+                "chunks": [{"topology": gi, "lanes": list(map(int, li)),
+                            "digest": _chunk_digest(fp, ci, li)}
+                           for ci, (gi, li) in enumerate(chunks)],
+            })
+        else:
+            for ci in ckpt.done_chunks():
+                if ci >= n_chunks:
+                    continue
+                loaded = ckpt.load_chunk(ci)
+                if loaded is None:
+                    continue
+                arrays, meta = loaded
+                # a chunk only restores when its digest proves it was
+                # produced by THIS sweep's chunk ci — else recompute
+                if meta.get("digest") == _chunk_digest(fp, ci,
+                                                       chunks[ci][1]):
+                    done[ci] = (arrays, meta)
+
+    # ---- phase 1: lower every topology program, compile concurrently --
+    pending = [ci for ci in range(n_chunks) if ci not in done]
+    need_topo = sorted({chunks[ci][0] for ci in pending})
+    lowered: Dict[int, tuple] = {}
+    for gi in need_topo:
+        sharding = SingleDeviceSharding(devices[gi])
+
+        def sds(shape):
+            return jax.ShapeDtypeStruct(shape, jnp.int32, sharding=sharding)
+
+        tr_s = Trace(t=sds((L, n_max)), addr=sds((L, n_max)),
+                     is_write=sds((L, n_max)), wdata=sds((L, n_max)))
+        scal, vec = sds(()), sds((L,))
+        seg = sds((L, s_max))
+        sched_s = ParamSchedule(
+            boundaries=seg,
+            values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
+        topo = topologies[gi]
+        if cycle_skip:
+            lowered[gi] = _eng._aot_lower(
+                _eng._run_skip_batch_jit,
+                (topo, tr_s, scal, sched_s, vec, vec),
+                (tr_s, scal, sched_s, vec, vec), (topo, devices[gi].id))
+        else:
+            lowered[gi] = _eng._aot_lower(
+                _eng._run_scan_batch_jit,
+                (topo, tr_s, num_cycles, sched_s, vec, vec),
+                (tr_s, sched_s, vec, vec),
+                (topo, num_cycles, devices[gi].id))
+
+    def finish(gi: int) -> Tuple[object, float, int]:
+        key, low, lower_s, cached = lowered[gi]
+        if low is None:
+            return cached, 0.0, 0
+        compiled, c_s = _eng._aot_finish(key, low)
+        return compiled, lower_s + c_s, 1
+
+    if max_workers is None:
+        import os as _os
+        max_workers = max(1, min(len(need_topo) or 1, _os.cpu_count() or 1))
+    # compiles land on a pool so topology K+1 compiles while topology K's
+    # chunks already execute (chunk order is topology-major); the first
+    # chunk blocks only on ITS topology's future
+    compile_pool = ThreadPoolExecutor(max_workers=max(1, max_workers))
+    finish_futs = {gi: compile_pool.submit(finish, gi) for gi in need_topo}
+
+    # ---- phase 2: stream chunks with one-ahead host prep ---------------
+    def prep(ci: int):
+        gi, idxs = chunks[ci]
+        dev = devices[gi]
+        pad = L - len(idxs)
+        stacked, _ = _eng.stack_traces([trace_list[i] for i in idxs],
+                                       pad_lanes=pad)
+        # sentinel lanes are bit-inert whatever their schedule/depths;
+        # replicate the first real lane's so shapes/dtypes line up
+        sched_stack = ParamSchedule.stack(
+            [scheds[i] for i in idxs] + [scheds[idxs[0]]] * pad)
+        ql = jnp.asarray([qs[i] for i in idxs] + [qs[idxs[0]]] * pad,
+                         jnp.int32)
+        rl = jnp.asarray([rs[i] for i in idxs] + [rs[idxs[0]]] * pad,
+                         jnp.int32)
+        staged = jax.device_put((stacked, sched_stack, ql, rl), dev)
+        if cycle_skip:
+            nc = jax.device_put(jnp.int32(num_cycles), dev)
+            return staged + (nc,)
+        return staged
+
+    per_chunk = []
+    results: List[Optional[SimResult]] = [None] * n_points
+    compile_done_s: Dict[int, float] = {}
+    steps_max = 0
+    prep_wall = 0.0
+    run_wall = 0.0
+    save_wall = 0.0
+    compile_block = 0.0   # wall actually BLOCKED on a compile future
+    prep_pool = ThreadPoolExecutor(max_workers=1)
+    try:
+        nxt = prep_pool.submit(prep, pending[0]) if pending else None
+        for k, ci in enumerate(pending):
+            gi, idxs = chunks[ci]
+            t_p0 = time.perf_counter()
+            staged = nxt.result()
+            prep_wall += time.perf_counter() - t_p0
+            nxt = (prep_pool.submit(prep, pending[k + 1])
+                   if k + 1 < len(pending) else None)
+            if gi not in compile_done_s:
+                t_b0 = time.perf_counter()
+                compiled, c_s, fresh = finish_futs[gi].result()
+                compile_block += time.perf_counter() - t_b0
+                compile_done_s[gi] = c_s
+                finish_futs[gi] = (compiled, c_s, fresh)  # resolved tuple
+            compiled = finish_futs[gi][0]
+            t_r0 = time.perf_counter()
+            if cycle_skip:
+                stacked, sched_stack, ql, rl, nc = staged
+                finals, steps = compiled(stacked, nc, sched_stack, ql, rl)
+            else:
+                stacked, sched_stack, ql, rl = staged
+                finals, steps = compiled(stacked, sched_stack, ql, rl)
+            jax.block_until_ready(finals)
+            run_s = time.perf_counter() - t_r0
+            run_wall += run_s
+            host = jax.device_get(finals)
+            steps_i = int(np.max(np.asarray(steps)))
+            steps_max = max(steps_max, steps_i)
+
+            Lr = len(idxs)
+            arrays = {key: np.asarray(getattr(host, key))[:Lr]
+                      for key in _RECORD_KEYS}
+            arrays["blocked_arrival"] = np.asarray(
+                host.blocked_arrival)[:Lr]
+            arrays["blocked_dispatch"] = np.asarray(
+                host.blocked_dispatch)[:Lr]
+            counters_keys = list(host.counters)
+            for ckey in counters_keys:
+                arrays["c_" + ckey] = np.asarray(host.counters[ckey])[:Lr]
+            meta = {"digest": _chunk_digest(fp, ci, idxs),
+                    "lanes": list(map(int, idxs)),
+                    "counters_keys": counters_keys,
+                    "steps": steps_i}
+            if _pre_commit_hook is not None:
+                _pre_commit_hook(ci)
+            if ckpt is not None:
+                t_s0 = time.perf_counter()
+                ckpt.save_chunk(ci, arrays, meta)
+                save_wall += time.perf_counter() - t_s0
+            done[ci] = (arrays, meta)
+            per_chunk.append({"chunk": ci, "topology": gi, "lanes": Lr,
+                              "run_s": run_s, "steps": steps_i,
+                              "device": devices[gi].id})
+    finally:
+        prep_pool.shutdown(wait=False)
+        compile_pool.shutdown(wait=False)
+
+    fresh_total = sum(f[2] for f in finish_futs.values()
+                      if isinstance(f, tuple))
+    compile_seq = sum(compile_done_s.values())
+
+    # ---- merge: committed + freshly computed chunks -> result table ----
+    for ci in range(n_chunks):
+        arrays, meta = done[ci]
+        _, idxs = chunks[ci]
+        for k, i in enumerate(idxs):
+            n_i = int(trace_list[i].num_requests)
+            results[i] = SimResult(
+                cfg=lane_cfgs[i],
+                num_cycles=num_cycles,
+                t_intended=np.asarray(trace_list[i].t),
+                is_write=np.asarray(trace_list[i].is_write),
+                t_admit=arrays["t_admit"][k, :n_i],
+                t_dispatch=arrays["t_dispatch"][k, :n_i],
+                t_start=arrays["t_start"][k, :n_i],
+                t_complete=arrays["t_complete"][k, :n_i],
+                rdata=arrays["rdata"][k, :n_i],
+                counters={ckey: arrays["c_" + ckey][k]
+                          for ckey in meta["counters_keys"]},
+                blocked_arrival=int(arrays["blocked_arrival"][k]),
+                blocked_dispatch=int(arrays["blocked_dispatch"][k]),
+            )
+        steps_max = max(steps_max, int(meta.get("steps", 0)))
+
+    own = {
+        "compiles": fresh_total,
+        "compile_s": compile_seq,
+        "compile_s_wall": compile_block,
+        "run_s": run_wall,
+        "prep_s": prep_wall,
+        "checkpoint_s": save_wall,
+        "steps": steps_max,
+        "topologies": n_topos,
+        "streamed": True,
+        "chunk_lanes": L,
+        "chunks": n_chunks,
+        "chunks_resumed": n_chunks - len(pending),
+        "lane_bytes": lane_bytes,
+        "peak_chunk_bytes": 2 * L * lane_bytes,
+        "per_chunk": per_chunk,
+    }
+    if timings is not None:
+        for k in ("compiles", "topologies", "chunks", "chunks_resumed"):
+            timings[k] = timings.get(k, 0) + own[k]
+        for k in ("compile_s", "compile_s_wall", "run_s", "prep_s",
+                  "checkpoint_s"):
+            timings[k] = timings.get(k, 0.0) + own[k]
+        timings["steps"] = max(timings.get("steps", 0), own["steps"])
+        for k in ("streamed", "chunk_lanes", "lane_bytes",
+                  "peak_chunk_bytes"):
+            timings[k] = own[k]
+    return _eng.TopoGridResult(points=points, results=results,
+                               topologies=topologies,
+                               topo_of_point=topo_of_point, timings=own)

@@ -23,12 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import MemSimConfig, simulate, simulate_batch, simulate_ideal
-from repro.core.engine import grid_points
+from repro.core.engine import _stream_threshold, grid_points, sweep_grid
 from repro.traces import llm_workload
 
 
@@ -79,12 +80,26 @@ def measure(name: str, traffic: llm_workload.WorkloadTraffic,
 _IDEAL_FIELDS = ("tRP", "tRCDRD", "tRCDWR", "tCCDL", "tCL", "tRFC", "tREFI")
 
 
+def _stream_ckpt_dir(checkpoint_dir: Optional[str], si: int,
+                     sname: str) -> Optional[str]:
+    """Per-stream checkpoint subdirectory of a grid study (each stream is
+    its own streaming sweep with its own manifest/chunks)."""
+    if checkpoint_dir is None:
+        return None
+    return os.path.join(checkpoint_dir, f"stream_{si:02d}_{sname}")
+
+
 def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
                grid: Mapping[str, Sequence],
                cfg: MemSimConfig = MemSimConfig(),
                target_requests: int = 4000, seed: int = 0,
                tail_cycles: int = 50_000,
                batch_mode: str = "auto",
+               stream: Optional[bool] = None,
+               chunk_lanes: Optional[int] = None,
+               memory_budget_bytes: Optional[int] = None,
+               checkpoint_dir: Optional[str] = None,
+               resume: bool = True,
                timings: Optional[dict] = None) -> List[Dict]:
     """Effective bandwidth of every (stream x config) cell, one compile.
 
@@ -96,6 +111,14 @@ def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
     the ideal reference reuses one compiled scan across all lanes since its
     timing values are traced too. Returns one dict per cell:
     ``{stream, config, efficiency, read_latency_mean, refresh_share, ...}``.
+
+    Mega-grids stream: above :func:`~repro.core.engine._stream_threshold`
+    total lanes — or whenever ``checkpoint_dir`` is given or
+    ``stream=True`` — each traffic stream runs as its own streaming
+    :func:`~repro.core.engine.sweep_grid` (chunked under
+    ``memory_budget_bytes`` / ``chunk_lanes``, checkpointed per stream
+    under ``checkpoint_dir/stream_<i>_<name>``, resumable after a kill),
+    bit-exact per cell vs the one-batch path.
     """
     points = grid_points(grid)
     lane_cfgs = [dataclasses.replace(cfg, **ov)
@@ -107,16 +130,31 @@ def grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
         bprs.append(bpr)
     horizon = max(int(np.asarray(tr.t).max()) for tr in traces) + tail_cycles
 
-    cap = max(c.queue_size for c in lane_cfgs)
-    rcap = max(c.resp_queue_size for c in lane_cfgs)
-    cfg_cap = dataclasses.replace(cfg, queue_size=cap, resp_queue_size=rcap)
-    lane_traces = [traces[si] for si in range(len(streams)) for _ in points]
-    results = simulate_batch(
-        cfg_cap, lane_traces, num_cycles=horizon,
-        queue_sizes=[c.queue_size for c in lane_cfgs],
-        resp_queue_sizes=[c.resp_queue_size for c in lane_cfgs],
-        params=[c.runtime() for c in lane_cfgs], lane_cfgs=lane_cfgs,
-        batch_mode=batch_mode, timings=timings)
+    if stream is None:
+        stream = (checkpoint_dir is not None
+                  or len(lane_cfgs) >= _stream_threshold())
+    if stream:
+        results = []
+        for si, (sname, _) in enumerate(streams):
+            results.extend(sweep_grid(
+                cfg, traces[si], grid, num_cycles=horizon, stream=True,
+                chunk_lanes=chunk_lanes,
+                memory_budget_bytes=memory_budget_bytes,
+                checkpoint_dir=_stream_ckpt_dir(checkpoint_dir, si, sname),
+                resume=resume, timings=timings))
+    else:
+        cap = max(c.queue_size for c in lane_cfgs)
+        rcap = max(c.resp_queue_size for c in lane_cfgs)
+        cfg_cap = dataclasses.replace(cfg, queue_size=cap,
+                                      resp_queue_size=rcap)
+        lane_traces = [traces[si] for si in range(len(streams))
+                       for _ in points]
+        results = simulate_batch(
+            cfg_cap, lane_traces, num_cycles=horizon,
+            queue_sizes=[c.queue_size for c in lane_cfgs],
+            resp_queue_sizes=[c.resp_queue_size for c in lane_cfgs],
+            params=[c.runtime() for c in lane_cfgs], lane_cfgs=lane_cfgs,
+            batch_mode=batch_mode, timings=timings)
 
     # the ideal reference ignores policies and queue depths, so cache its
     # span per (stream, timing-relevant parameter subset) — a policy/depth
@@ -154,6 +192,11 @@ def topo_grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
                     cfg: MemSimConfig = MemSimConfig(),
                     target_requests: int = 4000, seed: int = 0,
                     tail_cycles: int = 50_000,
+                    stream: Optional[bool] = None,
+                    chunk_lanes: Optional[int] = None,
+                    memory_budget_bytes: Optional[int] = None,
+                    checkpoint_dir: Optional[str] = None,
+                    resume: bool = True,
                     timings: Optional[dict] = None) -> List[Dict]:
     """Effective bandwidth across *hardware shapes*: every (stream x
     topology x runtime) cell via :func:`repro.core.engine.sweep_topologies`
@@ -166,17 +209,27 @@ def topo_grid_study(streams: Sequence[Tuple[str, llm_workload.WorkloadTraffic]],
     read_latency_mean, refresh_share, ...}`` — the design-space table the
     paper motivates (how much effective bandwidth does another channel or
     doubled banks actually buy this workload?).
+
+    The streaming knobs (``stream`` / ``chunk_lanes`` /
+    ``memory_budget_bytes`` / ``checkpoint_dir`` / ``resume``) pass
+    straight through to :func:`~repro.core.engine.sweep_topologies`, with
+    each stream checkpointing under its own
+    ``checkpoint_dir/stream_<i>_<name>`` subdirectory.
     """
     from repro.core.engine import sweep_topologies
 
     rows = []
     ideal_spans: Dict[tuple, int] = {}
-    for sname, traffic in streams:
+    for si, (sname, traffic) in enumerate(streams):
         tr, bpr = llm_workload.synthesize(traffic, target_requests,
                                           seed=seed)
         horizon = int(np.asarray(tr.t).max()) + tail_cycles
         sweep = sweep_topologies(cfg, tr, grid, num_cycles=horizon,
-                                 timings=timings)
+                                 stream=stream, chunk_lanes=chunk_lanes,
+                                 memory_budget_bytes=memory_budget_bytes,
+                                 checkpoint_dir=_stream_ckpt_dir(
+                                     checkpoint_dir, si, sname),
+                                 resume=resume, timings=timings)
         for point, res in zip(sweep.points, sweep.results):
             c = res.cfg
             key = ((sname,)

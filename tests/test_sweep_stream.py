@@ -1,0 +1,431 @@
+"""Streaming mega-sweep executor (core/sweep_stream.py).
+
+The contract: chunked streaming execution is bit-identical per lane to the
+materializing sweep paths (including partial, sentinel-padded chunks and
+multi-topology grids); a checkpointed sweep killed mid-chunk — SIGKILL,
+no cleanup — resumes from the last committed chunk and merges to the
+exact same result table on both FSM backends; a manifest from a different
+sweep refuses to resume; and the persistent executable cache makes a warm
+re-invoke in a FRESH process do zero recompiles.
+"""
+
+import dataclasses
+import hashlib
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import SweepCheckpoint
+from repro.core import MemSimConfig, simulate, sweep_grid, sweep_topologies
+from repro.core import engine as engine_mod
+from repro.core import exec_cache
+from repro.core import sweep_stream
+from repro.traces import BENCHMARKS
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CYCLES = 2_000
+
+
+def small_trace(n=40, gap=5):
+    return BENCHMARKS["trace_example"](n=n, gap=gap)
+
+
+def assert_bit_identical(ref, fast, label=""):
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(
+            getattr(ref, f), getattr(fast, f), err_msg=f"{label}: {f}")
+    assert list(ref.counters) == list(fast.counters), label
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{label}: counter {k}")
+    assert ref.blocked_arrival == fast.blocked_arrival, label
+    assert ref.blocked_dispatch == fast.blocked_dispatch, label
+
+
+#: 8 runtime points; chunk_lanes=3 -> chunks of 3+3+2 (a partial,
+#: sentinel-padded final chunk is always exercised)
+GRID = {"tCL": [14, 18], "page_policy": ["closed", "open"],
+        "queue_size": [4, 8]}
+
+
+def _sub_env(**extra):
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.pop("MEMSIM_EXEC_CACHE_DIR", None)
+    env.update(extra)
+    return env
+
+
+# --------------------------------------------------------------------------
+# streaming vs materializing bit-identity
+# --------------------------------------------------------------------------
+
+def test_stream_bit_identical_to_materializing_sweep_grid():
+    """Chunked streaming (with a partial last chunk) == the one-batch
+    materializing path, field for field, every lane."""
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    mat = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=False)
+    timings = {}
+    st = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+                    chunk_lanes=3, timings=timings)
+    assert timings["streamed"] is True
+    assert timings["chunks"] == 3
+    assert len(st) == len(mat) == 8
+    for i, (a, b) in enumerate(zip(mat, st)):
+        assert b.cfg == a.cfg
+        assert_bit_identical(a, b, f"lane {i}")
+
+
+def test_stream_multi_topology_bit_identical():
+    """Streaming sweep_topologies: chunks per topology, merged table
+    bit-identical to per-config seed simulate runs."""
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    sweep = sweep_topologies(cfg, tr, {"ranks": [1, 2], "tCL": [14, 18]},
+                             num_cycles=CYCLES, stream=True, chunk_lanes=3)
+    assert len(sweep.topologies) == 2
+    assert sweep.timings["streamed"] is True
+    for point, res in zip(sweep.points, sweep.results):
+        ref = simulate(res.cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, res, f"topo stream {point}")
+
+
+def test_stream_threshold_routes_automatically(monkeypatch):
+    """Above MEMSIM_STREAM_THRESHOLD lanes sweep_grid streams by default;
+    below it the materializing path runs (no 'streamed' marker)."""
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    monkeypatch.setenv("MEMSIM_STREAM_THRESHOLD", "4")
+    timings = {}
+    auto = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, chunk_lanes=3,
+                      timings=timings)
+    assert timings["streamed"] is True
+    monkeypatch.setenv("MEMSIM_STREAM_THRESHOLD", "100")
+    timings2 = {}
+    mat = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, timings=timings2)
+    assert "streamed" not in timings2
+    for a, b in zip(mat, auto):
+        assert_bit_identical(a, b, "auto-threshold")
+
+
+def test_chunk_lanes_from_memory_budget():
+    """chunk_lanes derives from the budget (two chunks resident), is
+    floored at one lane, and rejects explicit nonsense."""
+    lane_b = sweep_stream.lane_footprint_bytes(
+        MemSimConfig(queue_size=8, mem_words=1 << 12).topology(), 64, 1)
+    assert lane_b > 0
+    assert sweep_stream._resolve_chunk_lanes(None, 10 * 2 * lane_b,
+                                             lane_b, 1000) == 10
+    assert sweep_stream._resolve_chunk_lanes(None, 1, lane_b, 1000) == 1
+    assert sweep_stream._resolve_chunk_lanes(None, None, lane_b, 5) == 5
+    assert sweep_stream._resolve_chunk_lanes(7, None, lane_b, 1000) == 7
+    with pytest.raises(ValueError, match="chunk_lanes"):
+        sweep_stream._resolve_chunk_lanes(0, None, lane_b, 1000)
+    # end to end: a budget sized for ~2 lanes/chunk, bit-identical anyway
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    timings = {}
+    res = sweep_grid(cfg, tr, {"tCL": [14, 18], "queue_size": [4, 8]},
+                     num_cycles=CYCLES, stream=True,
+                     memory_budget_bytes=2 * 2 * lane_b, timings=timings)
+    assert timings["peak_chunk_bytes"] <= 2 * 2 * lane_b
+    for r in res:
+        ref = simulate(r.cfg, tr, num_cycles=CYCLES)
+        assert_bit_identical(ref, r, "budget-chunked")
+
+
+# --------------------------------------------------------------------------
+# checkpoint / resume
+# --------------------------------------------------------------------------
+
+def test_checkpoint_full_restore_and_mismatch_refusal(tmp_path):
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    d = str(tmp_path / "ck")
+    first = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+                       chunk_lanes=3, checkpoint_dir=d)
+    # full restore: zero device work, bit-identical
+    timings = {}
+    again = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+                       chunk_lanes=3, checkpoint_dir=d, timings=timings)
+    assert timings["chunks_resumed"] == timings["chunks"] == 3
+    assert timings["run_s"] == 0.0 and timings["compiles"] == 0
+    for a, b in zip(first, again):
+        assert_bit_identical(a, b, "full restore")
+    # any bit-relevant change refuses to resume...
+    for bad_kw in (dict(num_cycles=CYCLES + 1),
+                   dict(num_cycles=CYCLES, chunk_lanes=2)):
+        with pytest.raises(ValueError, match="different sweep"):
+            sweep_grid(cfg, tr, GRID, stream=True,
+                       chunk_lanes=bad_kw.get("chunk_lanes", 3),
+                       num_cycles=bad_kw["num_cycles"], checkpoint_dir=d)
+    with pytest.raises(ValueError, match="different sweep"):
+        sweep_grid(cfg, tr, {"tCL": [14, 20], "page_policy":
+                             ["closed", "open"], "queue_size": [4, 8]},
+                   num_cycles=CYCLES, stream=True, chunk_lanes=3,
+                   checkpoint_dir=d)
+    # ...unless resume=False, which clears and starts over
+    timings2 = {}
+    redo = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+                      chunk_lanes=3, checkpoint_dir=d, resume=False,
+                      timings=timings2)
+    assert timings2["chunks_resumed"] == 0
+    for a, b in zip(first, redo):
+        assert_bit_identical(a, b, "resume=False rerun")
+
+
+def test_corrupt_chunk_is_recomputed(tmp_path):
+    """A torn/garbage chunk blob is dropped and recomputed, never served."""
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    d = str(tmp_path / "ck")
+    first = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+                       chunk_lanes=3, checkpoint_dir=d)
+    ck = SweepCheckpoint(d)
+    with open(ck._chunk_path(1), "wb") as f:
+        f.write(b"not an npz")
+    timings = {}
+    again = sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+                       chunk_lanes=3, checkpoint_dir=d, timings=timings)
+    assert timings["chunks_resumed"] == 2  # chunks 0 and 2 restored
+    for a, b in zip(first, again):
+        assert_bit_identical(a, b, "corrupt-chunk recompute")
+
+
+def test_sweep_checkpoint_store_roundtrip(tmp_path):
+    ck = SweepCheckpoint(str(tmp_path / "s"))
+    assert ck.read_manifest() is None
+    ck.write_manifest({"fingerprint": "abc", "n_chunks": 2})
+    assert ck.read_manifest()["fingerprint"] == "abc"
+    arrays = {"t_complete": np.arange(6, dtype=np.int32).reshape(2, 3)}
+    ck.save_chunk(0, arrays, {"digest": "d0", "lanes": [0, 1]})
+    assert ck.done_chunks() == [0]
+    loaded, meta = ck.load_chunk(0)
+    np.testing.assert_array_equal(loaded["t_complete"],
+                                  arrays["t_complete"])
+    assert meta == {"digest": "d0", "lanes": [0, 1]}
+    assert ck.load_chunk(1) is None
+    ck.clear()
+    assert ck.read_manifest() is None and ck.done_chunks() == []
+
+
+# --------------------------------------------------------------------------
+# SIGKILL mid-chunk, then resume — both FSM backends
+# --------------------------------------------------------------------------
+
+_KILL_CHILD = textwrap.dedent("""
+    import hashlib, json, os, signal, sys
+    import numpy as np
+    from repro.core import MemSimConfig, sweep_grid
+    from repro.core import sweep_stream
+    from repro.traces import BENCHMARKS
+
+    mode, backend, ckdir = sys.argv[1], sys.argv[2], sys.argv[3]
+    tr = BENCHMARKS["trace_example"](n=20, gap=5)
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12,
+                       fsm_backend=backend)
+    grid = {"tCL": [14, 18], "queue_size": [4, 8]}
+    if mode == "kill":
+        def _hook(ci):
+            if ci >= 1:   # chunk 0 committed; die before committing 1
+                os.kill(os.getpid(), signal.SIGKILL)
+        sweep_stream._pre_commit_hook = _hook
+    timings = {}
+    res = sweep_grid(cfg, tr, grid, num_cycles=1200, stream=True,
+                     chunk_lanes=2, checkpoint_dir=ckdir, timings=timings)
+    h = hashlib.sha256()
+    for r in res:
+        for f in ("t_admit", "t_dispatch", "t_start", "t_complete",
+                  "rdata"):
+            h.update(np.ascontiguousarray(
+                np.asarray(getattr(r, f), np.int32)).tobytes())
+        for k in sorted(r.counters):
+            h.update(np.ascontiguousarray(
+                np.asarray(r.counters[k], np.int64)).tobytes())
+        h.update(np.int64(r.blocked_arrival).tobytes())
+        h.update(np.int64(r.blocked_dispatch).tobytes())
+    print("RESULT " + json.dumps(
+        {"digest": h.hexdigest(),
+         "chunks_resumed": timings["chunks_resumed"],
+         "chunks": timings["chunks"]}))
+""")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sigkill_mid_chunk_then_resume_bit_identical(backend, tmp_path):
+    """SIGKILL a streaming sweep from the pre-commit window of chunk 1 (no
+    cleanup handlers run), re-invoke with the same arguments, and require
+    the merged table to be bit-identical to an uninterrupted run."""
+    ckdir = str(tmp_path / "ck")
+    env = _sub_env()
+    kill = subprocess.run(
+        [sys.executable, "-c", _KILL_CHILD, "kill", backend, ckdir],
+        env=env, capture_output=True, text=True, cwd=_ROOT)
+    assert kill.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL death, rc={kill.returncode}\n"
+        f"{kill.stderr[-2000:]}")
+    ck = SweepCheckpoint(ckdir)
+    assert ck.done_chunks() == [0], "exactly chunk 0 committed before kill"
+
+    resume = subprocess.run(
+        [sys.executable, "-c", _KILL_CHILD, "resume", backend, ckdir],
+        env=env, capture_output=True, text=True, cwd=_ROOT)
+    assert resume.returncode == 0, resume.stderr[-4000:]
+    out = json.loads([ln for ln in resume.stdout.splitlines()
+                      if ln.startswith("RESULT ")][-1][len("RESULT "):])
+    assert out["chunks"] == 2 and out["chunks_resumed"] == 1
+
+    # uninterrupted reference, same digest recipe, in this process
+    tr = BENCHMARKS["trace_example"](n=20, gap=5)
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12,
+                       fsm_backend=backend)
+    res = sweep_grid(cfg, tr, {"tCL": [14, 18], "queue_size": [4, 8]},
+                     num_cycles=1200, stream=True, chunk_lanes=2)
+    h = hashlib.sha256()
+    for r in res:
+        for f in ("t_admit", "t_dispatch", "t_start", "t_complete",
+                  "rdata"):
+            h.update(np.ascontiguousarray(
+                np.asarray(getattr(r, f), np.int32)).tobytes())
+        for k in sorted(r.counters):
+            h.update(np.ascontiguousarray(
+                np.asarray(r.counters[k], np.int64)).tobytes())
+        h.update(np.int64(r.blocked_arrival).tobytes())
+        h.update(np.int64(r.blocked_dispatch).tobytes())
+    assert out["digest"] == h.hexdigest(), \
+        "killed-then-resumed sweep is not bit-identical"
+
+
+# --------------------------------------------------------------------------
+# persistent cross-process executable cache
+# --------------------------------------------------------------------------
+
+_CACHE_CHILD = textwrap.dedent("""
+    import json, sys
+    import numpy as np
+    from repro.core import MemSimConfig, sweep_grid
+    from repro.core import engine as eng
+    from repro.traces import BENCHMARKS
+
+    tr = BENCHMARKS["trace_example"](n=20, gap=5)
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    timings = {}
+    res = sweep_grid(cfg, tr, {"tCL": [14, 18], "queue_size": [4, 8]},
+                     num_cycles=1200, stream=True, chunk_lanes=2,
+                     timings=timings)
+    print("RESULT " + json.dumps(
+        {"compiles": timings["compiles"],
+         "disk": eng.aot_cache_stats()["disk"],
+         "tc": [int(x) for r in res for x in r.t_complete]}))
+""")
+
+
+def test_exec_cache_warm_process_zero_recompiles(tmp_path):
+    """Two FRESH interpreters over one MEMSIM_EXEC_CACHE_DIR: the first
+    compiles and publishes, the second loads — zero recompiles, identical
+    results."""
+    env = _sub_env(MEMSIM_EXEC_CACHE_DIR=str(tmp_path / "xc"))
+    legs = []
+    for _ in range(2):
+        p = subprocess.run([sys.executable, "-c", _CACHE_CHILD], env=env,
+                           capture_output=True, text=True, cwd=_ROOT)
+        assert p.returncode == 0, p.stderr[-4000:]
+        legs.append(json.loads(
+            [ln for ln in p.stdout.splitlines()
+             if ln.startswith("RESULT ")][-1][len("RESULT "):]))
+    cold, warm = legs
+    assert cold["compiles"] >= 1
+    assert cold["disk"]["writes"] >= 1
+    assert warm["compiles"] == 0, warm
+    assert warm["disk"]["hits"] >= 1
+    assert warm["disk"]["errors"] == 0
+    assert cold["tc"] == warm["tc"]
+
+
+def test_exec_cache_disabled_without_env(monkeypatch):
+    monkeypatch.delenv("MEMSIM_EXEC_CACHE_DIR", raising=False)
+    assert exec_cache.cache_dir() is None
+    assert exec_cache.stats()["enabled"] is False
+    assert exec_cache.load("0" * 64) is None  # no-op, not an error
+
+
+def test_exec_cache_key_stability(monkeypatch, tmp_path):
+    k1 = exec_cache.make_key("runner", ("topo", 1), ((4, 8), "int32"))
+    assert k1 == exec_cache.make_key("runner", ("topo", 1),
+                                     ((4, 8), "int32"))
+    assert k1 != exec_cache.make_key("runner", ("topo", 2),
+                                     ((4, 8), "int32"))
+    assert k1 != exec_cache.make_key("other", ("topo", 1),
+                                     ((4, 8), "int32"))
+    # the disabled() guard wins over the env var
+    monkeypatch.setenv("MEMSIM_EXEC_CACHE_DIR", str(tmp_path))
+    assert exec_cache.cache_dir() == str(tmp_path)
+    with exec_cache.disabled():
+        assert exec_cache.cache_dir() is None
+    assert exec_cache.cache_dir() == str(tmp_path)
+
+
+def test_aot_lru_cache_stats_counters(monkeypatch):
+    """The in-memory AOT LRU exports hits/misses/evictions (satellite:
+    observable cache-thrash)."""
+    monkeypatch.setenv("MEMSIM_AOT_CACHE_SIZE", "2")
+    c = engine_mod._AotLruCache()
+    s0 = c.stats()
+    assert (s0["hits"], s0["misses"], s0["evictions"]) == (0, 0, 0)
+    assert c.get("a") is None
+    c["a"] = 1
+    assert c.get("a") == 1
+    c["b"] = 2
+    c["c"] = 3   # evicts "a"
+    assert c.get("a") is None
+    s = c.stats()
+    assert s["hits"] == 1
+    assert s["misses"] == 2
+    assert s["evictions"] == 1
+    assert s["entries"] == 2 and s["maxsize"] == 2
+    # engine-level: a streamed sweep re-invoke hits the LRU, not a compile
+    tr = small_trace()
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+               chunk_lanes=3)
+    before = engine_mod.aot_cache_stats()["memory"]
+    timings = {}
+    sweep_grid(cfg, tr, GRID, num_cycles=CYCLES, stream=True,
+               chunk_lanes=3, timings=timings)
+    after = engine_mod.aot_cache_stats()["memory"]
+    assert timings["compiles"] == 0
+    assert after["hits"] > before["hits"]
+    assert after["misses"] == before["misses"]
+
+
+def test_fingerprint_sensitivity():
+    """The sweep fingerprint moves with anything bit-relevant and is
+    stable across processes (no id()/hash() leakage)."""
+    tr = small_trace(n=20)
+    cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
+    sched = engine_mod._sched_i32(engine_mod.lane_schedule(cfg, None))
+
+    def fp(**kw):
+        args = dict(lane_cfgs=[cfg], scheds=[sched], trace_list=[tr],
+                    qs=[8], rs=[8], num_cycles=1000, cap=8, rcap=8,
+                    cycle_skip=True, chunk_lanes=2)
+        args.update(kw)
+        return sweep_stream.sweep_fingerprint(**args)
+
+    base = fp()
+    assert base == fp()
+    assert base != fp(num_cycles=1001)
+    assert base != fp(chunk_lanes=3)
+    assert base != fp(qs=[4])
+    assert base != fp(lane_cfgs=[dataclasses.replace(cfg, tCL=15)])
+    assert base != fp(trace_list=[small_trace(n=21)])
