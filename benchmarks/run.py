@@ -802,6 +802,81 @@ def bench_mesh_scaleout() -> None:
          f"steps_per_sec_dev0={rows[0]['steps_per_sec'] if rows else 0}")
 
 
+def bench_cxl_tier() -> None:
+    """ISSUE-8 acceptance: multi-tier memory (DRAM + CXL expander) as a
+    first-class topology axis.
+
+    Two checks, both in the JSON ``engine.cxl_tier`` section:
+
+      * the tiered-KV placement sweep
+        (``effective_bw.cxl_tier_study``): decode + prefill effective
+        bandwidth vs DRAM:CXL capacity split x interleave ratio, every
+        cell a lane of ONE compiled program on the tiered topology
+        (acceptance: ``compiles == 1`` for the full grid), each lane
+        bit-identical to the per-cycle reference ``simulate`` that
+        resolves the per-tier timing rows every cycle;
+      * the single-tier regression gate: a ``tiers=1`` config through the
+        event-horizon engine on BOTH Pallas FSM backends (split pallas
+        and fused) vs the per-cycle jnp reference — the refactor's
+        "single-tier pays nothing" claim, checked field-for-field.
+    """
+    import numpy as np
+    from repro.core import MemSimConfig, simulate, simulate_fast
+    from repro.perfmodel import effective_bw
+    from repro.traces import llm_workload
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+    timings: Dict = {}
+    t0 = time.time()
+    rows = effective_bw.cxl_tier_study(
+        capacity_splits=(1, 2), interleaves=(6, 8),
+        tokens=10 if smoke else 32, chunks=6 if smoke else 16,
+        timings=timings)
+    wall = time.time() - t0
+    lane_bits = {r["name"]: r["bit_identical"] for r in rows}
+    bit_ok = all(lane_bits.values())
+
+    # single-tier regression legs: the pre-tier path must be reproduced
+    # exactly by the tier-aware kernels when tiers == 1
+    tr = llm_workload.decode_serving_trace(tokens=32 if smoke else 64)
+    nc = int(np.asarray(tr.t).max()) + 3000
+    ref = simulate(MemSimConfig(), tr, num_cycles=nc)
+    single = {}
+    single_mismatches: List[str] = []
+    for backend in ("pallas", "fused"):
+        res = simulate_fast(MemSimConfig(fsm_backend=backend), tr,
+                            num_cycles=nc)
+        m = _bit_mismatches(ref, res, f"single_tier_{backend}")
+        single[f"single_tier_bit_identical_{backend}"] = not m
+        single_mismatches += m
+
+    dec = {(r["dram_cxl_split"], r["interleave_log2"]): r["efficiency"]
+           for r in rows if r["stream"] == "decode"}
+    pre = {(r["dram_cxl_split"], r["interleave_log2"]): r["efficiency"]
+           for r in rows if r["stream"] == "prefill"}
+    _ENGINE["cxl_tier"] = {
+        "topology": {"channels": 2, "tiers": 2, "cxl_channels": 1},
+        "capacity_splits": ["1:1", "3:1"],
+        "interleave_log2": [6, 8],
+        "lanes": len(rows),
+        "compiles": timings.get("compiles"),
+        "compile_s": round(timings.get("compile_s", 0.0), 3),
+        "run_s": round(timings.get("run_s", 0.0), 3),
+        "wall_s": round(wall, 2),
+        "bit_identical": bit_ok,
+        "lane_bit_identical": lane_bits,
+        **single,
+        "single_tier_mismatches": single_mismatches,
+        "cells": rows,
+    }
+    _row("engine_cxl_tier", wall * 1e6 / max(len(rows), 1),
+         f"lanes={len(rows)};compiles={timings.get('compiles')};"
+         f"bit_identical={bit_ok};"
+         f"single_tier_ok={not single_mismatches};"
+         f"decode_eff_3:1_il6={dec.get(('3:1', 6), float('nan')):.2f};"
+         f"prefill_eff_3:1_il6={pre.get(('3:1', 6), float('nan')):.2f}")
+
+
 def bench_param_grid() -> None:
     """Tentpole acceptance: a (2 timing values x 2 page policies x 2
     schedulers x 2 queue depths) grid of RuntimeParams lanes runs through
@@ -1123,30 +1198,62 @@ def _with_cache_stats(bench) -> None:
             _ENGINE[k]["aot_cache"] = delta
 
 
+#: Ordered bench registry: (section name, bench fn, wrap with AOT-cache
+#: stat capture). ``--only <section>`` selects from these names; the smoke
+#: profile (MEMSIM_SMOKE=1) is orthogonal and composes with any selection.
+_SECTIONS = [
+    ("table2", bench_table2, False),
+    ("fig6", bench_fig6, False),
+    ("fig7", bench_fig7, False),
+    ("fig8", bench_fig8, False),
+    ("fig9", bench_fig9, False),
+    ("engine", bench_engine, True),
+    ("event_skip", bench_event_skip, True),
+    ("fused", bench_fused, True),
+    ("stream", bench_stream, True),
+    ("dvfs", bench_dvfs, True),
+    ("cxl_tier", bench_cxl_tier, True),
+    ("param_grid", bench_param_grid, True),
+    ("topo_grid", bench_topo_grid, True),
+    ("mesh", bench_mesh_scaleout, True),
+    ("open_page", bench_open_page, False),
+    ("effective_bw", bench_effective_bw, False),
+    ("llm_grid", bench_llm_grid, True),
+    ("roofline", bench_roofline, False),
+]
+
+
 def main(argv=None) -> None:
+    names = [n for n, _, _ in _SECTIONS]
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--json", metavar="OUT", default=None,
                         help="write rows + engine wall-clock to this path")
+    parser.add_argument("--only", metavar="SECTION", action="append",
+                        default=None,
+                        help="run only the named section(s); repeatable and "
+                             "comma-separable; composes with MEMSIM_SMOKE=1. "
+                             f"Sections: {', '.join(names)}")
     args = parser.parse_args(argv)
 
+    if args.only:
+        sel = [s.strip() for a in args.only for s in a.split(",")
+               if s.strip()]
+        unknown = sorted(set(sel) - set(names))
+        if unknown:
+            parser.error(f"unknown section(s): {', '.join(unknown)} "
+                         f"(choose from: {', '.join(names)})")
+        selected = set(sel)
+    else:
+        selected = set(names)
+
     print("name,us_per_call,derived")
-    bench_table2()
-    bench_fig6()
-    bench_fig7()
-    bench_fig8()
-    bench_fig9()
-    _with_cache_stats(bench_engine)
-    _with_cache_stats(bench_event_skip)
-    _with_cache_stats(bench_fused)
-    _with_cache_stats(bench_stream)
-    _with_cache_stats(bench_dvfs)
-    _with_cache_stats(bench_param_grid)
-    _with_cache_stats(bench_topo_grid)
-    _with_cache_stats(bench_mesh_scaleout)
-    bench_open_page()
-    bench_effective_bw()
-    _with_cache_stats(bench_llm_grid)
-    bench_roofline()
+    for name, bench, wrap in _SECTIONS:
+        if name not in selected:
+            continue
+        if wrap:
+            _with_cache_stats(bench)
+        else:
+            bench()
 
     from repro.core.engine import aot_cache_stats
     _ENGINE["aot_cache_total"] = aot_cache_stats()
@@ -1158,11 +1265,14 @@ def main(argv=None) -> None:
             json.dump(payload, f, indent=2)
         print(f"\nwrote {args.json}")
 
-    print()
-    from benchmarks import table2, figures
-    table2.main()
-    print()
-    figures.main()
+    if "table2" in selected:
+        print()
+        from benchmarks import table2
+        table2.main()
+    if selected & {"fig6", "fig7", "fig8", "fig9"}:
+        print()
+        from benchmarks import figures
+        figures.main()
 
 
 if __name__ == "__main__":

@@ -95,7 +95,10 @@ class BankState(NamedTuple):
 
     @staticmethod
     def make(topo: Topology, rp: RuntimeParams) -> "BankState":
+        from repro.core.params import rp_for_banks
+
         b = topo.num_banks
+        rp = rp_for_banks(topo, rp)  # [T] leaves -> per-bank (T=1: identity)
         z = jnp.zeros((b,), jnp.int32)
         return BankState(
             st=z,

@@ -162,11 +162,31 @@ def wait_duration(rp: RuntimeParams, cmd: Array, is_write: Array) -> Array:
     return dur
 
 
-def decode_address(topo: Topology, addr: Array) -> Tuple[Array, Array, Array]:
+def tier_select(topo: Topology, addr: Array, rp: RuntimeParams) -> Array:
+    """Host-side placement decode: which tier owns ``addr`` (bool, True =
+    CXL). Addresses are split into ``2^tier_interleave_log2`` word blocks;
+    the CXL expander owns 1 of every ``2^tier_cxl_frac_log2`` blocks (the
+    all-ones residue), a DRAM:CXL capacity split of ``(2^k - 1):1``. Both
+    flags are traced tier-uniform data, so placement is a sweep axis."""
+    il = jnp.asarray(rp.tier_interleave_log2, jnp.int32).reshape(-1)[0]
+    k = jnp.asarray(rp.tier_cxl_frac_log2, jnp.int32).reshape(-1)[0]
+    frac_mask = (jnp.int32(1) << k) - 1
+    return ((addr >> il) & frac_mask) == frac_mask
+
+
+def decode_address(topo: Topology, addr: Array,
+                   rp: RuntimeParams = None) -> Tuple[Array, Array, Array]:
     """Address -> (flat_bank, flat_rank, row), paper §5.2 fixed mapping.
 
     Low bits: {channel? no — paper: remaining|rank|bankgroup|bank}. We extend
     with channel above rank when channels > 1.
+
+    Tiered topologies (``topo.tiers > 1``) remap the channel slice through
+    the placement decode: CXL-owned interleave blocks (:func:`tier_select`)
+    land on the ``cxl_channels`` channels above ``dram_channels``, the rest
+    spread over the DRAM channels — the channel *bits* of the address pick
+    the channel within the owning tier. Single-tier topologies never touch
+    ``rp`` and keep the exact pre-tier decode graph.
     """
     ba = addr & (topo.banks_per_group - 1)
     bg = (addr >> topo.bank_bits) & (topo.bankgroups - 1)
@@ -174,6 +194,11 @@ def decode_address(topo: Topology, addr: Array) -> Tuple[Array, Array, Array]:
     ch = (addr >> (topo.bank_bits + topo.bankgroup_bits + topo.rank_bits)) & (
         topo.channels - 1
     )
+    if topo.tiers > 1 and rp is not None:
+        is_cxl = tier_select(topo, addr, rp)
+        ch = jnp.where(is_cxl,
+                       topo.dram_channels + (ch & (topo.cxl_channels - 1)),
+                       ch & (topo.dram_channels - 1))
     flat_bank = ((ch * topo.ranks + rk) * topo.bankgroups + bg) * topo.banks_per_group + ba
     flat_rank = ch * topo.ranks + rk
     row = addr >> (topo.addr_low_bits + topo.column_bits)

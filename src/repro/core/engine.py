@@ -124,6 +124,8 @@ from repro.core.params import (
     S_SREF,
     Topology,
     as_schedule,
+    rp_for_banks,
+    tier_of_bank,
 )
 from repro.core.simulator import (
     SimResult,
@@ -214,9 +216,10 @@ def _next_event(topo: Topology, sched: ParamSchedule, trace: Trace,
             from repro.kernels.bank_fsm.ref import pack_state
 
             local = bank_event_bound(pack_state(bank), nxt, sched, True,
-                                     default_interpret())
+                                     default_interpret(), topo=topo)
         else:
-            local = cycles_until_actionable(rp, bank, nxt)
+            local = cycles_until_actionable(rp_for_banks(topo, rp), bank,
+                                            nxt)
         # a blocked bid becomes actionable the cycle its command turns legal
         per_bank = jnp.where(blocked_bid, legal_at - nxt, local).min()
 
@@ -262,8 +265,9 @@ def _apply_skip(topo: Topology, sched: ParamSchedule, state: SimState,
     ).astype(jnp.int32)
     bank = state.bank._replace(timer=timer.astype(jnp.int32),
                                idle_ctr=idle_ctr)
-    counters = power_lib.skip_counters(state.counters, st, delta,
-                                       topo.channels, sched.segment_at(nxt))
+    counters = power_lib.skip_counters(
+        state.counters, st, delta, topo.channels, sched.segment_at(nxt),
+        tier_idx=tier_of_bank(topo) if topo.tiers > 1 else None)
     return state._replace(bank=bank, counters=counters)
 
 
@@ -502,9 +506,11 @@ def _lane_executable(topo: Topology, n_max: int, num_segments: int,
                  is_write=sds((n_max,)), wdata=sds((n_max,)))
     scal = sds(())
     seg = sds((num_segments,))
+    # tiered topologies carry [S, T] value leaves (one params row per tier)
+    val = seg if topo.tiers == 1 else sds((num_segments, topo.tiers))
     sched_s = ParamSchedule(
         boundaries=seg,
-        values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
+        values=RuntimeParams(*([val] * len(RuntimeParams._fields))))
     t0 = time.perf_counter()
     if cycle_skip:
         compiled = _run_skip_jit.lower(topo, tr_s, scal, sched_s, scal,
@@ -1510,9 +1516,11 @@ def sweep_topologies(cfg: MemSimConfig,
                      wdata=sds((len(idxs), n_max_g)))
         scal, vec = sds(()), sds((len(idxs),))
         seg = sds((len(idxs), s_max))
+        val = (seg if topo.tiers == 1
+               else sds((len(idxs), s_max, topo.tiers)))
         sched_s = ParamSchedule(
             boundaries=seg,
-            values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
+            values=RuntimeParams(*([val] * len(RuntimeParams._fields))))
         if cycle_skip:
             lowered.append(_aot_lower(
                 _run_skip_batch_jit, (topo, tr_s, scal, sched_s, vec, vec),

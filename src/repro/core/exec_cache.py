@@ -50,7 +50,7 @@ _logger = logging.getLogger(__name__)
 #: their type signature does not capture (kernel bugfixes, new carried
 #: state, reordered outputs). Part of every cache key, and of the CI
 #: ``actions/cache`` key, so stale executables can never be served.
-ENGINE_ABI_VERSION = 1
+ENGINE_ABI_VERSION = 2  # 2: tier-major packed schedule rows ([T*S, NP])
 
 _SUFFIX = ".xc"
 

@@ -35,7 +35,7 @@ from jax import Array
 
 from repro.core import power as power_lib
 from repro.core.dram_model import TimingState
-from repro.core.params import Topology, as_schedule
+from repro.core.params import Topology, as_schedule, tier_of_bank
 from repro.core.queues import BankedFifo, Fifo
 from repro.core.simulator import (
     SimState,
@@ -61,16 +61,21 @@ def _pre(topo: Topology, sched, trace: Trace, state: SimState, cycle: Array,
     shapes; the batch path vmaps this and folds the leading lane axis)."""
     seg = sched.segment_at(cycle)
     # the kernel re-resolves every timing/policy param in-kernel; the only
-    # glue consumer is the FR-FCFS promote flag, so resolve that one leaf
-    # instead of gathering the full RuntimeParams through params_at
+    # glue consumers are the FR-FCFS promote flag and (tiered topologies)
+    # the placement decode flags, so resolve those leaves instead of
+    # gathering the full RuntimeParams through params_at
     rp = sched.values._replace(
-        sched_policy=jnp.asarray(sched.values.sched_policy, jnp.int32)[seg])
+        sched_policy=jnp.asarray(sched.values.sched_policy, jnp.int32)[seg],
+        tier_interleave_log2=jnp.asarray(
+            sched.values.tier_interleave_log2, jnp.int32)[seg],
+        tier_cxl_frac_log2=jnp.asarray(
+            sched.values.tier_cxl_frac_log2, jnp.int32)[seg])
     n = trace.num_requests
     b = topo.num_banks
     nxt = cycle + 1
 
     (req_q, bank_q, t_admit, t_dispatch, next_arrival, blocked_arrival,
-     blocked_dispatch) = _frontend_phases(topo, trace, state, cycle)
+     blocked_dispatch) = _frontend_phases(topo, trace, state, cycle, rp)
     bank_q = _promote_frfcfs(topo, rp, bank_q, state.bank.open_row)
 
     packed = pack_state(state.bank)
@@ -154,8 +159,9 @@ def _post(topo: Topology, n: int, state: SimState, cycle: Array, ctx,
     t_complete = state.t_complete.at[
         jnp.where(ack_valid, fitem_id, n)
     ].set(cycle, mode="drop")
-    counters = power_lib.update_counters(state.counters, issued_cmds,
-                                         state.bank.st, seg)
+    counters = power_lib.update_counters(
+        state.counters, issued_cmds, state.bank.st, seg,
+        tier_idx=tier_of_bank(topo) if topo.tiers > 1 else None)
 
     new_state = SimState(
         next_arrival=next_arrival,
@@ -213,7 +219,7 @@ def fused_cycle_step_batch(topo: Topology, scheds, traces, states,
 
     bank_rows, resp_buf, rp_mat, bounds, scal = ops
     lanes = bank_rows.shape[0]
-    num_segments = rp_mat.shape[1]       # rp_mat [L, S, NP]
+    num_segments = bounds.shape[1]       # bounds [L, S, 1]; rp [L, T*S, NP]
     folded = (
         # [L, 23, B] -> [23, L*B] lane-major
         jnp.moveaxis(bank_rows, 0, 1).reshape(bank_rows.shape[1], -1),

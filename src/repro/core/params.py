@@ -77,6 +77,17 @@ class Topology:
     banks_per_group: int = 4
     column_bits: int = 6          # low "remaining" bits that index within a row
 
+    # ---- memory tiers (DRAM + CXL expander) ------------------------------
+    # A tier is a partition of the channel axis: the first ``dram_channels``
+    # channels are tier 0 (direct DRAM), the last ``cxl_channels`` are
+    # tier 1 (CXL-attached expander). Each tier carries its own
+    # RuntimeParams row (latency adders, narrower link, independent
+    # refresh/SREF) — see ``tiered_params``. ``tiers == 1`` is the
+    # homogeneous single-pool configuration and compiles to exactly the
+    # pre-tier program.
+    tiers: int = 1
+    cxl_channels: int = 0
+
     # ---- queue capacities (static buffer shapes; the *runtime* depth is a
     # traced limit — see repro.core.queues) --------------------------------
     queue_size: int = 128         # global reqQueue depth == per-bank queue depth
@@ -136,6 +147,22 @@ class Topology:
         return _log2(self.channels)
 
     @property
+    def dram_channels(self) -> int:
+        """Channels in tier 0 (direct DRAM)."""
+        return self.channels - self.cxl_channels
+
+    @property
+    def tier_split_bank(self) -> int:
+        """Index of the first tier-1 (CXL) flattened bank; equals
+        ``num_banks`` when there is no second tier."""
+        return self.dram_channels * self.banks_per_channel
+
+    @property
+    def tier_split_rank(self) -> int:
+        """Index of the first tier-1 (CXL) flattened rank."""
+        return self.dram_channels * self.ranks
+
+    @property
     def addr_low_bits(self) -> int:
         """Bits consumed by {channel, rank, bankgroup, bank}."""
         return self.bank_bits + self.bankgroup_bits + self.rank_bits + self.channel_bits
@@ -157,6 +184,20 @@ class Topology:
         if self.resp_queue_size < 1:
             raise ValueError(
                 f"resp_queue_size={self.resp_queue_size} must be >= 1")
+        if self.tiers not in (1, 2):
+            raise ValueError(f"tiers={self.tiers} must be 1 or 2 (DRAM, "
+                             "or DRAM + CXL expander)")
+        if self.tiers == 1 and self.cxl_channels != 0:
+            raise ValueError(
+                f"cxl_channels={self.cxl_channels} requires tiers=2")
+        if self.tiers == 2:
+            for f, v in (("cxl_channels", self.cxl_channels),
+                         ("dram_channels", self.dram_channels)):
+                if v <= 0 or (v & (v - 1)) != 0:
+                    raise ValueError(
+                        f"{f}={v} must be a power of two >= 1 when tiers=2 "
+                        f"(channels={self.channels} is partitioned "
+                        f"DRAM|CXL)")
         return self
 
 
@@ -185,6 +226,15 @@ class RuntimeParams(NamedTuple):
     sref_idle_cycles: int = 1000  # idle cycles before SREF entry
     page_policy: int = PAGE_CLOSED
     sched_policy: int = SCHED_FCFS
+    # ---- host-side tier placement (tiers=2 topologies; inert otherwise) --
+    # Interleave granularity: addresses are split into 2^tier_interleave_log2
+    # word blocks; block index b goes to CXL iff
+    # ``b % 2^tier_cxl_frac_log2 == 2^tier_cxl_frac_log2 - 1`` — CXL owns 1
+    # of every 2^k blocks, i.e. a DRAM:CXL capacity split of (2^k - 1):1.
+    # Both are traced data, so placement policy is a sweep/lane axis. They
+    # must be tier-uniform (the front-end resolves them as scalars).
+    tier_interleave_log2: int = 6
+    tier_cxl_frac_log2: int = 1
 
     @classmethod
     def from_config(cls, cfg: "MemSimConfig") -> "RuntimeParams":
@@ -243,6 +293,67 @@ NUM_RUNTIME_PARAMS = len(RuntimeParams._fields)
 #: field -> row index of the packed kernel-ABI vector
 RP_INDEX = {name: i for i, name in enumerate(RuntimeParams._fields)}
 
+#: fields that must be equal across tiers: the front-end/glue resolves them
+#: as machine-global scalars (placement decode, queue promotion policy)
+TIER_UNIFORM_FIELDS = ("page_policy", "sched_policy",
+                       "tier_interleave_log2", "tier_cxl_frac_log2")
+
+
+def tiered_params(*tier_rps) -> "RuntimeParams":
+    """Stack one :class:`RuntimeParams` point per memory tier (DRAM first,
+    then the CXL expander) into the tier-stacked form the engines consume
+    for ``tiers > 1`` topologies: every leaf becomes int32[T].
+
+    Fields in :data:`TIER_UNIFORM_FIELDS` must agree across tiers — they
+    are resolved as machine-global scalars by the front-end (placement
+    decode) and queue glue (FR-FCFS promotion), not per bank.
+    """
+    if len(tier_rps) < 2:
+        raise ValueError("tiered_params needs one RuntimeParams per tier "
+                         f"(>= 2), got {len(tier_rps)}")
+    for f in TIER_UNIFORM_FIELDS:
+        vals = []
+        for rp in tier_rps:
+            try:
+                vals.append(int(getattr(rp, f)))
+            except (TypeError, ValueError):  # traced leaf: caller owns it
+                vals = None
+                break
+        if vals is not None and len(set(vals)) > 1:
+            raise ValueError(
+                f"{f} must be tier-uniform (resolved as a machine-global "
+                f"scalar), got {vals} across tiers")
+    return RuntimeParams.stack(tier_rps)
+
+
+def tier_of_bank(topo: "Topology"):
+    """Static int32[B] tier index of every flattened bank (numpy)."""
+    import numpy as np
+
+    ch = np.arange(topo.num_banks, dtype=np.int32) // topo.banks_per_channel
+    return (ch >= topo.dram_channels).astype(np.int32)
+
+
+def rp_for_banks(topo: "Topology", rp: "RuntimeParams") -> "RuntimeParams":
+    """Resolve a (possibly tier-stacked) parameter point to per-bank form.
+
+    For ``topo.tiers == 1`` this is the identity — the compiled graph is
+    untouched. For tiered topologies every [T] leaf is gathered through the
+    static bank->tier map to [B]; scalar leaves (a tier-uniform point) pass
+    through unchanged and broadcast as before.
+    """
+    if topo.tiers == 1:
+        return rp
+    import jax.numpy as jnp
+
+    idx = jnp.asarray(tier_of_bank(topo))
+
+    def leaf(v):
+        a = jnp.asarray(v, jnp.int32)
+        return a if a.ndim == 0 else a[idx]
+
+    return RuntimeParams(*[leaf(v) for v in rp])
+
 #: sentinel boundary for "no further segment" / schedule padding (plain int
 #: on purpose — a module-level jnp constant materialized during tracing
 #: would leak that trace's context into later traces). Matches the engine's
@@ -293,6 +404,22 @@ class ParamSchedule(NamedTuple):
         import numpy as np
 
         return int(np.shape(self.boundaries)[-1])
+
+    @property
+    def num_tiers(self) -> int:
+        """Memory-tier count T — an array *shape*, static per compiled
+        program. A leaf is tier-stacked iff it carries one trailing axis
+        beyond the boundaries' segment axis (``[.., S, T]`` vs ``[.., S]``);
+        an untier-ed schedule reports 1."""
+        import numpy as np
+
+        bnd_nd = len(np.shape(self.boundaries))
+        t = 1
+        for v in self.values:
+            shape = np.shape(v)
+            if len(shape) == bnd_nd + 1:
+                t = max(t, int(shape[-1]))
+        return t
 
     # ---- construction ----------------------------------------------------
     @classmethod
@@ -356,25 +483,45 @@ class ParamSchedule(NamedTuple):
     # ---- kernel ABI ------------------------------------------------------
     def pack(self):
         """Flatten to the packed kernel ABI: ``(boundaries int32[S, 1],
-        values int32[S, NP])`` — the schedule-aware generalization of
+        values int32[T*S, NP])`` — the schedule-aware generalization of
         :meth:`RuntimeParams.pack` the Pallas bank-FSM kernels consume
-        (they resolve the active segment in-kernel)."""
+        (they resolve the active segment in-kernel).
+
+        The values matrix is tier-major: row ``t*S + s`` is tier ``t``'s
+        segment ``s``. A single-tier schedule (the historical case) is the
+        ``T == 1`` degenerate layout — identical bytes to the pre-tier ABI,
+        and the kernels' single-tier path reads it with zero extra work."""
         import jax.numpy as jnp
 
         s = self.num_segments
-        vals = jnp.stack(
-            [jnp.asarray(v, jnp.int32).reshape(s) for v in self.values],
-            axis=1)
+        t = self.num_tiers
+        if t == 1:
+            vals = jnp.stack(
+                [jnp.asarray(v, jnp.int32).reshape(s) for v in self.values],
+                axis=1)
+        else:
+            # broadcast every leaf to [S, T], transpose tier-major
+            vals = jnp.stack(
+                [jnp.broadcast_to(
+                    jnp.asarray(v, jnp.int32).reshape(
+                        (s, -1)), (s, t)).T.reshape(t * s)
+                 for v in self.values],
+                axis=1)
         return jnp.asarray(self.boundaries, jnp.int32).reshape(s, 1), vals
 
     @classmethod
     def unpack(cls, bounds, vals) -> "ParamSchedule":
         """Inverse of :meth:`pack` (``bounds`` [S, 1] or [S], ``vals``
-        [S, NP])."""
-        s = vals.shape[0]
+        [T*S, NP] tier-major)."""
+        s = bounds.reshape(-1).shape[0]
+        t = vals.shape[0] // s
+        if t == 1:
+            leaves = [vals[:, i] for i in range(NUM_RUNTIME_PARAMS)]
+        else:
+            cube = vals.reshape(t, s, NUM_RUNTIME_PARAMS)
+            leaves = [cube[:, :, i].T for i in range(NUM_RUNTIME_PARAMS)]
         return cls(boundaries=bounds.reshape(s),
-                   values=RuntimeParams(
-                       *[vals[:, i] for i in range(NUM_RUNTIME_PARAMS)]))
+                   values=RuntimeParams(*leaves))
 
     # ---- batching --------------------------------------------------------
     def pad_to(self, s: int) -> "ParamSchedule":
@@ -392,12 +539,17 @@ class ParamSchedule(NamedTuple):
         b = jnp.concatenate([
             jnp.asarray(self.boundaries, jnp.int32).reshape(cur),
             jnp.full((extra,), SCHEDULE_INF, jnp.int32)])
-        vals = RuntimeParams(*[
-            jnp.concatenate([
-                jnp.asarray(v, jnp.int32).reshape(cur),
-                jnp.broadcast_to(jnp.asarray(v, jnp.int32).reshape(cur)[-1],
-                                 (extra,))])
-            for v in self.values])
+
+        def pad_leaf(v):
+            a = jnp.asarray(v, jnp.int32)
+            if a.ndim == 2:        # tier-stacked [S, T]
+                return jnp.concatenate(
+                    [a, jnp.broadcast_to(a[-1], (extra, a.shape[1]))])
+            a = a.reshape(cur)
+            return jnp.concatenate(
+                [a, jnp.broadcast_to(a[-1], (extra,))])
+
+        vals = RuntimeParams(*[pad_leaf(v) for v in self.values])
         return ParamSchedule(boundaries=b, values=vals)
 
     @classmethod
@@ -459,18 +611,41 @@ class ParamSchedule(NamedTuple):
                 if b <= a:
                     bad.append("schedule boundaries must be sorted and "
                                f"unique (strictly increasing): {a} then {b}")
+        t_count = self.num_tiers
         for s in range(n_real):
-            vals = {}
-            for f in RuntimeParams._fields:
+            for ti in range(t_count):
+                vals = {}
+                for f in RuntimeParams._fields:
+                    try:
+                        arr = np.asarray(getattr(self.values, f))
+                        if arr.ndim >= 2:     # tier-stacked [S, T]
+                            vals[f] = int(arr[s, min(ti, arr.shape[1] - 1)])
+                        else:                 # tier-uniform [S]
+                            vals[f] = int(arr.reshape(-1)[s])
+                    except Exception:  # traced leaf
+                        vals[f] = None
+                # a one-segment single-tier (constant) schedule keeps the
+                # exact config-construction error text; otherwise name the
+                # segment/tier
+                prefix = ""
+                if n_real > 1:
+                    prefix = f"schedule segment {s}: "
+                if t_count > 1:
+                    prefix += f"tier {ti}: "
+                bad.extend(prefix + m
+                           for m in runtime_constraint_violations(vals))
+            for f in TIER_UNIFORM_FIELDS:
                 try:
-                    vals[f] = int(np.asarray(
-                        getattr(self.values, f)).reshape(-1)[s])
-                except Exception:  # traced leaf
-                    vals[f] = None
-            # a one-segment (constant) schedule keeps the exact config-
-            # construction error text; multi-segment names the segment
-            bad.extend(m if n_real == 1 else f"schedule segment {s}: {m}"
-                       for m in runtime_constraint_violations(vals))
+                    arr = np.asarray(getattr(self.values, f))
+                except Exception:
+                    continue
+                if arr.ndim >= 2 and len(set(
+                        int(x) for x in arr[s].reshape(-1))) > 1:
+                    bad.append(
+                        f"{f} must be tier-uniform (resolved as a "
+                        f"machine-global scalar), got "
+                        f"{[int(x) for x in arr[s].reshape(-1)]} across "
+                        f"tiers")
         if bad:
             raise ValueError("; ".join(bad))
         return self
@@ -510,8 +685,9 @@ def as_schedule(params) -> "ParamSchedule":
 #: value would make a WAIT state instantaneous (or run its timer negative)
 #: and break every closed-form skip bound in the engine.
 POSITIVE_RUNTIME_FIELDS = tuple(
-    f for f in RuntimeParams._fields if f not in ("page_policy",
-                                                  "sched_policy"))
+    f for f in RuntimeParams._fields
+    if f not in ("page_policy", "sched_policy",
+                 "tier_interleave_log2", "tier_cxl_frac_log2"))
 
 
 def runtime_constraint_violations(vals) -> list:
@@ -551,6 +727,16 @@ def runtime_constraint_violations(vals) -> list:
         out.append(
             f"sched_policy flag {vals['sched_policy']} not in "
             f"{{{SCHED_FCFS} (fcfs), {SCHED_FRFCFS} (frfcfs)}}")
+    if known("tier_interleave_log2") and not (
+            0 <= vals["tier_interleave_log2"] <= 24):
+        out.append(
+            f"tier_interleave_log2={vals['tier_interleave_log2']} must be "
+            f"in [0, 24] (word-block interleave granularity)")
+    if known("tier_cxl_frac_log2") and not (
+            1 <= vals["tier_cxl_frac_log2"] <= 20):
+        out.append(
+            f"tier_cxl_frac_log2={vals['tier_cxl_frac_log2']} must be in "
+            f"[1, 20] (CXL owns 1 of every 2^k interleave blocks)")
     return out
 
 
@@ -595,6 +781,10 @@ class MemSimConfig(Topology):
     # queue, with a same-address dependency guard. Meaningful with
     # page_policy="open".
     sched_policy: str = "fcfs"
+
+    # ---- tier placement (tiers=2 topologies; inert on a single tier) -----
+    tier_interleave_log2: int = 6
+    tier_cxl_frac_log2: int = 1
 
     def __post_init__(self):
         super().__post_init__()

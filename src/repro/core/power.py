@@ -37,7 +37,8 @@ class PowerConfig:
     clock_ghz: float = 1.2
 
 
-def make_counters(num_banks: int, num_segments: int = 1) -> Dict[str, Array]:
+def make_counters(num_banks: int, num_segments: int = 1,
+                  num_tiers: int = 1) -> Dict[str, Array]:
     return {
         "cmd_counts": jnp.zeros((NUM_CMDS,), jnp.int32),
         "sref_cycles": jnp.zeros((), jnp.int32),
@@ -47,7 +48,35 @@ def make_counters(num_banks: int, num_segments: int = 1) -> Dict[str, Array]:
         # the DVFS study's time-at-operating-point attribution. A constant
         # run is the degenerate one-segment schedule.
         "seg_cycles": jnp.zeros((num_segments,), jnp.int32),
+        # per-memory-tier split of the same bank-cycle buckets (DRAM vs
+        # CXL residency attribution). A single-tier run carries the
+        # degenerate T=1 rows — identical totals to the scalar buckets.
+        "tier_active_cycles": jnp.zeros((num_tiers,), jnp.int32),
+        "tier_idle_cycles": jnp.zeros((num_tiers,), jnp.int32),
+        "tier_sref_cycles": jnp.zeros((num_tiers,), jnp.int32),
     }
+
+
+def _tier_state_counts(counters: Dict[str, Array], st: Array,
+                       tier_idx) -> tuple:
+    """Per-tier (sref, idle, active) bank counts for the current states.
+    ``tier_idx`` is the static int32[B] bank->tier map (None for T=1)."""
+    from repro.core.params import S_IDLE, S_SREF
+
+    t = counters["tier_sref_cycles"].shape[0]
+    sref_m = (st == S_SREF).astype(jnp.int32)
+    idle_m = (st == S_IDLE).astype(jnp.int32)
+    if t == 1 or tier_idx is None:
+        sref = sref_m.sum().reshape(1)
+        idle = idle_m.sum().reshape(1)
+        per_tier_banks = jnp.full((1,), st.shape[0], jnp.int32)
+    else:
+        idx = jnp.asarray(tier_idx)
+        zeros = jnp.zeros((t,), jnp.int32)
+        sref = zeros.at[idx].add(sref_m)
+        idle = zeros.at[idx].add(idle_m)
+        per_tier_banks = zeros.at[idx].add(1)
+    return sref, idle, per_tier_banks - sref - idle
 
 
 def update_counters(
@@ -55,6 +84,7 @@ def update_counters(
     issued_cmd: Array,     # int32[C]: command granted per channel (CMD_NOP if none)
     st: Array,             # int32[B] bank states
     seg: Array = 0,        # scalar int32: active ParamSchedule segment
+    tier_idx=None,         # static int32[B] bank->tier map (None: one tier)
 ) -> Dict[str, Array]:
     from repro.core.params import S_IDLE, S_SREF
 
@@ -63,12 +93,16 @@ def update_counters(
     sref = (st == S_SREF).sum().astype(jnp.int32)
     idle = (st == S_IDLE).sum().astype(jnp.int32)
     b = st.shape[0]
+    t_sref, t_idle, t_active = _tier_state_counts(counters, st, tier_idx)
     return {
         "cmd_counts": counters["cmd_counts"] + one_hot,
         "sref_cycles": counters["sref_cycles"] + sref,
         "idle_cycles": counters["idle_cycles"] + idle,
         "active_cycles": counters["active_cycles"] + (b - sref - idle),
         "seg_cycles": counters["seg_cycles"].at[seg].add(1),
+        "tier_sref_cycles": counters["tier_sref_cycles"] + t_sref,
+        "tier_idle_cycles": counters["tier_idle_cycles"] + t_idle,
+        "tier_active_cycles": counters["tier_active_cycles"] + t_active,
     }
 
 
@@ -78,6 +112,7 @@ def skip_counters(
     delta: Array,          # scalar int32 number of inert cycles skipped
     channels: int,
     seg: Array = 0,        # scalar int32: segment every skipped cycle is in
+    tier_idx=None,         # static int32[B] bank->tier map (None: one tier)
 ) -> Dict[str, Array]:
     """Delta-aware twin of :func:`update_counters`: exactly ``delta``
     applications of the per-cycle update under an all-NOP issue slate and
@@ -102,6 +137,7 @@ def skip_counters(
     idle = (st == S_IDLE).sum().astype(jnp.int32)
     b = st.shape[0]
     delta = jnp.asarray(delta, jnp.int32)
+    t_sref, t_idle, t_active = _tier_state_counts(counters, st, tier_idx)
     return {
         # each skipped cycle issues CMD_NOP on every channel (junk slot,
         # but bit-identical to the per-cycle engine's one_hot accumulation)
@@ -110,6 +146,10 @@ def skip_counters(
         "idle_cycles": counters["idle_cycles"] + delta * idle,
         "active_cycles": counters["active_cycles"] + delta * (b - sref - idle),
         "seg_cycles": counters["seg_cycles"].at[seg].add(delta),
+        "tier_sref_cycles": counters["tier_sref_cycles"] + delta * t_sref,
+        "tier_idle_cycles": counters["tier_idle_cycles"] + delta * t_idle,
+        "tier_active_cycles": counters["tier_active_cycles"]
+        + delta * t_active,
     }
 
 

@@ -45,6 +45,8 @@ from repro.core.params import (
     S_RESP_PEND,
     Topology,
     as_schedule,
+    rp_for_banks,
+    tier_of_bank,
 )
 from repro.core.queues import BankedFifo, Fifo, rr_arbiter, rr_arbiter_grouped
 
@@ -173,7 +175,8 @@ def init_state(topo: Topology, sched, num_requests: int,
         t_complete=neg,
         rdata=jnp.zeros((num_requests,), jnp.int32),
         counters=power_lib.make_counters(topo.num_banks,
-                                         sched.num_segments),
+                                         sched.num_segments,
+                                         topo.tiers),
         blocked_arrival=jnp.int32(0),
         blocked_dispatch=jnp.int32(0),
     )
@@ -199,7 +202,7 @@ def issue_eligibility(topo: Topology, sched, timing: TimingState,
     definition is what makes skipping through blocked ISSUE states provably
     exact.
     """
-    rp = as_schedule(sched).params_at(cycle)
+    rp = rp_for_banks(topo, as_schedule(sched).params_at(cycle))
     bids, cmds = compute_bids(bank.st, bank.cur_write)
     rank_of_bank = (jnp.arange(topo.num_banks, dtype=jnp.int32)
                     // topo.banks_per_rank)
@@ -209,12 +212,15 @@ def issue_eligibility(topo: Topology, sched, timing: TimingState,
 
 
 def _frontend_phases(topo: Topology, trace: Trace, state: SimState,
-                     cycle: Array):
+                     cycle: Array, rp: RuntimeParams = None):
     """Phases 1-2 of the clock edge: trace admission into the global
     reqQueue and dispatch of its head into the target bank queue. Shared
     verbatim between :func:`cycle_step` and the fused hot-loop step
-    (:mod:`repro.core.fused_step`). Returns ``(req_q, bank_q, t_admit,
-    t_dispatch, next_arrival, blocked_arrival, blocked_dispatch)``."""
+    (:mod:`repro.core.fused_step`). ``rp`` carries the cycle's resolved
+    parameter point for the tier-placement decode on tiered topologies
+    (unused — and the graph untouched — on a single tier). Returns
+    ``(req_q, bank_q, t_admit, t_dispatch, next_arrival, blocked_arrival,
+    blocked_dispatch)``."""
     n = trace.num_requests
 
     # ---- phase 1: front-end arrival into reqQueue (1 request / cycle) -----
@@ -233,7 +239,7 @@ def _frontend_phases(topo: Topology, trace: Trace, state: SimState,
 
     # ---- phase 2: dispatch reqQueue head -> bank scheduler queue -----------
     head = req_q.peek()
-    tgt_bank, _, _ = decode_address(topo, head[0])
+    tgt_bank, _, _ = decode_address(topo, head[0], rp)
     have_req = ~req_q.empty()
     tgt_full = state.bank_q.full()[tgt_bank]
     do_dispatch = have_req & ~tgt_full
@@ -262,8 +268,11 @@ def _promote_frfcfs(topo: Topology, rp, bank_q: BankedFifo,
         addrs = jnp.take_along_axis(bank_q.buf[..., 0], offs, axis=1)
         return bank_q.promote_rowhit(open_row, row_of(topo, addrs)).buf
 
+    pol = jnp.asarray(rp.sched_policy)
+    if topo.tiers > 1:
+        pol = pol.reshape(-1)[0]  # tier-uniform by construction -> scalar
     return bank_q._replace(buf=jax.lax.cond(
-        jnp.asarray(rp.sched_policy) == SCHED_FRFCFS,
+        pol == SCHED_FRFCFS,
         _promoted_buf, lambda: bank_q.buf))
 
 
@@ -309,12 +318,13 @@ def cycle_step(topo: Topology, sched, trace: Trace,
 
     sched = as_schedule(sched)
     rp = sched.params_at(cycle)
+    rp_b = rp_for_banks(topo, rp)  # per-bank leaves on tiered topologies
     seg = sched.segment_at(cycle)
     n = trace.num_requests
     b = topo.num_banks
 
     (req_q, bank_q, t_admit, t_dispatch, next_arrival, blocked_arrival,
-     blocked_dispatch) = _frontend_phases(topo, trace, state, cycle)
+     blocked_dispatch) = _frontend_phases(topo, trace, state, cycle, rp)
 
     # ---- phase 3: command bids, timing legality, per-channel RR grant ------
     eligible, cmds, _ = issue_eligibility(topo, sched, state.timing,
@@ -372,7 +382,7 @@ def cycle_step(topo: Topology, sched, trace: Trace,
         )
     else:
         new_bank, outs = fsm_update(
-            topo, rp, state.bank, grant_mask, resp_accept, queue_nonempty,
+            topo, rp_b, state.bank, grant_mask, resp_accept, queue_nonempty,
             pop_items, cycle
         )
     bank_q, popped = bank_q.pop_mask(outs.want_pop)
@@ -395,8 +405,9 @@ def cycle_step(topo: Topology, sched, trace: Trace,
     ].set(cycle.astype(jnp.int32), mode="drop")
 
     # ---- phase 8: counters ---------------------------------------------------
-    counters = power_lib.update_counters(state.counters, issued_cmds,
-                                         state.bank.st, seg)
+    counters = power_lib.update_counters(
+        state.counters, issued_cmds, state.bank.st, seg,
+        tier_idx=tier_of_bank(topo) if topo.tiers > 1 else None)
 
     return SimState(
         next_arrival=next_arrival,

@@ -93,16 +93,18 @@ def lane_footprint_bytes(topo, n_max: int, s_max: int) -> int:
     padded schedule, and the depth-limit scalars. Everything the engine
     carries is int32."""
     seg = jax.ShapeDtypeStruct((s_max,), jnp.int32)
+    val = (seg if topo.tiers == 1
+           else jax.ShapeDtypeStruct((s_max, topo.tiers), jnp.int32))
     sched = ParamSchedule(
         boundaries=seg,
-        values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
+        values=RuntimeParams(*([val] * len(RuntimeParams._fields))))
     state = jax.eval_shape(
         lambda s: init_state(topo, s, n_max, jnp.int32(1), jnp.int32(1)),
         sched)
     state_b = sum(4 * int(np.prod(leaf.shape))
                   for leaf in jax.tree_util.tree_leaves(state))
     trace_b = 4 * 4 * n_max                       # t/addr/is_write/wdata
-    sched_b = 4 * (1 + len(RuntimeParams._fields)) * s_max
+    sched_b = 4 * (1 + len(RuntimeParams._fields) * topo.tiers) * s_max
     return state_b + trace_b + sched_b + 8        # + queue/resp limits
 
 
@@ -110,14 +112,25 @@ def _resolve_chunk_lanes(chunk_lanes: Optional[int],
                          memory_budget_bytes: Optional[int],
                          lane_bytes: int, n_points: int) -> int:
     """An explicit ``chunk_lanes`` wins; else a budget covers two chunks
-    (executing + prefetched); else :data:`DEFAULT_CHUNK_LANES`. Always at
-    least one lane — a budget below one lane's footprint still streams,
-    one lane at a time (the alternative is refusing to run at all)."""
+    (executing + prefetched), floored at one lane per chunk; else
+    :data:`DEFAULT_CHUNK_LANES`. A budget below even a single lane's
+    footprint is a configuration error, not a streamable request — the
+    sweep would immediately exceed it — so it raises instead of silently
+    running over budget."""
     if chunk_lanes is not None:
         if chunk_lanes < 1:
             raise ValueError(f"chunk_lanes must be >= 1, got {chunk_lanes}")
         return min(chunk_lanes, max(1, n_points))
     if memory_budget_bytes is not None:
+        if memory_budget_bytes < lane_bytes:
+            raise ValueError(
+                f"memory_budget_bytes={memory_budget_bytes} is below a "
+                f"single lane's footprint of {lane_bytes} bytes for this "
+                f"(topology, trace, schedule) shape; even a one-lane chunk "
+                f"cannot fit. Raise the budget to at least {lane_bytes} "
+                f"bytes (>= {2 * lane_bytes} keeps the executing + "
+                f"prefetched chunk pair resident) or pass chunk_lanes "
+                f"explicitly to override the budget.")
         derived = memory_budget_bytes // (2 * lane_bytes)
         return max(1, min(int(derived), MAX_CHUNK_LANES, max(1, n_points)))
     return min(DEFAULT_CHUNK_LANES, max(1, n_points))
@@ -327,10 +340,11 @@ def stream_sweep(cfg: MemSimConfig,
                      is_write=sds((L, n_max)), wdata=sds((L, n_max)))
         scal, vec = sds(()), sds((L,))
         seg = sds((L, s_max))
+        topo = topologies[gi]
+        val = seg if topo.tiers == 1 else sds((L, s_max, topo.tiers))
         sched_s = ParamSchedule(
             boundaries=seg,
-            values=RuntimeParams(*([seg] * len(RuntimeParams._fields))))
-        topo = topologies[gi]
+            values=RuntimeParams(*([val] * len(RuntimeParams._fields))))
         if cycle_skip:
             lowered[gi] = _eng._aot_lower(
                 _eng._run_skip_batch_jit,

@@ -23,7 +23,11 @@ from jax.experimental import pallas as pl
 from repro.core.params import MemSimConfig
 
 
-def _kernel(cfg: MemSimConfig, addr_ref, bank_ref, rank_ref, row_ref, hist_ref):
+def _kernel(cfg: MemSimConfig, tiered: bool, addr_ref, *refs):
+    if tiered:
+        tier_ref, bank_ref, rank_ref, row_ref, hist_ref = refs
+    else:
+        bank_ref, rank_ref, row_ref, hist_ref = refs
     addr = addr_ref[...]  # (1, block_n) int32
     ba = addr & (cfg.banks_per_group - 1)
     bg = (addr >> cfg.bank_bits) & (cfg.bankgroups - 1)
@@ -31,6 +35,17 @@ def _kernel(cfg: MemSimConfig, addr_ref, bank_ref, rank_ref, row_ref, hist_ref):
     ch = (addr >> (cfg.bank_bits + cfg.bankgroup_bits + cfg.rank_bits)) & (
         cfg.channels - 1
     )
+    if tiered:
+        # placement decode (repro.core.dram_model.tier_select as traced
+        # data): CXL owns the all-ones interleave-block residue; the
+        # address's channel bits pick the channel within the owning tier
+        il = tier_ref[0, 0]
+        k = tier_ref[0, 1]
+        frac_mask = (jnp.int32(1) << k) - 1
+        is_cxl = ((addr >> il) & frac_mask) == frac_mask
+        ch = jnp.where(is_cxl,
+                       cfg.dram_channels + (ch & (cfg.cxl_channels - 1)),
+                       ch & (cfg.dram_channels - 1))
     bank = ((ch * cfg.ranks + rk) * cfg.bankgroups + bg) * cfg.banks_per_group + ba
     rank = ch * cfg.ranks + rk
     row = addr >> (cfg.addr_low_bits + cfg.column_bits)
@@ -50,16 +65,22 @@ def _kernel(cfg: MemSimConfig, addr_ref, bank_ref, rank_ref, row_ref, hist_ref):
 
 
 def addr_map_pallas(cfg: MemSimConfig, addr, block_n: int = 1024,
-                    interpret: bool = True):
+                    interpret: bool = True, tier_flags=None):
     n = addr.shape[0]
     assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
     addr2d = addr.reshape(1, n)
     grid = (n // block_n,)
-    kernel = functools.partial(_kernel, cfg)
+    tiered = tier_flags is not None
+    kernel = functools.partial(_kernel, cfg, tiered)
+    in_specs = [pl.BlockSpec((1, block_n), lambda i: (0, i))]
+    operands = [addr2d]
+    if tiered:
+        in_specs.append(pl.BlockSpec((1, 2), lambda i: (0, 0)))
+        operands.append(jnp.asarray(tier_flags, jnp.int32).reshape(1, 2))
     bank, rank, row, hist = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i))],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_n), lambda i: (0, i)),
             pl.BlockSpec((1, block_n), lambda i: (0, i)),
@@ -73,5 +94,5 @@ def addr_map_pallas(cfg: MemSimConfig, addr, block_n: int = 1024,
             jax.ShapeDtypeStruct((1, cfg.num_banks), jnp.int32),
         ],
         interpret=interpret,
-    )(addr2d)
+    )(*operands)
     return bank[0], rank[0], row[0], hist[0]

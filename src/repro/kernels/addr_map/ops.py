@@ -20,10 +20,26 @@ def addr_map(
     addr: Array,
     use_pallas: bool = False,
     interpret: bool = True,
+    tier_flags: Array = None,
 ) -> Tuple[Array, Array, Array, Array]:
-    """Decode a batch of addresses -> (bank, rank, row, per-bank histogram)."""
+    """Decode a batch of addresses -> (bank, rank, row, per-bank histogram).
+
+    Tiered configs (``cfg.tiers > 1``) route through the placement decode:
+    ``tier_flags`` int32[2] = (tier_interleave_log2, tier_cxl_frac_log2)
+    is traced data (placement sweeps share one compiled decode); omitted,
+    it lifts from ``cfg`` (which must then be the MemSimConfig facade).
+    Single-tier configs keep the exact pre-tier decode and never read it.
+    """
+    if cfg.tiers > 1 and tier_flags is None:
+        if not isinstance(cfg, MemSimConfig):
+            raise ValueError(
+                "tier_flags required when cfg is a bare tiered Topology")
+        tier_flags = jnp.asarray(
+            [cfg.tier_interleave_log2, cfg.tier_cxl_frac_log2], jnp.int32)
+    if cfg.tiers == 1:
+        tier_flags = None     # never reaches the decode; keep the ABI fixed
     if not use_pallas:
-        return addr_map_ref(cfg, addr)
+        return addr_map_ref(cfg, addr, tier_flags)
     n = addr.shape[0]
     block_n = 1024 if n >= 1024 else 128
     padded = ((n + block_n - 1) // block_n) * block_n
@@ -31,6 +47,7 @@ def addr_map(
     pad = padded - n
     ap = jnp.concatenate([addr, jnp.zeros((pad,), jnp.int32)])
     bank, rank, row, hist = addr_map_pallas(cfg, ap, block_n=block_n,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            tier_flags=tier_flags)
     hist = hist.at[0].add(-pad)
     return bank[:n], rank[:n], row[:n], hist

@@ -8,11 +8,20 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.dram_model import decode_address
-from repro.core.params import MemSimConfig
+from repro.core.params import MemSimConfig, RuntimeParams
 
 
-def addr_map_ref(cfg: MemSimConfig, addr: Array) -> Tuple[Array, Array, Array, Array]:
-    """addr int32[N] -> (bank[N], rank[N], row[N], hist[num_banks])."""
-    bank, rank, row = decode_address(cfg, addr)
+def addr_map_ref(cfg: MemSimConfig, addr: Array,
+                 tier_flags: Array = None) -> Tuple[Array, Array, Array, Array]:
+    """addr int32[N] -> (bank[N], rank[N], row[N], hist[num_banks]).
+
+    ``tier_flags`` int32[2] = (tier_interleave_log2, tier_cxl_frac_log2)
+    routes tiered topologies through the placement decode (traced data, so
+    placement is a sweep axis); ignored for single-tier configs."""
+    rp = None
+    if cfg.tiers > 1 and tier_flags is not None:
+        rp = RuntimeParams()._replace(tier_interleave_log2=tier_flags[0],
+                                      tier_cxl_frac_log2=tier_flags[1])
+    bank, rank, row = decode_address(cfg, addr, rp)
     hist = jnp.zeros((cfg.num_banks,), jnp.int32).at[bank].add(1)
     return bank, rank, row, hist

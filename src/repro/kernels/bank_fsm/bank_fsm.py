@@ -75,27 +75,53 @@ def _count_invocation() -> None:
     _TRACE_INVOCATIONS["count"] += 1
 
 
-def _resolve_rp(rp_ref, bnd_ref, cycle):
+def _tier_row(block_b: int, tier_split: int):
+    """Per-lane tier index of this grid step's bank block: int32[1,
+    block_b], 0 below the static DRAM/CXL bank split, 1 at or above it.
+    Padded banks (absolute index past the real bank count) land in the
+    last tier; they are inert and sliced off by the wrappers."""
+    abs_idx = (pl.program_id(0) * block_b
+               + jax.lax.broadcasted_iota(jnp.int32, (1, block_b), 1))
+    return (abs_idx >= tier_split).astype(jnp.int32)
+
+
+def _resolve_rp(rp_ref, bnd_ref, cycle, tiers: int = 1, tier_row=None):
     """In-kernel ParamSchedule resolution: select the [1, NP] row of the
-    segment governing ``cycle`` from the packed [S, NP] matrix.
+    segment governing ``cycle`` from the packed [T*S, NP] matrix
+    (tier-major: row ``t*S + s`` is tier ``t``'s params in segment ``s``).
 
     The active segment is the last one whose start boundary is <= cycle
     (boundaries sorted; SCHEDULE_INF padding rows never activate), found
-    branchlessly: count satisfied boundaries, one-hot the row, reduce.
-    S == 1 (the constant degenerate schedule) reads row 0 directly — the
-    kernel specializes on the static block shape, so constant-params
-    programs pay nothing. Returns the ``rp(name)`` accessor."""
-    s = rp_ref.shape[0]
+    branchlessly: count satisfied boundaries, one-hot the row within each
+    tier's block, reduce. S == 1 (the constant degenerate schedule) reads
+    each tier's single row directly — the kernel specializes on the static
+    block shape, so constant-params programs pay nothing. Returns the
+    ``rp(name)`` accessor: a scalar for the single-tier matrix (exact
+    pre-tier graph), or an int32[1, block_b] per-bank row selected through
+    ``tier_row`` (:func:`_tier_row`) when ``tiers > 1``."""
+    s = rp_ref.shape[0] // tiers
     if s == 1:
-        row = rp_ref[0:1, :]
+        rows = [rp_ref[t:t + 1, :] for t in range(tiers)]
     else:
         seg = jnp.sum((bnd_ref[:, :] <= cycle).astype(jnp.int32)) - 1
         onehot = (jax.lax.broadcasted_iota(jnp.int32, (s, 1), 0)
                   == seg).astype(jnp.int32)
-        row = jnp.sum(rp_ref[:, :] * onehot, axis=0, keepdims=True)
+        rows = [jnp.sum(rp_ref[t * s:(t + 1) * s, :] * onehot, axis=0,
+                        keepdims=True)
+                for t in range(tiers)]
 
-    def rp(name):
-        return row[0, RP_INDEX[name]]
+    if tiers == 1:
+        row = rows[0]
+
+        def rp(name):
+            return row[0, RP_INDEX[name]]
+    else:
+        def rp(name):
+            j = RP_INDEX[name]
+            acc = rows[0][0, j]
+            for t in range(1, tiers):
+                acc = jnp.where(tier_row >= t, rows[t][0, j], acc)
+            return acc
 
     return rp
 
@@ -213,9 +239,11 @@ def _fsm_combinational(topo: Topology, rp, cycle, rows, grant, resp_accept,
     return new_rows, (want_pop, rw_done, completed)
 
 
-def _kernel(topo: Topology, state_ref, inputs_ref, pop_ref, rp_ref, bnd_ref,
-            cycle_ref, new_state_ref, flags_ref):
-    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
+def _kernel(topo: Topology, block_b: int, state_ref, inputs_ref, pop_ref,
+            rp_ref, bnd_ref, cycle_ref, new_state_ref, flags_ref):
+    trow = (_tier_row(block_b, topo.tier_split_bank)
+            if topo.tiers > 1 else None)
+    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0], topo.tiers, trow)
     cycle = cycle_ref[0, 0]
 
     rows = tuple(state_ref[i:i + 1, :] for i in range(10))
@@ -256,11 +284,13 @@ def _event_bound_combinational(rp, cycle, st, timer, idle_ctr, refresh_due):
     return bound.astype(jnp.int32)
 
 
-def _event_bound_kernel(state_ref, rp_ref, bnd_ref, cycle_ref, out_ref):
+def _event_bound_kernel(tiers, tier_split, block_b, state_ref, rp_ref,
+                        bnd_ref, cycle_ref, out_ref):
     """Per-bank event bound, evaluated under the schedule segment governing
     ``cycle`` (resolved in-kernel; the engine caps skips at the next
     boundary, so the bound never needs to see past the active segment)."""
-    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0])
+    trow = _tier_row(block_b, tier_split) if tiers > 1 else None
+    rp = _resolve_rp(rp_ref, bnd_ref, cycle_ref[0, 0], tiers, trow)
     cycle = cycle_ref[0, 0]
     out_ref[0:1, :] = _event_bound_combinational(
         rp, cycle, state_ref[0:1, :], state_ref[1:2, :], state_ref[2:3, :],
@@ -268,23 +298,29 @@ def _event_bound_kernel(state_ref, rp_ref, bnd_ref, cycle_ref, out_ref):
 
 
 def bank_event_bound_pallas(state, rp_mat, bounds, cycle, block_b: int = 128,
-                            interpret: bool = True):
+                            interpret: bool = True, tiers: int = 1,
+                            tier_split: int = 0):
     """Invoke the event-bound kernel; B must be a multiple of ``block_b``
-    (ops.py pads). ``rp_mat`` int32[S, NP] / ``bounds`` int32[S, 1] is the
-    packed ParamSchedule (S=1 for constant params). Returns int32[1, B]
-    cycles-until-actionable."""
+    (ops.py pads). ``rp_mat`` int32[T*S, NP] / ``bounds`` int32[S, 1] is
+    the packed ParamSchedule (S=1 for constant params, T=1 for a single
+    tier; tiered topologies pass ``tiers``/``tier_split`` statics, see
+    :func:`_tier_row`). Returns int32[1, B] cycles-until-actionable."""
     b = state.shape[1]
-    s = rp_mat.shape[0]
+    sr = rp_mat.shape[0]
+    sb = bounds.shape[0]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    assert sr == tiers * sb, f"rp rows {sr} != tiers {tiers} x segments {sb}"
     _count_invocation()
     grid = (b // block_b,)
+    kernel = functools.partial(_event_bound_kernel, tiers, tier_split,
+                               block_b)
     return pl.pallas_call(
-        _event_bound_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((10, block_b), lambda i: (0, i)),
-            pl.BlockSpec((s, NUM_RUNTIME_PARAMS), lambda i: (0, 0)),
-            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((sr, NUM_RUNTIME_PARAMS), lambda i: (0, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=[pl.BlockSpec((1, block_b), lambda i: (0, i))],
@@ -296,14 +332,17 @@ def bank_event_bound_pallas(state, rp_mat, bounds, cycle, block_b: int = 128,
 def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_mat, bounds,
                          cycle, block_b: int = 128, interpret: bool = True):
     """Invoke the FSM kernel; B must be a multiple of ``block_b`` (ops.py
-    pads). ``rp_mat`` int32[S, NP] / ``bounds`` int32[S, 1] is the packed
-    ParamSchedule (S=1 for constant params)."""
+    pads). ``rp_mat`` int32[T*S, NP] / ``bounds`` int32[S, 1] is the packed
+    ParamSchedule (S=1 for constant params, T = ``topo.tiers``)."""
     b = state.shape[1]
-    s = rp_mat.shape[0]
+    sr = rp_mat.shape[0]
+    sb = bounds.shape[0]
     assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    assert sr == topo.tiers * sb, \
+        f"rp rows {sr} != tiers {topo.tiers} x segments {sb}"
     _count_invocation()
     grid = (b // block_b,)
-    kernel = functools.partial(_kernel, topo)
+    kernel = functools.partial(_kernel, topo, block_b)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -311,8 +350,8 @@ def bank_fsm_step_pallas(topo: Topology, state, inputs, pop, rp_mat, bounds,
             pl.BlockSpec((10, block_b), lambda i: (0, i)),
             pl.BlockSpec((3, block_b), lambda i: (0, i)),
             pl.BlockSpec((4, block_b), lambda i: (0, i)),
-            pl.BlockSpec((s, NUM_RUNTIME_PARAMS), lambda i: (0, 0)),
-            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((sr, NUM_RUNTIME_PARAMS), lambda i: (0, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=[

@@ -49,7 +49,8 @@ BOOKKEEPING stays in-kernel):
   inputs   bank rows [23,L*B]: state 0-9 | qmeta 10-11 (head,count) |
            timing 12-18 (last_act, act_win0..3, last_rd, last_wr gathered
            per-bank) | pop 19-22 (head items; garbage where empty) —
-           plus resp_buf [L*Qr,F] | rp_mat [L*S,NP] | bounds [L*S,1] |
+           plus resp_buf [L*Qr,F] | rp_mat [L*T*S,NP] (T = topo.tiers,
+           tier-major within each lane's block) | bounds [L*S,1] |
            scal [L, 8+C] = (cycle, arrival_rel, horizon, req_count,
            resp_head, resp_count, resp_limit, resp_rr, cmd_rr[C]) per
            lane (cycle/horizon are the shared clock)
@@ -156,11 +157,15 @@ def _legal_at(rp, cmd, la, aw0, aw1, aw2, aw3, lr, lw):
     return at.astype(jnp.int32)
 
 
-def _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, width):
+def _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, width, tiers: int = 1,
+                      tier_split: int = 0):
     """Per-lane in-kernel ParamSchedule resolution: select each lane's
-    [NP] row of the segment governing ``cycle`` from the stacked
-    [L*S, NP] matrix, then serve ``rp(name)`` as a [1, L*width]
-    lane-broadcast row (what the shared combinational networks consume).
+    per-tier [NP] rows of the segment governing ``cycle`` from the stacked
+    [L*T*S, NP] matrix (lane-major, tier-major within a lane — each lane's
+    block is its own tier-major ``ParamSchedule.pack``), then serve
+    ``rp(name)`` as a [1, L*width] lane-broadcast row (what the shared
+    combinational networks consume); tiered topologies select per bank at
+    the static ``tier_split`` within each lane's bank block.
 
     The active segment per lane is the last one whose start boundary is
     <= cycle (boundaries sorted; SCHEDULE_INF padding rows never
@@ -169,24 +174,29 @@ def _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, width):
     reads the lane rows directly — the kernel specializes on the static
     block shape, so constant-params programs pay nothing. Accessed rows
     are memoized so each timing parameter broadcasts once per resolve."""
-    s = rp_ref.shape[0] // lanes
+    s = rp_ref.shape[0] // (lanes * tiers)
     if s == 1:
-        rows = rp_ref[...]                                      # [L, NP]
+        rows = rp_ref[...].reshape(lanes, tiers, -1)            # [L, T, NP]
     else:
         bnd = bnd_ref[...].reshape(lanes, s)
         segs = jnp.sum((bnd <= cycle).astype(jnp.int32), axis=1) - 1
         onehot = (jax.lax.broadcasted_iota(jnp.int32, (lanes, s), 1)
                   == segs[:, None]).astype(jnp.int32)
-        rows = jnp.sum(rp_ref[...].reshape(lanes, s, -1)
-                       * onehot[:, :, None], axis=1)            # [L, NP]
+        rows = jnp.sum(rp_ref[...].reshape(lanes, tiers, s, -1)
+                       * onehot[:, None, :, None], axis=2)      # [L, T, NP]
 
     cache: Dict[str, jax.Array] = {}
+    bi = (jax.lax.broadcasted_iota(jnp.int32, (lanes, width), 1)
+          if tiers > 1 else None)
 
     def rp(name):
         if name not in cache:
-            col = rows[:, RP_INDEX[name]]
-            cache[name] = jnp.broadcast_to(
-                col[:, None], (lanes, width)).reshape(1, lanes * width)
+            col = rows[:, :, RP_INDEX[name]]                    # [L, T]
+            val = jnp.broadcast_to(col[:, 0:1], (lanes, width))
+            for t in range(1, tiers):
+                # two tiers max (Topology.validate): one static threshold
+                val = jnp.where(bi >= tier_split, col[:, t:t + 1], val)
+            cache[name] = val.reshape(1, lanes * width)
         return cache[name]
 
     return rp
@@ -217,8 +227,10 @@ def _fused_kernel(topo: Topology, lanes: int, bank_ref, resp_ref, rp_ref,
     cmd_rr = scal[:, NUM_SCAL_IN:NUM_SCAL_IN + channels]        # [L, C]
     nxt = cycle + 1
 
-    rp = _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, b)
-    rp2 = _resolve_rp_lanes(rp_ref, bnd_ref, nxt, lanes, b)
+    tiers = topo.tiers
+    split = topo.tier_split_bank if tiers > 1 else 0
+    rp = _resolve_rp_lanes(rp_ref, bnd_ref, cycle, lanes, b, tiers, split)
+    rp2 = _resolve_rp_lanes(rp_ref, bnd_ref, nxt, lanes, b, tiers, split)
 
     # ---- loads (one [23, L*B] operand; row map in the module docstring) ----
     rows = tuple(bank_ref[i:i + 1, :] for i in range(10))
@@ -426,7 +438,7 @@ def _noninterpret_ok(topo: Topology, num_segments: int, lanes: int) -> bool:
         out = fused_step_pallas(
             topo, z((NUM_BANK_ROWS_IN, b)),
             z((lanes * topo.resp_queue_size, 4)),
-            z((lanes * num_segments, NUM_RUNTIME_PARAMS)),
+            z((lanes * topo.tiers * num_segments, NUM_RUNTIME_PARAMS)),
             z((lanes * num_segments, 1)),
             z((lanes, NUM_SCAL_IN + topo.channels)),
             interpret=False, lanes=lanes)

@@ -98,6 +98,7 @@ def bank_event_bound(
     params,          # RuntimeParams (constant) or ParamSchedule
     use_pallas: bool = False,
     interpret: bool = True,
+    topo: Optional[Topology] = None,
 ) -> Array:
     """Per-bank cycles-until-actionable on the packed ABI; returns
     int32[B]. ``params`` may be a constant :class:`RuntimeParams` (lifted
@@ -107,19 +108,28 @@ def bank_event_bound(
     off, so both backends agree bank-for-bank with
     :func:`repro.core.bank_fsm.cycles_until_actionable` (enforced by the
     kernel tests). Callable from inside traced loops — no jit wrapper of
-    its own, it inlines into the caller's program."""
+    its own, it inlines into the caller's program.
+
+    ``topo`` is only needed for tiered topologies (``topo.tiers > 1``): it
+    supplies the static DRAM/CXL bank split so per-tier params rows of the
+    tier-major [T*S, NP] matrix resolve per bank. Omitted (or single-tier)
+    it is the exact pre-tier path."""
     cycle2d = jnp.asarray(cycle, jnp.int32).reshape(1, 1)
     bounds, rp_mat = as_schedule(params).pack()
     if not use_pallas:
-        return bank_event_bound_ref(state, rp_mat, bounds, cycle2d)[0]
+        return bank_event_bound_ref(state, rp_mat, bounds, cycle2d,
+                                    topo=topo)[0]
     b = state.shape[1]
     block_b = _block_b(b)
     padded_b = ((b + block_b - 1) // block_b) * block_b
     assert padded_b % block_b == 0
     ps, _, _ = _pad_banks(state, jnp.zeros((3, b), jnp.int32),
                           jnp.zeros((4, b), jnp.int32), padded_b)
+    tiers = 1 if topo is None else topo.tiers
+    split = 0 if topo is None or tiers == 1 else topo.tier_split_bank
     bound = bank_event_bound_pallas(ps, rp_mat, bounds, cycle2d,
-                                    block_b=block_b, interpret=interpret)
+                                    block_b=block_b, interpret=interpret,
+                                    tiers=tiers, tier_split=split)
     return bound[0, :b]
 
 

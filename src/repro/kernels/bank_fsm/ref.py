@@ -57,20 +57,25 @@ def unpack_state(s: Array) -> BankState:
 
 def bank_event_bound_ref(
     state: Array,   # [10, B] int32
-    rp_mat: Array,  # [S, NP] int32 packed ParamSchedule values
+    rp_mat: Array,  # [T*S, NP] int32 packed ParamSchedule values
     bounds: Array,  # [S, 1] int32 segment start cycles
     cycle: Array,   # [1, 1] int32
+    topo: Topology = None,  # only needed when T > 1 (tier->bank gather)
 ) -> Array:
     """Packed-ABI oracle for the event-bound kernel: adapts the simulator's
     :func:`repro.core.bank_fsm.cycles_until_actionable`, evaluated under
     the schedule segment governing ``cycle`` (the same ``params_at``
-    resolver the whole stack reads through). Returns int32[1, B].
+    resolver the whole stack reads through). Tiered matrices ([T*S, NP])
+    gather each bank's tier row through ``topo``. Returns int32[1, B].
     """
     from repro.core.bank_fsm import cycles_until_actionable
+    from repro.core.params import rp_for_banks
 
     sched = ParamSchedule.unpack(bounds, rp_mat)
-    bound = cycles_until_actionable(
-        sched.params_at(cycle[0, 0]), unpack_state(state), cycle[0, 0])
+    rp = sched.params_at(cycle[0, 0])
+    if topo is not None:
+        rp = rp_for_banks(topo, rp)
+    bound = cycles_until_actionable(rp, unpack_state(state), cycle[0, 0])
     return bound[None, :]
 
 
@@ -83,11 +88,13 @@ def bank_fsm_step_ref(
     bounds: Array,  # [S, 1] int32 segment start cycles
     cycle: Array,   # [1, 1] int32
 ) -> Tuple[Array, Array]:
+    from repro.core.params import rp_for_banks
+
     bank = unpack_state(state)
     sched = ParamSchedule.unpack(bounds, rp_mat)
     new_bank, outs = fsm_update(
         topo,
-        sched.params_at(cycle[0, 0]),
+        rp_for_banks(topo, sched.params_at(cycle[0, 0])),
         bank,
         grant=inputs[0] == 1,
         resp_accept=inputs[1] == 1,

@@ -360,6 +360,121 @@ def dvfs_llm_study(arch_name: str, params_bytes_per_dev: float,
     return dvfs_study(streams, schedules, **kw)
 
 
+def cxl_tier_point(cfg: MemSimConfig, interleave_log2: int,
+                   cxl_frac_log2: int, *, latency_adder: int = 30,
+                   link_ccd_scale: int = 2, refi_scale: int = 1):
+    """One tier-stacked parameter point for a tiered ``cfg``: tier 0 is the
+    config's nominal DRAM timing, tier 1 the CXL expander — the nominal
+    point plus a link-latency adder on the access path (tCL/tRCDRD/tRCDWR),
+    a narrower link modeled as a stretched column-to-column gap
+    (tCCDL/tWTR/tRTW x ``link_ccd_scale``), and optionally denser refresh
+    (``tREFI / refi_scale``). Placement flags are tier-uniform traced data,
+    so a (capacity split x interleave x timing) grid sweeps as lanes of one
+    compiled program."""
+    from repro.core.params import tiered_params
+
+    dram = cfg.runtime()._replace(tier_interleave_log2=interleave_log2,
+                                  tier_cxl_frac_log2=cxl_frac_log2)
+    cxl = dram._replace(
+        tCL=dram.tCL + latency_adder,
+        tRCDRD=dram.tRCDRD + latency_adder,
+        tRCDWR=dram.tRCDWR + latency_adder,
+        tCCDL=dram.tCCDL * link_ccd_scale,
+        tWTR=dram.tWTR * link_ccd_scale,
+        tRTW=dram.tRTW * link_ccd_scale,
+        tREFI=max(dram.tREFI // max(refi_scale, 1), dram.tRFC + 1),
+    )
+    return tiered_params(dram, cxl)
+
+
+def cxl_tier_study(cfg: Optional[MemSimConfig] = None,
+                   capacity_splits: Sequence[int] = (1, 2),
+                   interleaves: Sequence[int] = (6, 8),
+                   *, latency_adder: int = 30, link_ccd_scale: int = 2,
+                   tokens: int = 32, chunks: int = 16,
+                   tail_cycles: int = 30_000, seed: int = 0,
+                   batch_mode: str = "vmap", bit_check: bool = True,
+                   timings: Optional[dict] = None) -> List[Dict]:
+    """Tiered-KV placement sweep: decode + prefill effective bandwidth vs
+    DRAM:CXL capacity split and interleave ratio, every cell a lane of ONE
+    compiled program on the tiered topology.
+
+    ``capacity_splits`` are ``tier_cxl_frac_log2`` values (``k`` — the CXL
+    expander owns 1 of every ``2^k`` interleave blocks, a DRAM:CXL split of
+    ``(2^k - 1):1``); ``interleaves`` are ``tier_interleave_log2`` values
+    (words per placement block). Each lane pairs a tier-stacked parameter
+    point (:func:`cxl_tier_point`) with a hot/cold-placement trace
+    regenerated for its flags
+    (:func:`repro.traces.llm_workload.tiered_decode_trace` /
+    :func:`~repro.traces.llm_workload.tiered_prefill_trace`). The whole
+    grid shares one compiled program because the timing rows and placement
+    flags are traced data (``timings["compiles"] == 1``).
+
+    Efficiency is against the untiered nominal-DRAM ideal reference (what
+    an all-DRAM device at the nominal point would do), so the column reads
+    as "how much of all-DRAM ideal bandwidth does this placement keep".
+    ``bit_check=True`` (the acceptance gate) re-runs every lane through
+    the per-cycle reference :func:`repro.core.simulate` and reports
+    field-for-field identity in the row's ``bit_identical``.
+    """
+    if cfg is None:
+        cfg = MemSimConfig(channels=2, tiers=2, cxl_channels=1)
+    if cfg.tiers != 2:
+        raise ValueError("cxl_tier_study needs a tiered config (tiers=2)")
+    points = [(k, il) for k in capacity_splits for il in interleaves]
+    streams = [
+        ("decode", lambda il, k: llm_workload.tiered_decode_trace(
+            tokens=tokens, interleave_log2=il, cxl_frac_log2=k, seed=seed)),
+        ("prefill", lambda il, k: llm_workload.tiered_prefill_trace(
+            chunks=chunks, interleave_log2=il, cxl_frac_log2=k, seed=seed)),
+    ]
+    lane_traces, lane_params, lane_meta = [], [], []
+    for sname, build in streams:
+        for k, il in points:
+            lane_traces.append(build(il, k))
+            lane_params.append(cxl_tier_point(
+                cfg, il, k, latency_adder=latency_adder,
+                link_ccd_scale=link_ccd_scale))
+            lane_meta.append((sname, k, il))
+    horizon = (max(int(np.asarray(tr.t).max()) for tr in lane_traces)
+               + tail_cycles)
+    results = simulate_batch(cfg, lane_traces, num_cycles=horizon,
+                             params=lane_params, batch_mode=batch_mode,
+                             timings=timings)
+
+    # untiered nominal ideal reference: all-DRAM device at the nominal
+    # point over the same request stream
+    ideal_cfg = dataclasses.replace(cfg, tiers=1, cxl_channels=0)
+    rows = []
+    for li, ((sname, k, il), res) in enumerate(zip(lane_meta, results)):
+        ideal = simulate_ideal(ideal_cfg, lane_traces[li])
+        ideal_span = int(np.asarray(ideal.t_complete).max())
+        bw = _row_from_result(f"{sname}:split{(1 << k) - 1}:1:il{il}", res,
+                              ideal_span, float(llm_workload.BURST_BYTES),
+                              horizon)
+        row = {"stream": sname, "cxl_frac_log2": k,
+               "dram_cxl_split": f"{(1 << k) - 1}:1",
+               "interleave_log2": il,
+               **dataclasses.asdict(bw)}
+        ta = np.asarray(res.counters["tier_active_cycles"], np.int64)
+        row["tier_active_cycles"] = [int(v) for v in ta]
+        if bit_check:
+            ref = simulate(cfg, lane_traces[li], num_cycles=horizon,
+                           params=lane_params[li])
+            same = all(
+                np.array_equal(np.asarray(getattr(ref, f)),
+                               np.asarray(getattr(res, f)))
+                for f in ("t_admit", "t_dispatch", "t_start", "t_complete",
+                          "rdata"))
+            same = same and all(
+                np.array_equal(np.asarray(ref.counters[c]),
+                               np.asarray(res.counters[c]))
+                for c in ref.counters)
+            row["bit_identical"] = bool(same)
+        rows.append(row)
+    return rows
+
+
 def llm_grid_study(arch_name: str, params_bytes_per_dev: float,
                    kv_bytes_per_dev: float, act_bytes_per_dev: float,
                    grid: Mapping[str, Sequence], **kw) -> List[Dict]:

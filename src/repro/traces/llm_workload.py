@@ -182,6 +182,147 @@ def decode_serving_trace(tokens: int = 96, reads_per_token: int = 16,
     )
 
 
+def dram_words(idx, interleave_log2: int, cxl_frac_log2: int):
+    """Word address of the ``idx``-th word of the *DRAM-resident* sequential
+    space under block placement (``repro.core.dram_model.tier_select``):
+    addresses are split into ``2^interleave_log2``-word blocks and the CXL
+    expander owns the all-ones residue of every ``2^cxl_frac_log2`` blocks,
+    so a DRAM stream walks the remaining ``2^k - 1`` of each group.
+    Vectorized numpy; inverse of the placement decode (every returned
+    address satisfies ``tier_select == False``)."""
+    idx = np.asarray(idx, np.int64)
+    il, k = interleave_log2, cxl_frac_log2
+    m = (1 << k) - 1  # DRAM blocks per group
+    blk = idx >> il
+    off = idx & ((1 << il) - 1)
+    phys = (blk // m) * (1 << k) + (blk % m)
+    return (phys << il) | off
+
+
+def cxl_words(idx, interleave_log2: int, cxl_frac_log2: int):
+    """Word address of the ``idx``-th word of the *CXL-resident* sequential
+    space: the all-ones block residue of every ``2^cxl_frac_log2``-block
+    group (``tier_select == True``). Vectorized numpy twin of
+    :func:`dram_words`."""
+    idx = np.asarray(idx, np.int64)
+    il, k = interleave_log2, cxl_frac_log2
+    blk = idx >> il
+    off = idx & ((1 << il) - 1)
+    phys = (blk << k) | ((1 << k) - 1)
+    return (phys << il) | off
+
+
+def tiered_decode_trace(tokens: int = 48, reads_per_token: int = 16,
+                        compute_gap: int = 2500, kv_frac: float = 0.5,
+                        hot_frac: float = 0.5,
+                        interleave_log2: int = 6, cxl_frac_log2: int = 1,
+                        seed: int = 0) -> Trace:
+    """:func:`decode_serving_trace` with tiered hot/cold KV placement.
+
+    Weights and the *hot* KV window (the most recent tokens — reused every
+    decode step) live in DRAM; the *cold* KV tail is demoted to the CXL
+    expander. ``hot_frac`` of each token's KV gather hits the hot window.
+    Addresses are laid out through :func:`dram_words` / :func:`cxl_words`
+    for the given placement flags, so the stream must be simulated with a
+    matching ``(tier_interleave_log2, tier_cxl_frac_log2)`` parameter
+    point — the capacity-split x interleave sweep of
+    ``perfmodel.effective_bw.cxl_tier_study`` regenerates the trace per
+    placement lane."""
+    rng = np.random.default_rng(seed)
+    w_base, k_base = 0, 1 << 22        # word indices within each tier space
+    times, addrs, writes = [], [], []
+    t = 0
+    n_kv = max(1, int(reads_per_token * kv_frac))
+    n_hot = max(1, int(n_kv * hot_frac))
+    n_cold = n_kv - n_hot
+    n_w = reads_per_token - n_kv
+    kv_words_per_tok = 512
+    for tok in range(tokens):
+        w_start = (tok * n_w) % (1 << 21)
+        widx = w_base + w_start + np.arange(n_w)
+        for a in dram_words(widx, interleave_log2, cxl_frac_log2):
+            times.append(t)
+            addrs.append(int(a))
+            writes.append(0)
+            t += 1
+        # hot KV: gather over the most recent 4 tokens' appends (DRAM)
+        hot_lo = max(0, tok - 3) * kv_words_per_tok
+        hot_hi = (tok + 1) * kv_words_per_tok
+        hidx = k_base + rng.integers(hot_lo, hot_hi, n_hot)
+        for a in dram_words(hidx, interleave_log2, cxl_frac_log2):
+            times.append(t)
+            addrs.append(int(a))
+            writes.append(0)
+            t += 1
+        # cold KV: gather over the demoted tail (CXL)
+        cidx = rng.integers(0, hot_hi, n_cold)
+        for a in cxl_words(cidx, interleave_log2, cxl_frac_log2):
+            times.append(t)
+            addrs.append(int(a))
+            writes.append(0)
+            t += 1
+        # KV append for the new token lands hot (DRAM)
+        times.append(t)
+        addrs.append(int(dram_words(k_base + hot_hi, interleave_log2,
+                                    cxl_frac_log2)))
+        writes.append(1)
+        t += compute_gap
+    n = len(times)
+    return Trace.from_numpy(
+        np.asarray(times, np.int64).astype(np.int32),
+        np.asarray(addrs, np.int64) & 0x3FFFFFFF,
+        np.asarray(writes, np.int32),
+        np.arange(n, dtype=np.int64) & 0x7FFFFFFF,
+    )
+
+
+def tiered_prefill_trace(chunks: int = 24, writes_per_chunk: int = 24,
+                         reads_per_chunk: int = 8, gap: int = 24,
+                         hot_frac: float = 0.5,
+                         interleave_log2: int = 6, cxl_frac_log2: int = 1,
+                         seed: int = 0) -> Trace:
+    """Prefill stream under tiered placement: the KV cache is written
+    densely chunk by chunk — ``hot_frac`` of each chunk to DRAM, the rest
+    straight to the CXL expander — interleaved with sequential DRAM weight
+    reads, at a near-saturating arrival rate (the bandwidth-bound regime,
+    vs the WAIT-heavy :func:`tiered_decode_trace`)."""
+    w_base, k_base = 0, 1 << 22
+    times, addrs, writes = [], [], []
+    t = 0
+    n_hot = max(1, int(writes_per_chunk * hot_frac))
+    n_cold = writes_per_chunk - n_hot
+    hot_pos = cold_pos = 0
+    for c in range(chunks):
+        widx = w_base + c * reads_per_chunk + np.arange(reads_per_chunk)
+        for a in dram_words(widx, interleave_log2, cxl_frac_log2):
+            times.append(t)
+            addrs.append(int(a))
+            writes.append(0)
+            t += 1
+        hidx = k_base + hot_pos + np.arange(n_hot)
+        hot_pos += n_hot
+        for a in dram_words(hidx, interleave_log2, cxl_frac_log2):
+            times.append(t)
+            addrs.append(int(a))
+            writes.append(1)
+            t += 1
+        cidx = k_base + cold_pos + np.arange(n_cold)
+        cold_pos += n_cold
+        for a in cxl_words(cidx, interleave_log2, cxl_frac_log2):
+            times.append(t)
+            addrs.append(int(a))
+            writes.append(1)
+            t += 1
+        t += gap
+    n = len(times)
+    return Trace.from_numpy(
+        np.asarray(times, np.int64).astype(np.int32),
+        np.asarray(addrs, np.int64) & 0x3FFFFFFF,
+        np.asarray(writes, np.int32),
+        np.arange(n, dtype=np.int64) & 0x7FFFFFFF,
+    )
+
+
 def thermal_throttle_schedule(total_cycles: int, *,
                               base=None,
                               boost_frac: float = 0.2,

@@ -1,0 +1,316 @@
+"""Multi-tier memory (DRAM + CXL expander) as a topology axis (ISSUE-8).
+
+Contract under test, layer by layer:
+
+* the static bank->tier partition (``tier_of_bank``) and the traced
+  placement decode (``decode_address`` with the tier flags as RuntimeParams
+  data) agree with the hot/cold address generators in
+  ``repro.traces.llm_workload``;
+* a tiered config with genuinely different per-tier timings (latency
+  adder, narrower link, denser refresh, earlier self-refresh) is
+  bit-identical between the seed per-cycle ``simulate`` and the
+  event-horizon ``simulate_fast`` on ALL THREE FSM backends (jnp, pallas,
+  fused) — including under a multi-segment (DVFS x tier) schedule;
+* the per-tier residency counters attribute bank-cycles to the right tier
+  and show per-tier refresh/SREF divergence when the tiers' refresh
+  parameters differ;
+* the tiered addr_map kernel matches its jnp oracle, and the single-tier
+  kernel output is untouched by the tier plumbing;
+* ``effective_bw.cxl_tier_study`` compiles the whole placement grid ONCE
+  and every lane is bit-identical to the per-cycle reference.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MemSimConfig, simulate, simulate_batch, simulate_fast
+from repro.core.dram_model import decode_address
+from repro.core.params import (
+    ParamSchedule,
+    RuntimeParams,
+    tier_of_bank,
+    tiered_params,
+)
+from repro.traces import llm_workload
+from repro.traces.microbench import trace_example
+
+# per-cycle reference horizons: the fused backend pays an interpret-mode
+# Pallas dispatch per executed cycle, so its matrix stays modest (same
+# budget split as tests/test_engine_equivalence.py)
+CYCLES = 3_000 if os.environ.get("MEMSIM_SMOKE") else 5_000
+FUSED_CYCLES = 1_500
+
+
+def tiered_cfg(**kw) -> MemSimConfig:
+    """Smallest interesting tiered box: 2 channels, the second one a CXL
+    expander, with self-refresh reachable inside the test horizon."""
+    kw.setdefault("channels", 2)
+    kw.setdefault("tiers", 2)
+    kw.setdefault("cxl_channels", 1)
+    kw.setdefault("queue_size", 16)
+    kw.setdefault("sref_idle_cycles", 400)
+    return MemSimConfig(**kw)
+
+
+def cxl_point(cfg: MemSimConfig, adder: int = 20) -> RuntimeParams:
+    """Tier-stacked params: tier 0 = cfg's nominal DRAM point, tier 1 =
+    CXL (link-latency adder, stretched link, denser refresh, earlier
+    self-refresh)."""
+    dram = cfg.runtime()
+    cxl = dram._replace(
+        tCL=dram.tCL + adder,
+        tRCDRD=dram.tRCDRD + adder // 2,
+        tRCDWR=dram.tRCDWR + adder // 2,
+        tCCDL=dram.tCCDL * 2,
+        tRFC=dram.tRFC + 80,
+        tREFI=dram.tREFI // 2,
+        sref_idle_cycles=200,
+    )
+    return tiered_params(dram, cxl)
+
+
+def assert_bit_identical(ref, fast, label=""):
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(
+            getattr(ref, f), getattr(fast, f),
+            err_msg=f"{label}: {f} differs")
+    assert set(ref.counters) == set(fast.counters)
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{label}: counter {k} differs")
+    assert ref.blocked_arrival == fast.blocked_arrival, label
+    assert ref.blocked_dispatch == fast.blocked_dispatch, label
+
+
+# --------------------------------------------------------------------------
+# static partition + placement decode
+# --------------------------------------------------------------------------
+
+def test_tier_of_bank_partition():
+    cfg = tiered_cfg()
+    topo = cfg.topology()
+    tm = np.asarray(tier_of_bank(topo))
+    assert tm.shape == (topo.num_banks,)
+    split = topo.tier_split_bank
+    assert (tm[:split] == 0).all() and (tm[split:] == 1).all()
+    # channel-major bank layout: exactly the CXL channels' banks are tier 1
+    assert split == topo.dram_channels * (topo.num_banks // topo.channels)
+
+    single = MemSimConfig(channels=2).topology()
+    assert (np.asarray(tier_of_bank(single)) == 0).all()
+
+
+@pytest.mark.parametrize("il,k", [(6, 1), (6, 2), (8, 1)])
+def test_placement_decode_matches_generators(il, k):
+    """dram_words / cxl_words (the trace generators' placement inverses)
+    land on the tier the decode assigns them to, for every
+    (interleave, capacity-split) flag combination."""
+    cfg = tiered_cfg()
+    tm = np.asarray(tier_of_bank(cfg.topology()))
+    rp = cfg.runtime()._replace(tier_interleave_log2=il,
+                                tier_cxl_frac_log2=k)
+    idx = np.arange(4096, dtype=np.int64)
+    da = np.asarray(llm_workload.dram_words(idx, il, k), np.int32)
+    ca = np.asarray(llm_workload.cxl_words(idx, il, k), np.int32)
+    bank_d, _, _ = decode_address(cfg, da & 0x3FFFFFFF, rp)
+    bank_c, _, _ = decode_address(cfg, ca & 0x3FFFFFFF, rp)
+    assert (tm[np.asarray(bank_d)] == 0).all()
+    assert (tm[np.asarray(bank_c)] == 1).all()
+    # the CXL expander owns 1 of every 2^k interleave blocks
+    words = np.arange(1 << 16, dtype=np.int64)
+    bank_all, _, _ = decode_address(cfg, words.astype(np.int32), rp)
+    frac = (tm[np.asarray(bank_all)] == 1).mean()
+    assert abs(frac - 1.0 / (1 << k)) < 0.02
+
+
+def test_single_tier_decode_ignores_tier_flags():
+    cfg = MemSimConfig(channels=2)
+    addr = np.arange(2048, dtype=np.int32)
+    base = decode_address(cfg, addr)
+    flagged = decode_address(
+        cfg, addr, cfg.runtime()._replace(tier_interleave_log2=9,
+                                          tier_cxl_frac_log2=2))
+    for a, b in zip(base, flagged):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# engine equivalence: tiered timings through every FSM backend
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "fused"])
+def test_tiered_bit_exact(backend):
+    """Per-cycle reference vs event-horizon engine on a tiered config with
+    distinct CXL timings — the tier axis must survive cycle skipping."""
+    cfg = tiered_cfg()
+    rp = cxl_point(cfg)
+    tr = trace_example(n=60, gap=40, seed=3)
+    nc = FUSED_CYCLES if backend == "fused" else CYCLES
+    ref = simulate(cfg, tr, num_cycles=nc, params=rp)
+    fast = simulate_fast(tiered_cfg(fsm_backend=backend), tr,
+                         num_cycles=nc, params=rp)
+    assert_bit_identical(ref, fast, f"tiered/{backend}")
+    # both tiers actually saw traffic
+    ta = np.asarray(ref.counters["tier_active_cycles"])
+    assert ta.shape == (2,) and (ta > 0).all()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "fused"])
+def test_tiered_dvfs_schedule_bit_exact(backend):
+    """Multi-segment schedule of tier-stacked points: segment resolution
+    and tier resolution compose (rp rows are tier-major per segment in the
+    packed kernel ABI)."""
+    cfg = tiered_cfg()
+    seg0 = cxl_point(cfg, adder=16)
+    cfg_hot = tiered_cfg(tCL=cfg.tCL + 4, tRP=cfg.tRP + 2)
+    seg1 = cxl_point(cfg_hot, adder=28)
+    sched = ParamSchedule.from_segments([(0, seg0), (500, seg1)])
+    tr = trace_example(n=50, gap=30, seed=5)
+    ref = simulate(cfg, tr, num_cycles=FUSED_CYCLES, params=sched)
+    fast = simulate_fast(tiered_cfg(fsm_backend=backend), tr,
+                         num_cycles=FUSED_CYCLES, params=sched)
+    assert_bit_identical(ref, fast, f"tiered-dvfs/{backend}")
+    seg = np.asarray(ref.counters["seg_cycles"])
+    assert (seg > 0).all(), "both segments must be exercised"
+
+
+@pytest.mark.parametrize("backend", ["pallas", "fused"])
+def test_single_tier_unchanged_by_tier_plumbing(backend):
+    """tiers=1 through the tier-aware kernels == the per-cycle seed engine
+    (the 'single-tier reads row 0 and pays nothing' half of the refactor;
+    the pre-refactor numeric contract is pinned by the full equivalence
+    suite — this leg keeps the claim visible next to the tiered tests)."""
+    tr = trace_example(n=40, gap=6)
+    nc = FUSED_CYCLES
+    ref = simulate(MemSimConfig(queue_size=8), tr, num_cycles=nc)
+    fast = simulate_fast(MemSimConfig(queue_size=8, fsm_backend=backend),
+                         tr, num_cycles=nc)
+    assert_bit_identical(ref, fast, f"single-tier/{backend}")
+    assert np.asarray(ref.counters["tier_active_cycles"]).shape == (1,)
+
+
+def test_tiered_vmap_batch_bit_exact():
+    """Placement flags and tier timings as lane data: two lanes with
+    different (interleave, split, CXL latency) through ONE vmap batch,
+    each bit-identical to its solo per-cycle run."""
+    cfg = tiered_cfg()
+    lanes = [
+        cxl_point(cfg, adder=16)._replace(
+            tier_interleave_log2=6 * np.ones(2, np.int32),
+            tier_cxl_frac_log2=np.ones(2, np.int32)),
+        cxl_point(cfg, adder=32)._replace(
+            tier_interleave_log2=8 * np.ones(2, np.int32),
+            tier_cxl_frac_log2=2 * np.ones(2, np.int32)),
+    ]
+    tr = trace_example(n=50, gap=30, seed=7)
+    batch = simulate_batch(cfg, [tr, tr], num_cycles=CYCLES,
+                           params=lanes, batch_mode="vmap")
+    for i, (rp, res) in enumerate(zip(lanes, batch)):
+        ref = simulate(cfg, tr, num_cycles=CYCLES, params=rp)
+        assert_bit_identical(ref, res, f"tiered-vmap lane{i}")
+
+
+# --------------------------------------------------------------------------
+# per-tier counters
+# --------------------------------------------------------------------------
+
+def test_per_tier_refresh_and_sref_diverge():
+    """CXL's denser refresh + earlier SREF entry must show up in ITS tier's
+    residency buckets, and the tier buckets must sum to the global ones."""
+    cfg = tiered_cfg()
+    tr = trace_example(n=40, gap=60, seed=1)
+    res = simulate(cfg, tr, num_cycles=CYCLES, params=cxl_point(cfg))
+    c = {k: np.asarray(v, np.int64) for k, v in res.counters.items()}
+    for tier_key, global_key in (("tier_active_cycles", "active_cycles"),
+                                 ("tier_idle_cycles", "idle_cycles"),
+                                 ("tier_sref_cycles", "sref_cycles")):
+        assert c[tier_key].shape == (2,)
+        assert c[tier_key].sum() == c[global_key].sum(), tier_key
+    # CXL (tier 1) enters self-refresh earlier -> strictly more SREF
+    # bank-cycles per bank than the DRAM tier on this sparse trace
+    topo = cfg.topology()
+    split = topo.tier_split_bank
+    per_bank = c["tier_sref_cycles"] / np.array(
+        [split, topo.num_banks - split])
+    assert per_bank[1] > per_bank[0]
+
+
+# --------------------------------------------------------------------------
+# addr_map kernel
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("il,k", [(6, 1), (8, 2)])
+def test_addr_map_pallas_tiered_matches_ref(il, k):
+    from repro.kernels.addr_map.ops import addr_map
+
+    cfg = tiered_cfg(tier_interleave_log2=il, tier_cxl_frac_log2=k)
+    rng = np.random.default_rng(il * 10 + k)
+    addr = rng.integers(0, 1 << 28, size=2048).astype(np.int32)
+    ref = addr_map(cfg, addr, use_pallas=False)
+    ker = addr_map(cfg, addr, use_pallas=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # oracle agreement with the simulator's own decode
+    bank, _, _ = decode_address(
+        cfg, addr, cfg.runtime()._replace(tier_interleave_log2=il,
+                                          tier_cxl_frac_log2=k))
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(bank))
+
+
+def test_addr_map_pallas_single_tier_unchanged():
+    from repro.kernels.addr_map.ops import addr_map
+
+    cfg = MemSimConfig(channels=2)
+    addr = np.arange(2048, dtype=np.int32) * 37 % (1 << 20)
+    ref = addr_map(cfg, addr, use_pallas=False)
+    ker = addr_map(cfg, addr, use_pallas=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# the placement study
+# --------------------------------------------------------------------------
+
+def test_cxl_tier_study_one_compile_bit_exact():
+    from repro.perfmodel.effective_bw import cxl_tier_study
+
+    timings = {}
+    rows = cxl_tier_study(capacity_splits=(1, 2), interleaves=(6,),
+                          tokens=6, chunks=4, timings=timings)
+    assert timings.get("compiles") == 1, "placement grid must share ONE program"
+    assert len(rows) == 4  # 2 streams x 2 splits x 1 interleave
+    for r in rows:
+        assert r["bit_identical"], r["name"]
+        assert 0.0 < r["efficiency"] <= 1.5
+        assert len(r["tier_active_cycles"]) == 2
+
+
+def test_tiered_streamed_sweep_bit_exact():
+    """The streaming executor's chunked path carries the [S, T] schedule
+    leaves too: a tiered 2-point sweep in 1-lane chunks == solo runs."""
+    from repro.core import sweep_grid
+
+    cfg = tiered_cfg()
+    pts = [cxl_point(cfg, adder=10), cxl_point(cfg, adder=30)]
+    tr = trace_example(n=50, gap=30, seed=2)
+    timings = {}
+    res = sweep_grid(cfg, tr, {"schedule": pts}, num_cycles=FUSED_CYCLES,
+                     stream=True, chunk_lanes=1, timings=timings)
+    assert timings.get("chunks") == 2
+    for i, (rp, r) in enumerate(zip(pts, res)):
+        ref = simulate(cfg, tr, num_cycles=FUSED_CYCLES, params=rp)
+        assert_bit_identical(ref, r, f"tiered-stream lane{i}")
+
+
+def test_tiered_params_validation():
+    cfg = tiered_cfg()
+    dram = cfg.runtime()
+    with pytest.raises(ValueError, match="tier"):
+        # placement flags are tier-uniform: differing per tier is an error
+        tiered_params(dram, dram._replace(tier_cxl_frac_log2=2))
+    with pytest.raises(ValueError):
+        MemSimConfig(channels=2, tiers=2, cxl_channels=2).validate()

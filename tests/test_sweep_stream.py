@@ -120,17 +120,26 @@ def test_stream_threshold_routes_automatically(monkeypatch):
 
 def test_chunk_lanes_from_memory_budget():
     """chunk_lanes derives from the budget (two chunks resident), is
-    floored at one lane, and rejects explicit nonsense."""
+    floored at one lane when at least one lane fits, and rejects both
+    explicit nonsense and a budget no lane can fit in."""
     lane_b = sweep_stream.lane_footprint_bytes(
         MemSimConfig(queue_size=8, mem_words=1 << 12).topology(), 64, 1)
     assert lane_b > 0
     assert sweep_stream._resolve_chunk_lanes(None, 10 * 2 * lane_b,
                                              lane_b, 1000) == 10
-    assert sweep_stream._resolve_chunk_lanes(None, 1, lane_b, 1000) == 1
+    # one lane fits but not two chunks of one -> floored at a 1-lane chunk
+    assert sweep_stream._resolve_chunk_lanes(None, lane_b, lane_b,
+                                             1000) == 1
     assert sweep_stream._resolve_chunk_lanes(None, None, lane_b, 5) == 5
     assert sweep_stream._resolve_chunk_lanes(7, None, lane_b, 1000) == 7
     with pytest.raises(ValueError, match="chunk_lanes"):
         sweep_stream._resolve_chunk_lanes(0, None, lane_b, 1000)
+    # budget below a single lane's footprint: explicit error, with the
+    # footprint and the minimum workable budget in the message
+    with pytest.raises(ValueError, match="single lane's footprint"):
+        sweep_stream._resolve_chunk_lanes(None, lane_b - 1, lane_b, 1000)
+    with pytest.raises(ValueError, match=str(lane_b)):
+        sweep_stream._resolve_chunk_lanes(None, 1, lane_b, 1000)
     # end to end: a budget sized for ~2 lanes/chunk, bit-identical anyway
     tr = small_trace()
     cfg = MemSimConfig(queue_size=8, mem_words=1 << 12)
