@@ -877,6 +877,71 @@ def bench_cxl_tier() -> None:
          f"prefill_eff_3:1_il6={pre.get(('3:1', 6), float('nan')):.2f}")
 
 
+def bench_serving() -> None:
+    """ISSUE-9 acceptance: closed-loop serving co-simulation.
+
+    ``effective_bw.serving_study`` sweeps offered load x topology with the
+    continuous-batching scheduler closed over re-entrant windowed engine
+    sessions: tokens/sec vs offered load per topology (>= 4 load points on
+    the plain-DRAM and CXL-heavy tiered devices), the saturation knee per
+    curve, AIMD admitted-batch trajectories responding to memory
+    backpressure (the CXL device must sit below the DRAM device), and
+    request-level p50/p95/p99 queueing + service latencies. One compiled
+    windowed program per topology across every run of the sweep.
+    """
+    from repro.perfmodel import effective_bw
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+    loads = (0.5, 1.0, 2.0, 4.0)
+    timings: Dict = {}
+    t0 = time.time()
+    rows = effective_bw.serving_study(
+        loads=loads, horizon=4_000 if smoke else 10_000,
+        window_cycles=400, timings=timings)
+    wall = time.time() - t0
+
+    curves: Dict = {}
+    for r in rows:
+        c = curves.setdefault(r["topology"], {
+            "offered_load_per_kcycle": [], "tokens_per_kcycle": [],
+            "admitted_batch_mean": [], "batch_target_mean": [],
+            "queueing_p95": [], "service_p95": [],
+            "knee_load": r["knee_load"]})
+        c["offered_load_per_kcycle"].append(r["offered_load_per_kcycle"])
+        c["tokens_per_kcycle"].append(round(r["tokens_per_kcycle"], 3))
+        c["admitted_batch_mean"].append(round(r["admitted_batch_mean"], 3))
+        c["batch_target_mean"].append(round(r["batch_target_mean"], 3))
+        c["queueing_p95"].append(r["queueing"]["p95"])
+        c["service_p95"].append(r["service"]["p95"])
+    # backpressure response: the slow tiered device admits smaller batches
+    tgt = {t: float(sum(c["batch_target_mean"]) / len(c["batch_target_mean"]))
+           for t, c in curves.items()}
+    backpressure_ok = tgt.get("cxl", 0.0) < tgt.get("dram", float("inf"))
+    knees = {t: c["knee_load"] for t, c in curves.items()}
+
+    _ENGINE["serving"] = {
+        "loads": list(loads),
+        "topologies": sorted(curves),
+        "curves": curves,
+        "knee_load": knees,
+        "backpressure_ok": backpressure_ok,
+        "compiles": timings.get("compiles"),
+        "compile_s": round(timings.get("compile_s", 0.0), 3),
+        "run_s": round(timings.get("run_s", 0.0), 3),
+        "wall_s": round(wall, 2),
+        "cells": rows,
+    }
+    d = curves.get("dram", {"tokens_per_kcycle": [float("nan")]})
+    x = curves.get("cxl", {"tokens_per_kcycle": [float("nan")]})
+    _row("engine_serving", wall * 1e6 / max(len(rows), 1),
+         f"loads={len(loads)};topos={len(curves)};"
+         f"compiles={timings.get('compiles')};"
+         f"knee_dram={knees.get('dram')};knee_cxl={knees.get('cxl')};"
+         f"peak_tok_kcyc_dram={max(d['tokens_per_kcycle']):.2f};"
+         f"peak_tok_kcyc_cxl={max(x['tokens_per_kcycle']):.2f};"
+         f"backpressure_ok={backpressure_ok}")
+
+
 def bench_param_grid() -> None:
     """Tentpole acceptance: a (2 timing values x 2 page policies x 2
     schedulers x 2 queue depths) grid of RuntimeParams lanes runs through
@@ -1213,6 +1278,7 @@ _SECTIONS = [
     ("stream", bench_stream, True),
     ("dvfs", bench_dvfs, True),
     ("cxl_tier", bench_cxl_tier, True),
+    ("serving", bench_serving, True),
     ("param_grid", bench_param_grid, True),
     ("topo_grid", bench_topo_grid, True),
     ("mesh", bench_mesh_scaleout, True),

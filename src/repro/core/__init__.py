@@ -27,6 +27,7 @@ from repro.core.engine import (
     sweep_topologies,
     topo_grid_points,
 )
+from repro.core.session import SimSession, WindowReport
 from repro.core.sweep_stream import stream_sweep
 from repro.core.ideal import simulate_ideal, ideal_latencies
 from repro.core import stats
@@ -40,6 +41,8 @@ __all__ = [
     "as_schedule",
     "SimResult",
     "Trace",
+    "SimSession",
+    "WindowReport",
     "simulate",
     "simulate_fast",
     "simulate_batch",

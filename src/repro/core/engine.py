@@ -372,6 +372,61 @@ def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
     return states, steps
 
 
+def _run_window_core(topo: Topology, trace: Trace, t_start: Array,
+                     t_end: Array, sched: ParamSchedule,
+                     state: SimState) -> Tuple[SimState, Array]:
+    """Re-entrant windowed variant of :func:`_run_skip_core`: advance a
+    *carried* ``SimState`` from ``t_start`` to exactly ``t_end``, with the
+    event horizon additionally capped at the window boundary.
+
+    This is the engine half of :class:`repro.core.session.SimSession`. The
+    state is not initialized here — it arrives as an argument (queues,
+    per-tier power counters and schedule segment attribution all ride
+    inside the pytree, and the runtime queue limits live in ``Fifo.limit``,
+    so no extra arguments are needed) and leaves the same way, staying
+    on-device between calls. ``t_start`` / ``t_end`` are traced scalars and
+    the trace buffer has a fixed (session-capacity) shape, so ONE compiled
+    program serves every window of every session of a given
+    ``(topology, capacity, segment count)``.
+
+    Bit-exactness vs the monolithic run: a window boundary only *caps* the
+    skip delta, so the windowed engine executes ``cycle_step`` on boundary
+    cycles the monolithic engine would have skipped. Executing a provably
+    inert cycle is bit-identical to skipping it (``_apply_skip`` is the
+    closed form of the per-cycle updates — the same property that makes
+    the shared-clock joint-min skipping of :func:`_run_skip_batch_core`
+    exact per lane), so the final state after the last window equals the
+    monolithic final state field-for-field; only the executed-step count
+    (metadata) differs."""
+    t_end = jnp.asarray(t_end, jnp.int32)
+
+    def cond(carry):
+        _, t, _ = carry
+        return t < t_end
+
+    def body(carry):
+        state, t, steps = carry
+        if topo.fsm_backend == "fused":
+            from repro.core.fused_step import fused_cycle_step
+
+            state, delta = fused_cycle_step(topo, sched, trace, state, t,
+                                            t_end)
+        else:
+            state = cycle_step(topo, sched, trace, state, t)
+            delta = _next_event(topo, sched, trace, state, t + 1, t_end)
+        state = _apply_skip(topo, sched, state, delta, t + 1)
+        return (state, t + 1 + delta, steps + 1)
+
+    state, _, steps = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(t_start, jnp.int32), jnp.int32(0)))
+    return state, steps
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_window_jit(topo, trace, t_start, t_end, sched, state):
+    return _run_window_core(topo, trace, t_start, t_end, sched, state)
+
+
 def _run_scan_core(topo: Topology, trace: Trace, num_cycles: int,
                    sched: ParamSchedule, queue_limit: Array,
                    resp_limit: Array) -> Tuple[SimState, Array]:

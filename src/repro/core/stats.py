@@ -74,10 +74,23 @@ def latency_summary(result: SimResult) -> Dict[str, float]:
         "read_mean": read_mean,
         "write_mean": write_mean,
         "p50": float(np.percentile(lat, 50)) if lat.size else float("nan"),
+        "p95": float(np.percentile(lat, 95)) if lat.size else float("nan"),
         "p99": float(np.percentile(lat, 99)) if lat.size else float("nan"),
         "completed": int(done.sum()),
         "total": int(done.size),
     }
+
+
+def latency_percentiles(x: np.ndarray,
+                        qs: Tuple[int, ...] = (50, 95, 99)) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` of a latency sample,
+    NaN-with-count on empty input (the serving studies report these for
+    per-request queueing and service times)."""
+    x = np.asarray(x)
+    out = {f"p{q}": (float(np.percentile(x, q)) if x.size else float("nan"))
+           for q in qs}
+    out["n"] = int(x.size)
+    return out
 
 
 def windowed_profile(result: SimResult, window: int = 1000) -> Tuple[np.ndarray, np.ndarray]:

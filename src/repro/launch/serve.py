@@ -1,28 +1,98 @@
-"""Batched serving driver: continuous batched greedy decode.
+"""Batched serving driver: continuous batching with a real waiting queue.
 
-A minimal production-shaped server loop: requests enter a waiting queue,
-join the running batch at sequence boundaries (continuous batching), and
-decode steps run the jitted one-token step over the whole batch. On CPU
-this drives the tiny configs end-to-end; on TPU the same loop runs the
-full configs under the production mesh.
+The production-shaped server loop, honestly: requests sit in a waiting
+queue until a batch slot frees, join ONLY at sequence boundaries (a
+finishing sequence releases its slot; nothing is preempted mid-stream),
+and every decode step runs the jitted one-token step over the whole
+batch with a per-slot position vector. A joining request resets its
+slot's position to 0 — cache entries beyond a slot's position are never
+attended under causal masking, so slot reuse needs no cache clearing.
+
+This is the model-side twin of the memory-side closed loop in
+``repro.serving``: same join-at-sequence-boundary policy, driving real
+model kernels instead of the memory simulator.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --tiny \
-      --batch 4 --prompt-len 16 --max-new 32
+      --batch 4 --requests 10 --prompt-len 16 --max-new 32
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from collections import deque
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import make_decode_step, make_prefill
+from repro.launch.steps import make_decode_step
 from repro.models import lm, registry
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    pos: int = 0                 # per-slot position (resets to 0 on join)
+    prompt_idx: int = 0
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+def serve_loop(decode, params, caches, prompts: List[np.ndarray],
+               max_news: List[int], batch: int, *,
+               max_seq: Optional[int] = None):
+    """Continuous-batching loop over ``len(prompts)`` requests with
+    ``batch`` slots. Returns (generated token lists per request, joined
+    step index per request, total steps)."""
+    waiting = deque(
+        _Slot(rid=i, prompt=np.asarray(p, np.int32), max_new=int(n))
+        for i, (p, n) in enumerate(zip(prompts, max_news)))
+    slots: List[Optional[_Slot]] = [None] * batch
+    outputs: List[Optional[List[int]]] = [None] * len(prompts)
+    joined = [-1] * len(prompts)
+    last_tok = np.zeros((batch,), np.int32)
+    steps = 0
+    while waiting or any(s is not None for s in slots):
+        for i in range(batch):  # join at sequence boundaries only
+            if slots[i] is None and waiting:
+                slots[i] = waiting.popleft()
+                joined[slots[i].rid] = steps
+                last_tok[i] = slots[i].prompt[0]
+        tok = np.zeros((batch,), np.int32)
+        pos = np.zeros((batch,), np.int32)
+        for i, s in enumerate(slots):
+            if s is None:
+                continue  # idle slot: token 0 at pos 0, output ignored
+            tok[i] = (s.prompt[s.prompt_idx] if s.prompt_idx < len(s.prompt)
+                      else last_tok[i])
+            pos[i] = s.pos
+            if max_seq is not None and s.pos >= max_seq:
+                raise ValueError(f"request {s.rid} overflows max_seq={max_seq}")
+        nxt, _, caches = decode(params, caches, jnp.asarray(tok),
+                                jnp.asarray(pos))
+        nxt = np.asarray(nxt)
+        steps += 1
+        for i, s in enumerate(slots):
+            if s is None:
+                continue
+            s.pos += 1
+            if s.prompt_idx < len(s.prompt):
+                s.prompt_idx += 1  # teacher-forced prefill, one token/step
+                if s.prompt_idx < len(s.prompt):
+                    continue
+                # the last prompt token's output is the first generation
+            s.generated.append(int(nxt[i]))
+            last_tok[i] = nxt[i]
+            if len(s.generated) >= s.max_new:
+                outputs[s.rid] = s.generated  # sequence boundary: slot frees
+                slots[i] = None
+    return outputs, joined, steps
 
 
 def main() -> None:
@@ -30,6 +100,7 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
@@ -45,31 +116,27 @@ def main() -> None:
     params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
     decode = jax.jit(make_decode_step(cfg, dtype=jnp.float32))
 
-    b = args.batch
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(1, cfg.vocab, size=(b, args.prompt_len)).astype(np.int32)
+    # mixed-length requests so joins actually happen mid-run
+    plens = rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1,
+                         size=args.requests)
+    news = rng.integers(max(2, args.max_new // 2), args.max_new + 1,
+                        size=args.requests)
+    prompts = [rng.integers(1, cfg.vocab, size=(int(p),)).astype(np.int32)
+               for p in plens]
 
-    # prefill by teacher-forcing the prompt through decode steps (exactly
-    # equivalent to full-sequence prefill; see tests/test_models.py)
-    caches = lm.init_caches(cfg, b, args.max_seq)
-    tok = jnp.asarray(prompts[:, 0])
+    caches = lm.init_caches(cfg, args.batch, args.max_seq)
     t0 = time.time()
-    for t in range(args.prompt_len):
-        pos = jnp.full((b,), t, jnp.int32)
-        nxt, logits, caches = decode(params, caches, jnp.asarray(prompts[:, t]), pos)
-    generated = [np.asarray(nxt)]
-    for t in range(args.prompt_len, args.prompt_len + args.max_new - 1):
-        pos = jnp.full((b,), t, jnp.int32)
-        nxt, logits, caches = decode(params, caches, jnp.asarray(generated[-1]), pos)
-        generated.append(np.asarray(nxt))
+    outputs, joined, steps = serve_loop(
+        decode, params, caches, prompts, [int(n) for n in news], args.batch,
+        max_seq=args.max_seq)
     dt = time.time() - t0
-    out = np.stack(generated, axis=1)
-    total_tokens = b * (args.prompt_len + args.max_new)
-    print(f"[serve] {b} seqs x ({args.prompt_len} prompt + {args.max_new} new) "
-          f"in {dt:.2f}s -> {total_tokens/dt:.0f} tok/s")
-    print("[serve] sample generations (token ids):")
-    for i in range(min(b, 2)):
-        print(f"  seq{i}: {out[i][:16].tolist()}")
+    total_tokens = int(sum(plens) + sum(news))
+    print(f"[serve] {args.requests} reqs through {args.batch} slots in "
+          f"{steps} steps, {dt:.2f}s -> {total_tokens/dt:.0f} tok/s")
+    print(f"[serve] join steps: {joined}")
+    for i in range(min(args.requests, 2)):
+        print(f"  req{i}: {outputs[i][:16]}")
 
 
 if __name__ == "__main__":

@@ -475,6 +475,112 @@ def cxl_tier_study(cfg: Optional[MemSimConfig] = None,
     return rows
 
 
+def saturation_knee(loads: Sequence[float],
+                    tput: Sequence[float], *,
+                    efficiency: float = 0.7) -> Optional[float]:
+    """The saturation knee of a tokens/sec-vs-offered-load curve: the first
+    load whose throughput gain falls below ``efficiency`` of the offered
+    gain (doubling the load no longer comes close to doubling the output —
+    the serving system has gone memory-bound). ``None`` when the curve
+    still scales at its last point."""
+    for i in range(1, len(loads)):
+        load_gain = loads[i] / max(loads[i - 1], 1e-9)
+        tput_gain = tput[i] / max(tput[i - 1], 1e-9)
+        if tput_gain < efficiency * load_gain:
+            return float(loads[i])
+    return None
+
+
+def serving_study(loads: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
+                  mixtures: Sequence[str] = ("chat",),
+                  topologies=None, *, process: str = "poisson",
+                  horizon: int = 10_000, window_cycles: int = 400,
+                  serving=None, seed: int = 0,
+                  timings: Optional[dict] = None) -> List[Dict]:
+    """Closed-loop serving sweep: offered load x length mixture x topology,
+    each cell one :func:`repro.serving.run_serving` co-simulation.
+
+    Unlike every open-loop study above, the address stream here is not
+    fixed up front — the continuous-batching scheduler emits each window's
+    traffic from what the memory system completed in the previous window,
+    so tokens/sec saturates (the knee :func:`saturation_knee` finds) and
+    the admitted batch shrinks under memory backpressure instead of the
+    trace blindly queueing deeper.
+
+    ``topologies`` is ``[(name, cfg, params-or-None), ...]``; the default
+    pairs a plain 2-channel DRAM device against a CXL-heavy tiered device
+    (tier-stacked params from :func:`cxl_tier_point` with a deep link
+    penalty) so the backpressure contrast is visible. Every run of one
+    topology shares ONE compiled windowed program: the session capacity is
+    fixed study-wide (max over scenarios, rounded up to a power of two),
+    so ``timings["compiles"]`` lands at ``len(topologies)``.
+
+    Rows carry tokens/kilocycle, admitted-batch statistics (mean/min and
+    the AIMD target trajectory mean), and request-level p50/p95/p99
+    queueing + service percentiles (:func:`repro.core.stats.latency_percentiles`).
+    """
+    from repro.core import stats
+    from repro.serving import ServingConfig, generate_requests, run_serving
+
+    serving = serving or ServingConfig()
+    if topologies is None:
+        cxl_cfg = MemSimConfig(channels=2, tiers=2, cxl_channels=1)
+        topologies = [
+            ("dram", MemSimConfig(channels=2), None),
+            ("cxl", cxl_cfg,
+             cxl_tier_point(cxl_cfg, cxl_cfg.tier_interleave_log2,
+                            cxl_cfg.tier_cxl_frac_log2, latency_adder=200,
+                            link_ccd_scale=8)),
+        ]
+
+    scenarios = {(mix, load): generate_requests(
+        process=process, mixture=mix, rate_per_kcycle=load, horizon=horizon,
+        seed=seed) for mix in mixtures for load in loads}
+
+    # fixed study-wide capacity -> one compiled program per topology
+    def emissions(reqs):
+        per_req = [(-(-r.prompt_tokens // serving.prefill_tokens_per_step))
+                   * serving.weight_reads_per_token
+                   + r.prompt_tokens * 32
+                   + r.decode_tokens * (serving.weight_reads_per_token
+                                        + serving.kv_reads_per_token + 32)
+                   for r in reqs]
+        return sum(per_req)
+    need = max((emissions(r) for r in scenarios.values()), default=1) + 64
+    capacity = 1 << max(need - 1, 1).bit_length()
+
+    rows = []
+    for tname, cfg, params in topologies:
+        for mix in mixtures:
+            curve = []
+            for load in loads:
+                reqs = scenarios[(mix, load)]
+                res = run_serving(cfg, reqs, serving, params=params,
+                                  window_cycles=window_cycles,
+                                  capacity=capacity, timings=timings,
+                                  seed=seed)
+                row = {
+                    "topology": tname, "mixture": mix,
+                    "offered_load_per_kcycle": float(load),
+                    "offered": res.offered, "completed": res.completed,
+                    "tokens": res.tokens, "cycles": res.cycles,
+                    "tokens_per_kcycle": res.tokens_per_kcycle,
+                    "admitted_batch_mean": float(np.mean(res.admitted_batch)),
+                    "admitted_batch_min": int(np.min(res.admitted_batch)),
+                    "batch_target_mean": float(np.mean(res.batch_target)),
+                    "queueing": stats.latency_percentiles(res.queueing),
+                    "service": stats.latency_percentiles(res.service),
+                }
+                curve.append(row)
+                rows.append(row)
+            knee = saturation_knee([r["offered_load_per_kcycle"]
+                                    for r in curve],
+                                   [r["tokens_per_kcycle"] for r in curve])
+            for r in curve:
+                r["knee_load"] = knee
+    return rows
+
+
 def llm_grid_study(arch_name: str, params_bytes_per_dev: float,
                    kv_bytes_per_dev: float, act_bytes_per_dev: float,
                    grid: Mapping[str, Sequence], **kw) -> List[Dict]:

@@ -1,0 +1,39 @@
+"""Closed-loop LLM serving co-simulation on top of the windowed engine.
+
+The missing feedback loop the paper's co-simulation framing implies:
+instead of fixing every memory request before the first cycle runs
+(``traces/llm_workload.py``, open-loop), a continuous-batching scheduler
+emits each window's address stream from what the memory system actually
+completed in the previous window:
+
+    scheduler -> addresses -> SimSession.advance -> completions -> scheduler
+
+* :mod:`repro.serving.workload` — request processes (Poisson / bursty /
+  diurnal arrivals) and prompt/decode length mixtures: the *scenario* axis.
+* :mod:`repro.serving.kv_pager`  — paged KV-cache manager: block
+  allocation/eviction and tier-aware placement (PR-8 DRAM/CXL flags).
+* :mod:`repro.serving.scheduler` — admission queue, prefill/decode
+  interleave, join-at-sequence-boundary continuous batching, and AIMD
+  admission control on memory backpressure; plus :func:`run_serving`, the
+  closed-loop driver.
+"""
+
+from repro.serving.kv_pager import KVPager, PageState
+from repro.serving.scheduler import (
+    ContinuousBatchScheduler,
+    ServingConfig,
+    ServingResult,
+    run_serving,
+)
+from repro.serving.workload import Request, generate_requests
+
+__all__ = [
+    "ContinuousBatchScheduler",
+    "KVPager",
+    "PageState",
+    "Request",
+    "ServingConfig",
+    "ServingResult",
+    "generate_requests",
+    "run_serving",
+]

@@ -1,0 +1,169 @@
+"""Paged KV-cache manager: block allocation, eviction, tiered placement.
+
+The serving stack's memory map. Sequences own chains of fixed-size KV
+blocks from a bounded pool (the vLLM/MaxText paged-attention model; the
+``PageState`` snapshot threaded to the scheduler follows the MaxText
+``page_manager``/``page_state`` idiom — an immutable view of pool
+occupancy that admission decisions read, never mutate). The pager turns
+scheduler intents into *word addresses* for the memory simulator:
+
+* ``append_addrs``  — the new token's KV write lands at the sequence tail,
+  allocating a fresh block when the tail block fills;
+* ``gather_addrs``  — the decode attention gather over the sequence's
+  blocks, recency-weighted toward the hot tail;
+* tier-aware placement — on a tiered topology (PR-8 DRAM + CXL expander)
+  the last ``hot_blocks`` blocks of each sequence live in DRAM address
+  space and every older block is *demoted* to the CXL expander space,
+  through the same :func:`repro.traces.llm_workload.dram_words` /
+  :func:`~repro.traces.llm_workload.cxl_words` placement maps the
+  open-loop tiered traces use (so the stream matches the lane's
+  ``tier_interleave_log2`` / ``tier_cxl_frac_log2`` flags).
+
+Eviction is at sequence boundaries: a finished sequence returns its whole
+chain to the free list. When the pool runs dry the pager refuses
+admission (``can_admit``) — allocation pressure is a *backpressure
+signal* to the scheduler, not an exception.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.traces.llm_workload import cxl_words, dram_words
+
+
+@dataclasses.dataclass(frozen=True)
+class PageState:
+    """Immutable pool-occupancy snapshot (the MaxText ``page_state``
+    threading idiom): the scheduler reads this to gate admission."""
+
+    num_blocks: int
+    free_blocks: int
+    used_blocks: int
+    sequences: int
+
+    @property
+    def occupancy(self) -> float:
+        return self.used_blocks / max(self.num_blocks, 1)
+
+
+class KVPager:
+    """Block-granular KV-cache manager for one device's KV pool.
+
+    ``block_words`` words per block, ``words_per_token`` KV words appended
+    per generated token. ``tiered=True`` routes block addresses through
+    the DRAM/CXL placement maps (``interleave_log2`` / ``cxl_frac_log2``
+    must then match the simulated lane's placement flags).
+    """
+
+    def __init__(self, num_blocks: int = 64, block_words: int = 256,
+                 words_per_token: int = 32, *, hot_blocks: int = 2,
+                 tiered: bool = False, interleave_log2: int = 6,
+                 cxl_frac_log2: int = 1, kv_base: int = 1 << 22,
+                 addr_mask: int = 0x3FFFFFFF):
+        if block_words % words_per_token:
+            raise ValueError("block_words must be a words_per_token multiple")
+        self.num_blocks = num_blocks
+        self.block_words = block_words
+        self.words_per_token = words_per_token
+        self.hot_blocks = max(1, hot_blocks)
+        self.tiered = tiered
+        self.interleave_log2 = interleave_log2
+        self.cxl_frac_log2 = cxl_frac_log2
+        self.kv_base = kv_base
+        self.addr_mask = addr_mask
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._chains: Dict[int, List[int]] = {}
+        self._fill: Dict[int, int] = {}  # words filled in the tail block
+
+    # ---- occupancy ---------------------------------------------------------
+
+    def page_state(self) -> PageState:
+        used = self.num_blocks - len(self._free)
+        return PageState(num_blocks=self.num_blocks,
+                         free_blocks=len(self._free), used_blocks=used,
+                         sequences=len(self._chains))
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        words = tokens * self.words_per_token
+        return -(-words // self.block_words)
+
+    def can_admit(self, prompt_tokens: int) -> bool:
+        """Enough free blocks to hold the prompt's KV plus one growth
+        block for the first generated token?"""
+        return (self.blocks_for_tokens(prompt_tokens) + 1
+                <= len(self._free))
+
+    # ---- sequence lifecycle ------------------------------------------------
+
+    def admit(self, rid: int) -> None:
+        if rid in self._chains:
+            raise ValueError(f"sequence {rid} already admitted")
+        self._chains[rid] = []
+        self._fill[rid] = 0
+
+    def free_seq(self, rid: int) -> None:
+        """Sequence-boundary eviction: the whole chain returns to the
+        pool."""
+        for bid in self._chains.pop(rid):
+            self._free.append(bid)
+        self._fill.pop(rid)
+
+    # ---- address generation ------------------------------------------------
+
+    def _addr(self, bid: int, offset: int, hot: bool) -> int:
+        idx = self.kv_base + bid * self.block_words + offset
+        if not self.tiered:
+            return idx & self.addr_mask
+        place = dram_words if hot else cxl_words
+        return int(place(idx, self.interleave_log2,
+                         self.cxl_frac_log2)) & self.addr_mask
+
+    def _is_hot(self, rid: int, chain_pos: int) -> bool:
+        return chain_pos >= len(self._chains[rid]) - self.hot_blocks
+
+    def append_addrs(self, rid: int, tokens: int = 1) -> List[int]:
+        """Word addresses of ``tokens`` new tokens' KV writes at the
+        sequence tail, allocating blocks as the tail fills. Raises if the
+        pool is dry — schedulers gate on :meth:`can_admit` /
+        :meth:`page_state` first."""
+        chain = self._chains[rid]
+        out = []
+        for _ in range(tokens * self.words_per_token):
+            if not chain or self._fill[rid] == self.block_words:
+                if not self._free:
+                    raise RuntimeError(
+                        f"KV pool exhausted ({self.num_blocks} blocks); "
+                        "admission must gate on can_admit()")
+                chain.append(self._free.pop())
+                self._fill[rid] = 0
+            # the tail block is by definition inside the hot window
+            out.append(self._addr(chain[-1], self._fill[rid], hot=True))
+            self._fill[rid] += 1
+        return out
+
+    def gather_addrs(self, rid: int, n: int,
+                     rng: np.random.Generator) -> List[int]:
+        """Word addresses of an ``n``-read attention gather over the
+        sequence's KV: recency-weighted — most reads hit the hot tail
+        window (DRAM on tiered topologies), the rest the demoted cold
+        blocks (CXL)."""
+        chain = self._chains[rid]
+        if not chain:
+            return []
+        out = []
+        n_chain = len(chain)
+        for _ in range(n):
+            if n_chain > self.hot_blocks and rng.random() < 0.25:
+                pos = int(rng.integers(0, n_chain - self.hot_blocks))
+            else:
+                pos = int(rng.integers(max(0, n_chain - self.hot_blocks),
+                                       n_chain))
+            limit = (self._fill[rid] if pos == n_chain - 1
+                     else self.block_words)
+            off = int(rng.integers(0, max(limit, 1)))
+            out.append(self._addr(chain[pos], off, self._is_hot(rid, pos)))
+        return out

@@ -1,7 +1,7 @@
 """Trace generation: paper microbenchmarks + LLM workload streams."""
 
 from repro.traces.microbench import BENCHMARKS, conv2d, make, multihead_attention, trace_example, vector_similarity
-from repro.traces.io import load_trace, save_trace
+from repro.traces.io import load_trace, save_session_trace, save_trace
 from repro.traces import llm_workload
 
 __all__ = [
@@ -12,6 +12,7 @@ __all__ = [
     "trace_example",
     "vector_similarity",
     "load_trace",
+    "save_session_trace",
     "save_trace",
     "llm_workload",
 ]

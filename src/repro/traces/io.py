@@ -30,6 +30,19 @@ def save_trace(path: str, trace: Trace, word_bytes: int = 4) -> None:
             f.write(f"0x{addr[i]:08X} {op} {int(t[i])}\n")
 
 
+def save_session_trace(path: str, session, word_bytes: int = 4) -> Trace:
+    """Dump a closed-loop session's *realized* address stream — every
+    request the scheduler actually emitted across all windows, in arrival
+    order — as a DRAMSim3 trace file, so an open-loop replay (here or in
+    the reference simulator) can reproduce the closed-loop run's traffic.
+    Accepts a :class:`repro.core.SimSession` (or anything with a
+    ``.trace()``) or a plain :class:`~repro.core.simulator.Trace`; returns
+    the trace it wrote."""
+    trace = session.trace() if hasattr(session, "trace") else session
+    save_trace(path, trace, word_bytes)
+    return trace
+
+
 def load_trace(path: str, word_bytes: int = 4) -> Trace:
     ts, addrs, writes = [], [], []
     with open(path) as f:

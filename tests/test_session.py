@@ -1,0 +1,196 @@
+"""Re-entrant windowed sessions: the exactness + one-compile contracts
+(ISSUE 9 tentpole).
+
+The session claim is that a window boundary only *caps* the event-horizon
+skip — executing a provably inert cycle is bit-identical to skipping it —
+so replaying identical arrivals through ANY window partition must land on
+a :class:`SimResult` bit-identical to one monolithic ``simulate_fast``
+run over the concatenated trace. Pinned here across window sizes
+(including window=1), across windows cutting refresh/SREF seams and DVFS
+segment boundaries, with arrivals appended incrementally mid-run, and on
+every FSM backend (the CI matrix exports ``MEMSIM_FSM_BACKEND``); plus
+the compile-sharing contract: ONE XLA compile per (topology, capacity,
+segment count) across all windows AND sessions.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MemSimConfig, SimSession, simulate_fast
+from repro.core.engine import _PAD_T, lane_schedule
+from repro.traces import BENCHMARKS
+from repro.traces.llm_workload import decode_serving_trace
+
+#: FSM backend under test; the CI matrix exports MEMSIM_FSM_BACKEND=pallas
+#: to drive the whole module through the Pallas kernel path.
+BACKEND = os.environ.get("MEMSIM_FSM_BACKEND", "jnp")
+
+#: small refresh / SREF intervals put refresh windows, SREF crossings and
+#: WAIT expiries inside a short, cheap horizon — so fixed-size windows
+#: inevitably cut those seams
+_SEAM_KW = dict(tREFI=900, tRFC=120, sref_idle_cycles=60)
+
+#: DVFS boundaries landing mid-burst, mid-quiet-phase and in the
+#: refresh-heavy tail of the seam trace (test_param_schedule idiom)
+_SPEC = [
+    (0, {}),
+    (137, {"tCL": 20, "tRCDRD": 18, "tRCDWR": 19, "tREFI": 700}),
+    (400, {"tCL": 26, "tCCDL": 4, "tWTR": 10, "tREFI": 600,
+           "sref_idle_cycles": 45}),
+    (900, {"tCL": 28, "tRP": 18, "tREFI": 450, "tRFC": 100}),
+]
+
+HORIZON = 1_200
+
+
+def seam_cfg(**kw):
+    return MemSimConfig(queue_size=32, fsm_backend=BACKEND, **_SEAM_KW,
+                        **kw)
+
+
+def seam_trace():
+    return BENCHMARKS["trace_example"](n=24, gap=4)
+
+
+def assert_bit_identical(ref, fast, label=""):
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(
+            getattr(ref, f), getattr(fast, f), err_msg=f"{label}: {f}")
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(fast.counters[k]),
+            err_msg=f"{label}: counter {k}")
+    assert ref.blocked_arrival == fast.blocked_arrival, label
+    assert ref.blocked_dispatch == fast.blocked_dispatch, label
+
+
+def windowed_result(cfg, tr, horizon, window, *, params=None, capacity=256,
+                    timings=None, queue_size=8):
+    s = SimSession.open(cfg, capacity=capacity, params=params,
+                        queue_size=queue_size, timings=timings)
+    s.append(tr)
+    s.run_until(horizon, window)
+    return s
+
+
+# --------------------------------------------------------------------------
+# windowed vs monolithic bit-exactness
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [1, 7, 113, HORIZON])
+def test_window_partition_bit_identical(window):
+    """Every window partition — one-cycle windows, a prime stride cutting
+    refresh windows (tREFI - tRFC = 780) and SREF crossings mid-seam, and
+    the whole-horizon degenerate window — must equal the monolithic run
+    field-for-field, counters included."""
+    if window == 1 and os.environ.get("MEMSIM_SMOKE"):
+        window = 3  # 1-cycle windows x1200 dispatches: too slow for smoke
+    tr = seam_trace()
+    cfg = seam_cfg()
+    ref = simulate_fast(cfg, tr, num_cycles=HORIZON, queue_size=8)
+    ses = windowed_result(cfg, tr, HORIZON, window)
+    assert ses.cycle == HORIZON
+    assert_bit_identical(ref, ses.result(), f"window={window}")
+
+
+@pytest.mark.parametrize("window", [113, 250])
+def test_windows_cutting_dvfs_boundaries_bit_identical(window):
+    """Windows falling mid-DVFS-segment (boundaries at 137/400/900, never
+    a multiple of the stride): the window cap and the schedule-boundary
+    cap must compose without disturbing a single record."""
+    tr = seam_trace()
+    cfg = seam_cfg()
+    sched = lane_schedule(cfg, _SPEC)
+    ref = simulate_fast(cfg, tr, num_cycles=HORIZON, queue_size=8,
+                        params=sched)
+    ses = windowed_result(cfg, tr, HORIZON, window, params=sched)
+    assert_bit_identical(ref, ses.result(), f"dvfs window={window}")
+
+
+def test_incremental_arrivals_bit_identical():
+    """Arrivals revealed mid-run (each appended before its due cycle, as
+    a closed-loop scheduler does) must replay exactly like a monolithic
+    run fed the full concatenated trace up front."""
+    tr = decode_serving_trace(tokens=6, reads_per_token=8, compute_gap=500)
+    t_np = np.asarray(tr.t)
+    n = t_np.size
+    half = n // 2
+    cut = int(t_np[half]) - 1
+    cfg = MemSimConfig(queue_size=32, fsm_backend=BACKEND)
+    horizon = int(t_np.max()) + 2_000
+
+    ses = SimSession.open(cfg, capacity=256, queue_size=16)
+    first = (t_np[:half], np.asarray(tr.addr)[:half],
+             np.asarray(tr.is_write)[:half], np.asarray(tr.wdata)[:half])
+    ses.append(first)
+    ses.run_until(cut, 97)
+    second = (t_np[half:], np.asarray(tr.addr)[half:],
+              np.asarray(tr.is_write)[half:], np.asarray(tr.wdata)[half:])
+    ses.append(second)
+    ses.run_until(horizon, 97)
+
+    ref = simulate_fast(cfg, tr, num_cycles=horizon, queue_size=16)
+    assert_bit_identical(ref, ses.result(), "incremental arrivals")
+
+
+# --------------------------------------------------------------------------
+# one compile per (topology, capacity, segments)
+# --------------------------------------------------------------------------
+
+def test_one_compile_across_windows_and_sessions():
+    # capacity=320 is unique to this test, so the global AOT cache cannot
+    # have been warmed by another test's sessions of the same shapes
+    tr = seam_trace()
+    cfg = seam_cfg()
+    timings = {}
+    windowed_result(cfg, tr, HORIZON, 113, timings=timings, capacity=320)
+    assert timings["compiles"] == 1, timings
+    # a second session of the same shapes reuses the compiled program
+    windowed_result(cfg, tr, HORIZON, 59, timings=timings, capacity=320)
+    assert timings["compiles"] == 1, timings
+    # a different topology is a fresh program
+    windowed_result(MemSimConfig(channels=2, queue_size=32,
+                                 fsm_backend=BACKEND, **_SEAM_KW),
+                    tr, HORIZON, 113, timings=timings, capacity=320)
+    assert timings["compiles"] == 2, timings
+
+
+# --------------------------------------------------------------------------
+# session surface contracts
+# --------------------------------------------------------------------------
+
+def test_append_contract_violations_raise():
+    ses = SimSession.open(MemSimConfig(fsm_backend=BACKEND), capacity=8)
+    ses.append((np.asarray([5, 9]), np.asarray([1, 2]), np.asarray([0, 0])))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        ses.append((np.asarray([20, 12]), np.asarray([1, 2]),
+                    np.asarray([0, 0])))
+    with pytest.raises(ValueError, match="sorted"):
+        ses.append((np.asarray([3]), np.asarray([1]), np.asarray([0])))
+    with pytest.raises(ValueError, match="sentinel"):
+        ses.append((np.asarray([_PAD_T]), np.asarray([1]), np.asarray([0])))
+    with pytest.raises(ValueError, match="capacity"):
+        ses.append((np.full(9, 30), np.arange(9), np.zeros(9, np.int64)))
+
+
+def test_window_report_feedback_fields():
+    """The report must expose the closed-loop signals: in-window
+    completion ids/cycles and end-of-window queue occupancies."""
+    tr = BENCHMARKS["trace_example"](n=12, gap=3)
+    ses = SimSession.open(MemSimConfig(queue_size=32, fsm_backend=BACKEND),
+                          capacity=64, queue_size=8)
+    ses.append(tr)
+    reports = ses.run_until(2_000, 200)
+    ids = np.concatenate([r.completed_ids for r in reports])
+    ats = np.concatenate([r.completed_at for r in reports])
+    res = ses.result()
+    done = res.t_complete >= 0
+    np.testing.assert_array_equal(np.sort(ids), np.nonzero(done)[0])
+    order = np.argsort(ids)
+    np.testing.assert_array_equal(ats[order], res.t_complete[done])
+    for r in reports:
+        assert 0 <= r.req_q_len <= 8 and r.resp_q_len >= 0
+        assert r.t_end - r.t_start == 200
+    assert reports[-1].admitted == 24  # every arrival admitted by the end
