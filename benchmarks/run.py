@@ -942,6 +942,129 @@ def bench_serving() -> None:
          f"backpressure_ok={backpressure_ok}")
 
 
+def bench_serving_batched() -> None:
+    """ISSUE-10 acceptance: the whole serving grid as lanes of ONE program.
+
+    Runs the same smoke serving study twice — sequentially (one SimSession
+    per load x mixture x topology point, PR-9 style) and lane-batched
+    (``serving_study(batch_lanes=True)``: each topology's full grid as
+    lanes of one ``run_serving_batched`` windowed program). Records the
+    wall-clock speedup (acceptance target >= 3x on this box — the measured
+    ratio is recorded either way), compiles == distinct topologies on the
+    batched leg, and the per-lane bit-identity verdict of every study row
+    against the sequential path. Both legs start from a cleared in-memory
+    AOT cache so each pays its own compiles honestly.
+
+    Also measures the satellite win that rides along even at L=1: one
+    stacked ``device_get`` of the whole WindowReport pytree vs the
+    field-by-field fetch the session layer used before (per-window host
+    transfer cost, us).
+    """
+    import math
+
+    import jax
+    from repro.core import MemSimConfig, SimSession
+    from repro.core.engine import _aot_cache, _aot_lock
+    from repro.core.session import report_fetch
+    from repro.perfmodel import effective_bw
+    from repro.traces import BENCHMARKS
+
+    smoke = bool(os.environ.get("MEMSIM_SMOKE"))
+    loads = (0.5, 1.0, 2.0, 4.0)
+    mixtures = ("chat", "summarize")  # 8 lanes/topology: the full grid
+    kw = dict(loads=loads, mixtures=mixtures,
+              horizon=4_000 if smoke else 10_000, window_cycles=400)
+    n_topologies = 2  # the study default: plain DRAM vs CXL-heavy tiered
+
+    def cleared():
+        with _aot_lock:
+            _aot_cache.clear()
+
+    cleared()
+    tm_seq: Dict = {}
+    t0 = time.time()
+    rows_seq = effective_bw.serving_study(batch_lanes=False,
+                                          timings=tm_seq, **kw)
+    wall_seq = time.time() - t0
+
+    cleared()
+    tm_bat: Dict = {}
+    t0 = time.time()
+    rows_bat = effective_bw.serving_study(batch_lanes=True,
+                                          timings=tm_bat, **kw)
+    wall_bat = time.time() - t0
+    speedup = wall_seq / max(wall_bat, 1e-9)
+
+    def same(a, b):
+        if isinstance(a, dict):
+            return (isinstance(b, dict) and a.keys() == b.keys()
+                    and all(same(a[k], b[k]) for k in a))
+        if isinstance(a, float) and isinstance(b, float):
+            return a == b or (math.isnan(a) and math.isnan(b))
+        return a == b
+
+    lane_bits = [same(a, b) for a, b in zip(rows_seq, rows_bat)]
+    bit_ok = (len(rows_seq) == len(rows_bat) and all(lane_bits))
+
+    # satellite: per-window host-transfer cost, stacked vs field-by-field
+    ses = SimSession.open(MemSimConfig(channels=2), capacity=256)
+    ses.append(BENCHMARKS["trace_example"](n=24, gap=4))
+    ses.advance(2_000)
+    reps = 50
+    fields = report_fetch(ses._state)
+    t0 = time.time()
+    for _ in range(reps):
+        jax.device_get(fields)
+    stacked_us = (time.time() - t0) * 1e6 / reps
+    t0 = time.time()
+    for _ in range(reps):
+        for leaf in fields:
+            jax.device_get(leaf)
+    fieldwise_us = (time.time() - t0) * 1e6 / reps
+
+    lanes = len(rows_bat) // n_topologies
+    run_seq = tm_seq.get("run_s", 0.0)
+    run_bat = tm_bat.get("run_s", 0.0)
+    _ENGINE["serving_batched"] = {
+        "loads": list(loads),
+        "mixtures": list(mixtures),
+        "lanes_per_topology": lanes,
+        "topologies": n_topologies,
+        # batch_mode "auto" resolves per backend: "lanes" (lax.map of the
+        # single-lane engine) on CPU, "vmap" (shared clock) elsewhere —
+        # record the context the measured ratio belongs to
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "batch_mode": ("lanes" if jax.default_backend() == "cpu"
+                       else "vmap"),
+        "wall_sequential_s": round(wall_seq, 2),
+        "wall_batched_s": round(wall_bat, 2),
+        "speedup": round(speedup, 2),
+        "speedup_run_only": round(run_seq / max(run_bat, 1e-9), 2),
+        "compiles_sequential": tm_seq.get("compiles"),
+        "compiles_batched": tm_bat.get("compiles"),
+        "compiles_equals_topologies":
+            tm_bat.get("compiles") == n_topologies,
+        "run_s_sequential": round(tm_seq.get("run_s", 0.0), 3),
+        "run_s_batched": round(tm_bat.get("run_s", 0.0), 3),
+        "compile_s_sequential": round(tm_seq.get("compile_s", 0.0), 3),
+        "compile_s_batched": round(tm_bat.get("compile_s", 0.0), 3),
+        "bit_identical": bit_ok,
+        "lane_bit_identical": lane_bits,
+        "host_fetch_stacked_us": round(stacked_us, 1),
+        "host_fetch_fieldwise_us": round(fieldwise_us, 1),
+        "cells": rows_bat,
+    }
+    _row("engine_serving_batched", wall_bat * 1e6 / max(len(rows_bat), 1),
+         f"lanes={lanes};topos={n_topologies};"
+         f"compiles={tm_bat.get('compiles')};"
+         f"speedup_vs_sequential={speedup:.2f}x;"
+         f"speedup_run_only={run_seq / max(run_bat, 1e-9):.2f}x;"
+         f"bit_identical={bit_ok};"
+         f"fetch_stacked_us={stacked_us:.0f};"
+         f"fetch_fieldwise_us={fieldwise_us:.0f}")
+
+
 def bench_param_grid() -> None:
     """Tentpole acceptance: a (2 timing values x 2 page policies x 2
     schedulers x 2 queue depths) grid of RuntimeParams lanes runs through
@@ -1279,6 +1402,7 @@ _SECTIONS = [
     ("dvfs", bench_dvfs, True),
     ("cxl_tier", bench_cxl_tier, True),
     ("serving", bench_serving, True),
+    ("serving_batched", bench_serving_batched, True),
     ("param_grid", bench_param_grid, True),
     ("topo_grid", bench_topo_grid, True),
     ("mesh", bench_mesh_scaleout, True),

@@ -28,6 +28,7 @@ from repro.core.engine import (
     topo_grid_points,
 )
 from repro.core.session import SimSession, WindowReport
+from repro.core.session_batch import SessionBatch, SessionLane
 from repro.core.sweep_stream import stream_sweep
 from repro.core.ideal import simulate_ideal, ideal_latencies
 from repro.core import stats
@@ -42,6 +43,8 @@ __all__ = [
     "SimResult",
     "Trace",
     "SimSession",
+    "SessionBatch",
+    "SessionLane",
     "WindowReport",
     "simulate",
     "simulate_fast",

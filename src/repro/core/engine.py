@@ -187,58 +187,86 @@ def _next_event(topo: Topology, sched: ParamSchedule, trace: Trace,
     the clock actually stands. This is what keeps the engine bit-exact vs
     a per-cycle reference that re-resolves ``params_at`` every cycle.
     """
-    def bound(_):
-        rp = sched.params_at(nxt)
-        bank = state.bank
-        st = bank.st
-        in_wait = wait_mask(st)
-        is_idle = st == S_IDLE
-        is_sref = st == S_SREF
-
-        eligible, cmds, legal_at = issue_eligibility(topo, sched,
-                                                     state.timing, bank, nxt)
-        blocked_bid = (cmds != CMD_NOP) & ~eligible
-
-        # gate: nothing can happen at cycle `nxt` except timer/counter ticks
-        _, bq_valid = state.bank_q.peek_valid()
-        inert = in_wait | blocked_bid | ((is_idle | is_sref) & ~bq_valid)
-        gate = inert.all()
-
-        # per-bank FSM-local bound: WAIT expiry, refresh window, SREF entry
-        # (the Pallas backend computes it with the packed-ABI kernel twin so
-        # both backends share one definition each, validated against the
-        # other)
-        if topo.fsm_backend == "pallas":
-            from repro.kernels.bank_fsm.ops import (
-                bank_event_bound,
-                default_interpret,
-            )
-            from repro.kernels.bank_fsm.ref import pack_state
-
-            local = bank_event_bound(pack_state(bank), nxt, sched, True,
-                                     default_interpret(), topo=topo)
-        else:
-            local = cycles_until_actionable(rp_for_banks(topo, rp), bank,
-                                            nxt)
-        # a blocked bid becomes actionable the cycle its command turns legal
-        per_bank = jnp.where(blocked_bid, legal_at - nxt, local).min()
-
-        n = trace.num_requests
-        idx = jnp.minimum(state.next_arrival, n - 1)
-        arrival = jnp.where(state.next_arrival < n, trace.t[idx] - nxt, _INF)
-        b = jnp.minimum(jnp.minimum(per_bank, arrival), horizon - nxt)
-        # the next operating-point change is an event: no closed-form bound
-        # computed under this segment's params may outlive the segment
-        b = jnp.minimum(b, sched.next_boundary(nxt) - nxt)
-        return jnp.where(gate, jnp.maximum(b, 0), 0).astype(jnp.int32)
-
-    # cheap scalar necessary conditions first: with work in the global
-    # queues no cycle is inert, so saturated phases pay two scalar compares
-    # per executed cycle and the full bound (eligibility gathers, vectorized
-    # mins) only runs when a skip is possible. Under vmap the cond lowers to
-    # a select — the price of the shared batch program, same as the stepper.
     maybe = state.req_q.empty() & state.resp_q.empty()
-    return jax.lax.cond(maybe, bound, lambda _: jnp.int32(0), None)
+    return jax.lax.cond(
+        maybe,
+        lambda _: _event_bound(topo, sched, trace, state, nxt, horizon),
+        lambda _: jnp.int32(0), None)
+
+
+def _event_bound(topo: Topology, sched: ParamSchedule, trace: Trace,
+                 state: SimState, nxt: Array, horizon: Array) -> Array:
+    """The full event-horizon bound of :func:`_next_event`, without its
+    cheap global-queue pre-gate. Module-level so the batched bodies can
+    hoist that gate to ONE scalar ``lax.cond`` over all lanes (the joint
+    min is 0 whenever any lane has queued work, so the whole vectorized
+    bound — eligibility gathers, per-bank mins — can be skipped for the
+    batch at once; a per-lane cond would lower to a select under vmap and
+    evaluate it every executed cycle)."""
+    rp = sched.params_at(nxt)
+    bank = state.bank
+    st = bank.st
+    in_wait = wait_mask(st)
+    is_idle = st == S_IDLE
+    is_sref = st == S_SREF
+
+    eligible, cmds, legal_at = issue_eligibility(topo, sched,
+                                                 state.timing, bank, nxt)
+    blocked_bid = (cmds != CMD_NOP) & ~eligible
+
+    # gate: nothing can happen at cycle `nxt` except timer/counter ticks
+    _, bq_valid = state.bank_q.peek_valid()
+    inert = in_wait | blocked_bid | ((is_idle | is_sref) & ~bq_valid)
+    gate = inert.all()
+
+    # per-bank FSM-local bound: WAIT expiry, refresh window, SREF entry
+    # (the Pallas backend computes it with the packed-ABI kernel twin so
+    # both backends share one definition each, validated against the
+    # other)
+    if topo.fsm_backend == "pallas":
+        from repro.kernels.bank_fsm.ops import (
+            bank_event_bound,
+            default_interpret,
+        )
+        from repro.kernels.bank_fsm.ref import pack_state
+
+        local = bank_event_bound(pack_state(bank), nxt, sched, True,
+                                 default_interpret(), topo=topo)
+    else:
+        local = cycles_until_actionable(rp_for_banks(topo, rp), bank,
+                                        nxt)
+    # a blocked bid becomes actionable the cycle its command turns legal
+    per_bank = jnp.where(blocked_bid, legal_at - nxt, local).min()
+
+    n = trace.num_requests
+    idx = jnp.minimum(state.next_arrival, n - 1)
+    arrival = jnp.where(state.next_arrival < n, trace.t[idx] - nxt, _INF)
+    b = jnp.minimum(jnp.minimum(per_bank, arrival), horizon - nxt)
+    # the next operating-point change is an event: no closed-form bound
+    # computed under this segment's params may outlive the segment
+    b = jnp.minimum(b, sched.next_boundary(nxt) - nxt)
+    return jnp.where(gate, jnp.maximum(b, 0), 0).astype(jnp.int32)
+
+
+def _batch_event_deltas(topo: Topology, traces: Trace,
+                        scheds: ParamSchedule, states: SimState,
+                        nxt: Array, horizon: Array) -> Array:
+    """Per-lane event bounds for the shared-clock batch bodies, with the
+    global-queue pre-gate hoisted to ONE scalar cond: whenever any lane
+    has queued work its own bound is 0, hence the joint min is 0 — so the
+    vectorized bound only runs when every lane might skip. This restores
+    the single-lane engine's saturated-phase fast path (two compares per
+    lane per executed cycle) that a vmapped per-lane cond would lose to
+    select-lowering."""
+    maybe = jax.vmap(
+        lambda st: st.req_q.empty() & st.resp_q.empty())(states)
+    lanes = maybe.shape[0]
+    return jax.lax.cond(
+        maybe.all(),
+        lambda: jax.vmap(
+            lambda tr, sc, st: _event_bound(topo, sc, tr, st, nxt, horizon)
+        )(traces, scheds, states),
+        lambda: jnp.zeros((lanes,), jnp.int32))
 
 
 def _apply_skip(topo: Topology, sched: ParamSchedule, state: SimState,
@@ -357,10 +385,8 @@ def _run_skip_batch_core(topo: Topology, traces: Trace, num_cycles: Array,
             states = jax.vmap(
                 lambda tr, sc, st: cycle_step(topo, sc, tr, st, t)
             )(traces, scheds, states)
-            deltas = jax.vmap(
-                lambda tr, sc, st: _next_event(topo, sc, tr, st, t + 1,
-                                               num_cycles)
-            )(traces, scheds, states)
+            deltas = _batch_event_deltas(topo, traces, scheds, states,
+                                         t + 1, num_cycles)
         delta = deltas.min()
         states = jax.vmap(
             lambda sc, st: _apply_skip(topo, sc, st, delta, t + 1)
@@ -425,6 +451,93 @@ def _run_window_core(topo: Topology, trace: Trace, t_start: Array,
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_window_jit(topo, trace, t_start, t_end, sched, state):
     return _run_window_core(topo, trace, t_start, t_end, sched, state)
+
+
+def _run_window_batch_core(topo: Topology, traces: Trace, t_start: Array,
+                           t_end: Array, scheds: ParamSchedule,
+                           states: SimState) -> Tuple[SimState, Array]:
+    """Windowed variant of :func:`_run_skip_batch_core`: advance L carried
+    lane states from ``t_start`` to exactly ``t_end`` on a SHARED clock.
+
+    This is the engine half of
+    :class:`repro.core.session_batch.SessionBatch` — L independent
+    sessions (each with its own arrival buffer, ParamSchedule, queue
+    limits and cumulative counters stacked on a leading lane axis) advance
+    through the same window as lanes of ONE program. The skip delta is the
+    joint min over each lane's inert bound, additionally capped at the
+    window boundary; both caps only ever *shrink* the jump, and executing
+    a provably inert cycle is bit-identical to skipping it, so every lane's
+    state after any window partition equals its single-session
+    (:func:`_run_window_core`) state field-for-field. The while condition
+    stays scalar, so XLA keeps the stacked carried buffers in-place."""
+    t_end = jnp.asarray(t_end, jnp.int32)
+
+    def cond(carry):
+        _, t, _ = carry
+        return t < t_end
+
+    def body(carry):
+        states, t, steps = carry
+        if topo.fsm_backend == "fused":
+            from repro.core.fused_step import fused_cycle_step_batch
+
+            states, deltas = fused_cycle_step_batch(topo, scheds, traces,
+                                                    states, t, t_end)
+        else:
+            states = jax.vmap(
+                lambda tr, sc, st: cycle_step(topo, sc, tr, st, t)
+            )(traces, scheds, states)
+            deltas = _batch_event_deltas(topo, traces, scheds, states,
+                                         t + 1, t_end)
+        delta = deltas.min()
+        states = jax.vmap(
+            lambda sc, st: _apply_skip(topo, sc, st, delta, t + 1)
+        )(scheds, states)
+        return (states, t + 1 + delta, steps + 1)
+
+    states, _, steps = jax.lax.while_loop(
+        cond, body, (states, jnp.asarray(t_start, jnp.int32), jnp.int32(0)))
+    return states, steps
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_window_batch_jit(topo, traces, t_start, t_end, scheds, states):
+    return _run_window_batch_core(topo, traces, t_start, t_end, scheds,
+                                  states)
+
+
+def _run_window_lanes_core(topo: Topology, traces: Trace, t_start: Array,
+                           t_end: Array, scheds: ParamSchedule,
+                           states: SimState) -> Tuple[SimState, Array]:
+    """Windowed lane batch in "lanes" mode: ``lax.map`` the single-lane
+    window engine over the stacked lanes inside ONE device program.
+
+    The counterpart of :func:`_run_window_batch_core` with the same
+    mode split as :func:`simulate_batch`: the shared-clock vmap body pays
+    select-lowered conds and a joint skip held back by the busiest lane —
+    a good trade on accelerators, where the lane axis vectorizes into
+    hardware lanes, and a bad one on CPU. Here each lane runs the exact
+    single-lane op stream (scalar while condition, in-place carried
+    buffers, *independent* cycle skipping) sequentially on-device, so the
+    whole batch still costs one dispatch, one compile and one stacked
+    report fetch per window, while per-lane step counts — not just final
+    states — match :func:`_run_window_core` exactly. Unlike vmapping the
+    while loop itself, the scan over lanes needs no live-masking of the
+    carry: each iteration's loop is already scalar.
+
+    Returns (stacked states, per-lane executed-step counts ``[L]``)."""
+
+    def one(args):
+        tr, sc, st = args
+        return _run_window_core(topo, tr, t_start, t_end, sc, st)
+
+    return jax.lax.map(one, (traces, scheds, states))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_window_lanes_jit(topo, traces, t_start, t_end, scheds, states):
+    return _run_window_lanes_core(topo, traces, t_start, t_end, scheds,
+                                  states)
 
 
 def _run_scan_core(topo: Topology, trace: Trace, num_cycles: int,
@@ -827,6 +940,20 @@ def _jit_name(jitted) -> str:
     return getattr(fn, "__qualname__", None) or repr(jitted)
 
 
+_dtype_str: Dict = {}
+
+
+def _dtype_name(dt) -> str:
+    """``str(dtype)`` memoized on the dtype object. The AOT probe runs
+    once per *window* on the session paths — ~70 pytree leaves each — and
+    numpy's dtype ``__str__`` costs microseconds per call, which profiled
+    as the third-largest host cost of a windowed advance."""
+    s = _dtype_str.get(dt)
+    if s is None:
+        s = _dtype_str[dt] = str(dt)
+    return s
+
+
 def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
     """Phase one of the split AOT pipeline: trace + lower (holds the GIL,
     so callers run it sequentially). Returns ``(key, lowered, lower_s,
@@ -841,7 +968,7 @@ def _aot_lower(jitted, all_args: tuple, dyn_args: tuple, static_key: tuple):
     in-memory cache, and counts as a cache hit, not a fresh compile
     (``timings["compiles"]`` stays 0; the load wall is accounted in
     ``exec_cache.stats()["load_s"]``)."""
-    shapes = tuple((tuple(x.shape), str(x.dtype))
+    shapes = tuple((tuple(x.shape), _dtype_name(x.dtype))
                    for x in jax.tree_util.tree_leaves(dyn_args))
     mem_key = (id(jitted), static_key, shapes)
     disk_key = (exec_cache.make_key(_jit_name(jitted), static_key, shapes)

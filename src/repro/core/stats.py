@@ -84,9 +84,11 @@ def latency_summary(result: SimResult) -> Dict[str, float]:
 def latency_percentiles(x: np.ndarray,
                         qs: Tuple[int, ...] = (50, 95, 99)) -> Dict[str, float]:
     """``{"p50": ..., "p95": ..., "p99": ...}`` of a latency sample,
-    NaN-with-count on empty input (the serving studies report these for
-    per-request queueing and service times)."""
-    x = np.asarray(x)
+    NaN-with-count on empty input per the ``_mean_std`` convention (the
+    serving studies report these for per-request queueing and service
+    times, and an idle lane — zero completions in a window or a whole
+    study point — must flag, not raise)."""
+    x = np.asarray(x, np.float64).ravel()
     out = {f"p{q}": (float(np.percentile(x, q)) if x.size else float("nan"))
            for q in qs}
     out["n"] = int(x.size)

@@ -482,23 +482,53 @@ def saturation_knee(loads: Sequence[float],
     load whose throughput gain falls below ``efficiency`` of the offered
     gain (doubling the load no longer comes close to doubling the output —
     the serving system has gone memory-bound). ``None`` when the curve
-    still scales at its last point."""
+    still scales at its last point, and ``None`` on curve segments that
+    carry no evidence — non-finite throughput, or an all-idle lane whose
+    curve sits at zero (a 0 -> 0 step is not a knee, it is the NaN-with-
+    flag convention's "nothing completed" case)."""
     for i in range(1, len(loads)):
+        prev, cur = float(tput[i - 1]), float(tput[i])
+        if not (np.isfinite(prev) and np.isfinite(cur)) or prev <= 0:
+            continue
         load_gain = loads[i] / max(loads[i - 1], 1e-9)
-        tput_gain = tput[i] / max(tput[i - 1], 1e-9)
+        tput_gain = cur / prev
         if tput_gain < efficiency * load_gain:
             return float(loads[i])
     return None
+
+
+def serving_row(tname: str, mix: str, load: float, res) -> Dict:
+    """One serving-study row off a :class:`repro.serving.ServingResult`.
+    Empty completion sets (an all-blocked lane: zero windows planned or
+    zero requests ever finished) flag NaN per the ``_mean_std``
+    convention instead of raising on ``mean``/``min`` of nothing."""
+    from repro.core import stats
+
+    ab = np.asarray(res.admitted_batch, np.float64)
+    bt = np.asarray(res.batch_target, np.float64)
+    return {
+        "topology": tname, "mixture": mix,
+        "offered_load_per_kcycle": float(load),
+        "offered": res.offered, "completed": res.completed,
+        "tokens": res.tokens, "cycles": res.cycles,
+        "tokens_per_kcycle": res.tokens_per_kcycle,
+        "admitted_batch_mean": (float(ab.mean()) if ab.size
+                                else float("nan")),
+        "admitted_batch_min": (int(ab.min()) if ab.size else 0),
+        "batch_target_mean": (float(bt.mean()) if bt.size
+                              else float("nan")),
+        "queueing": stats.latency_percentiles(res.queueing),
+        "service": stats.latency_percentiles(res.service),
+    }
 
 
 def serving_study(loads: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
                   mixtures: Sequence[str] = ("chat",),
                   topologies=None, *, process: str = "poisson",
                   horizon: int = 10_000, window_cycles: int = 400,
-                  serving=None, seed: int = 0,
+                  serving=None, seed: int = 0, batch_lanes: bool = True,
                   timings: Optional[dict] = None) -> List[Dict]:
-    """Closed-loop serving sweep: offered load x length mixture x topology,
-    each cell one :func:`repro.serving.run_serving` co-simulation.
+    """Closed-loop serving sweep: offered load x length mixture x topology.
 
     Unlike every open-loop study above, the address stream here is not
     fixed up front — the continuous-batching scheduler emits each window's
@@ -506,6 +536,14 @@ def serving_study(loads: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
     so tokens/sec saturates (the knee :func:`saturation_knee` finds) and
     the admitted batch shrinks under memory backpressure instead of the
     trace blindly queueing deeper.
+
+    With ``batch_lanes`` (the default) each topology submits its whole
+    load x mixture grid as lanes of ONE
+    :func:`repro.serving.run_serving_batched` program — scenario count
+    stops being a wall-clock multiplier — and the rows are bit-identical
+    to the sequential (``batch_lanes=False``) path, which remains for
+    runs whose sessions cannot share a compiled shape (heterogeneous
+    per-scenario capacities) or for debugging one scenario at a time.
 
     ``topologies`` is ``[(name, cfg, params-or-None), ...]``; the default
     pairs a plain 2-channel DRAM device against a CXL-heavy tiered device
@@ -519,8 +557,8 @@ def serving_study(loads: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
     the AIMD target trajectory mean), and request-level p50/p95/p99
     queueing + service percentiles (:func:`repro.core.stats.latency_percentiles`).
     """
-    from repro.core import stats
-    from repro.serving import ServingConfig, generate_requests, run_serving
+    from repro.serving import (ServingConfig, generate_request_batch,
+                               run_serving, run_serving_batched)
 
     serving = serving or ServingConfig()
     if topologies is None:
@@ -533,9 +571,14 @@ def serving_study(loads: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
                             link_ccd_scale=8)),
         ]
 
-    scenarios = {(mix, load): generate_requests(
-        process=process, mixture=mix, rate_per_kcycle=load, horizon=horizon,
-        seed=seed) for mix in mixtures for load in loads}
+    # every lane reuses the study seed verbatim (not spawn_seeds children):
+    # a batched and a sequential run of the same study must feed identical
+    # scenarios for the bit-identity contract to be checkable
+    keys = [(mix, load) for mix in mixtures for load in loads]
+    scenarios = dict(zip(keys, generate_request_batch(
+        [dict(process=process, mixture=mix, rate_per_kcycle=load,
+              horizon=horizon) for mix, load in keys],
+        seed=seed, independent_streams=False)))
 
     # fixed study-wide capacity -> one compiled program per topology
     def emissions(reqs):
@@ -551,33 +594,25 @@ def serving_study(loads: Sequence[float] = (0.5, 1.0, 2.0, 4.0),
 
     rows = []
     for tname, cfg, params in topologies:
+        if batch_lanes:
+            res_by_key = dict(zip(keys, run_serving_batched(
+                cfg, [scenarios[k] for k in keys], serving, params=params,
+                window_cycles=window_cycles, capacity=capacity,
+                timings=timings, seed=seed)))
+        else:
+            res_by_key = {k: run_serving(
+                cfg, scenarios[k], serving, params=params,
+                window_cycles=window_cycles, capacity=capacity,
+                timings=timings, seed=seed) for k in keys}
         for mix in mixtures:
-            curve = []
-            for load in loads:
-                reqs = scenarios[(mix, load)]
-                res = run_serving(cfg, reqs, serving, params=params,
-                                  window_cycles=window_cycles,
-                                  capacity=capacity, timings=timings,
-                                  seed=seed)
-                row = {
-                    "topology": tname, "mixture": mix,
-                    "offered_load_per_kcycle": float(load),
-                    "offered": res.offered, "completed": res.completed,
-                    "tokens": res.tokens, "cycles": res.cycles,
-                    "tokens_per_kcycle": res.tokens_per_kcycle,
-                    "admitted_batch_mean": float(np.mean(res.admitted_batch)),
-                    "admitted_batch_min": int(np.min(res.admitted_batch)),
-                    "batch_target_mean": float(np.mean(res.batch_target)),
-                    "queueing": stats.latency_percentiles(res.queueing),
-                    "service": stats.latency_percentiles(res.service),
-                }
-                curve.append(row)
-                rows.append(row)
+            curve = [serving_row(tname, mix, load, res_by_key[(mix, load)])
+                     for load in loads]
             knee = saturation_knee([r["offered_load_per_kcycle"]
                                     for r in curve],
                                    [r["tokens_per_kcycle"] for r in curve])
             for r in curve:
                 r["knee_load"] = knee
+            rows.extend(curve)
     return rows
 
 

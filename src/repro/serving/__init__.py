@@ -23,9 +23,17 @@ from repro.serving.scheduler import (
     ContinuousBatchScheduler,
     ServingConfig,
     ServingResult,
+    observe_batch,
+    plan_window_batch,
     run_serving,
+    run_serving_batched,
 )
-from repro.serving.workload import Request, generate_requests
+from repro.serving.workload import (
+    Request,
+    generate_request_batch,
+    generate_requests,
+    spawn_seeds,
+)
 
 __all__ = [
     "ContinuousBatchScheduler",
@@ -34,6 +42,11 @@ __all__ = [
     "Request",
     "ServingConfig",
     "ServingResult",
+    "generate_request_batch",
     "generate_requests",
+    "observe_batch",
+    "plan_window_batch",
     "run_serving",
+    "run_serving_batched",
+    "spawn_seeds",
 ]

@@ -114,25 +114,16 @@ class KVPager:
 
     # ---- address generation ------------------------------------------------
 
-    def _addr(self, bid: int, offset: int, hot: bool) -> int:
-        idx = self.kv_base + bid * self.block_words + offset
-        if not self.tiered:
-            return idx & self.addr_mask
-        place = dram_words if hot else cxl_words
-        return int(place(idx, self.interleave_log2,
-                         self.cxl_frac_log2)) & self.addr_mask
-
-    def _is_hot(self, rid: int, chain_pos: int) -> bool:
-        return chain_pos >= len(self._chains[rid]) - self.hot_blocks
-
-    def append_addrs(self, rid: int, tokens: int = 1) -> List[int]:
+    def append_addrs(self, rid: int, tokens: int = 1) -> np.ndarray:
         """Word addresses of ``tokens`` new tokens' KV writes at the
         sequence tail, allocating blocks as the tail fills. Raises if the
         pool is dry — schedulers gate on :meth:`can_admit` /
-        :meth:`page_state` first."""
+        :meth:`page_state` first. Vectorized: one block-sized chunk per
+        allocation instead of a per-word Python loop (same addresses)."""
         chain = self._chains[rid]
-        out = []
-        for _ in range(tokens * self.words_per_token):
+        remaining = tokens * self.words_per_token
+        chunks = []
+        while remaining:
             if not chain or self._fill[rid] == self.block_words:
                 if not self._free:
                     raise RuntimeError(
@@ -140,30 +131,52 @@ class KVPager:
                         "admission must gate on can_admit()")
                 chain.append(self._free.pop())
                 self._fill[rid] = 0
+            take = min(remaining, self.block_words - self._fill[rid])
             # the tail block is by definition inside the hot window
-            out.append(self._addr(chain[-1], self._fill[rid], hot=True))
-            self._fill[rid] += 1
-        return out
+            chunks.append(self.kv_base + chain[-1] * self.block_words
+                          + self._fill[rid]
+                          + np.arange(take, dtype=np.int64))
+            self._fill[rid] += take
+            remaining -= take
+        idx = (np.concatenate(chunks) if chunks
+               else np.zeros(0, np.int64))
+        if self.tiered:
+            idx = np.asarray(dram_words(idx, self.interleave_log2,
+                                        self.cxl_frac_log2), np.int64)
+        return idx & self.addr_mask
 
     def gather_addrs(self, rid: int, n: int,
-                     rng: np.random.Generator) -> List[int]:
+                     rng: np.random.Generator) -> np.ndarray:
         """Word addresses of an ``n``-read attention gather over the
         sequence's KV: recency-weighted — most reads hit the hot tail
         window (DRAM on tiered topologies), the rest the demoted cold
-        blocks (CXL)."""
+        blocks (CXL). Vectorized: the hot/cold choices, block positions
+        and in-block offsets are batched draws (still deterministic per
+        ``rng`` state)."""
         chain = self._chains[rid]
         if not chain:
-            return []
-        out = []
+            return np.zeros(0, np.int64)
         n_chain = len(chain)
-        for _ in range(n):
-            if n_chain > self.hot_blocks and rng.random() < 0.25:
-                pos = int(rng.integers(0, n_chain - self.hot_blocks))
-            else:
-                pos = int(rng.integers(max(0, n_chain - self.hot_blocks),
-                                       n_chain))
-            limit = (self._fill[rid] if pos == n_chain - 1
-                     else self.block_words)
-            off = int(rng.integers(0, max(limit, 1)))
-            out.append(self._addr(chain[pos], off, self._is_hot(rid, pos)))
-        return out
+        hot_lo = max(0, n_chain - self.hot_blocks)
+        if n_chain > self.hot_blocks:
+            cold = rng.random(n) < 0.25
+            pos = np.where(cold,
+                           rng.integers(0, n_chain - self.hot_blocks,
+                                        size=n),
+                           rng.integers(hot_lo, n_chain, size=n))
+        else:
+            pos = rng.integers(hot_lo, n_chain, size=n)
+        limit = np.where(pos == n_chain - 1,
+                         max(self._fill[rid], 1), self.block_words)
+        off = (rng.random(n) * limit).astype(np.int64)
+        idx = (self.kv_base
+               + np.asarray(chain, np.int64)[pos] * self.block_words + off)
+        if self.tiered:
+            hot = pos >= n_chain - self.hot_blocks
+            idx = np.where(
+                hot,
+                np.asarray(dram_words(idx, self.interleave_log2,
+                                      self.cxl_frac_log2), np.int64),
+                np.asarray(cxl_words(idx, self.interleave_log2,
+                                     self.cxl_frac_log2), np.int64))
+        return idx & self.addr_mask

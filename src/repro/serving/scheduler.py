@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Set
 import numpy as np
 
 from repro.core.session import SimSession, WindowReport
+from repro.core.session_batch import SessionBatch, _per_lane
 from repro.serving.kv_pager import KVPager
 from repro.serving.workload import Request
 from repro.traces.llm_workload import dram_words
@@ -87,7 +88,9 @@ class ServingResult:
     batch_target: List[float]          # AIMD target per window
     queueing: np.ndarray               # per completed request, cycles
     service: np.ndarray
-    session: SimSession
+    session: object                    # SimSession, or a SessionLane view
+                                       # when the run came from the
+                                       # lane-batched path
 
     @property
     def tokens_per_kcycle(self) -> float:
@@ -309,3 +312,117 @@ def run_serving(cfg, requests: List[Request],
         service=np.asarray([s.done_at - s.joined for s in done], np.int64),
         session=session,
     )
+
+
+# --------------------------------------------------------------------------
+# the lane-batched closed loop
+# --------------------------------------------------------------------------
+
+def plan_window_batch(scheds: List[ContinuousBatchScheduler], t0: int,
+                      t1: int, active: Optional[List[bool]] = None):
+    """One ``plan_window`` per *live* lane — the per-lane arrival payload
+    list :meth:`repro.core.SessionBatch.advance` takes (drained lanes get
+    ``None`` and emit nothing, exactly like their sequential run after its
+    loop exited)."""
+    if active is None:
+        active = [True] * len(scheds)
+    return [s.plan_window(t0, t1) if live else None
+            for s, live in zip(scheds, active)]
+
+
+def observe_batch(scheds: List[ContinuousBatchScheduler],
+                  reports: List[WindowReport],
+                  active: Optional[List[bool]] = None) -> None:
+    """Fold one batched window's per-lane reports back into each live
+    lane's scheduler. The reports all come from a SINGLE stacked
+    ``device_get`` inside ``SessionBatch.advance`` — one host transfer
+    per window for the whole grid, not one per lane per field."""
+    if active is None:
+        active = [True] * len(scheds)
+    for s, rep, live in zip(scheds, reports, active):
+        if live:
+            s.observe(rep)
+
+
+def run_serving_batched(cfg, request_lists: List[List[Request]],
+                        serving: Optional[ServingConfig] = None, *,
+                        params=None, pagers: Optional[List[KVPager]] = None,
+                        window_cycles: int = 2000, capacity: int = 8192,
+                        max_cycles: Optional[int] = None,
+                        batch_mode: str = "auto",
+                        timings: Optional[dict] = None, seed: int = 0,
+                        seeds: Optional[List[int]] = None
+                        ) -> List[ServingResult]:
+    """L closed loops on ONE windowed program: lane ``i`` serves
+    ``request_lists[i]`` through its own scheduler/pager while all lanes'
+    device states advance as a :class:`repro.core.SessionBatch`.
+
+    Per-lane results are bit-identical to L separate :func:`run_serving`
+    calls with the same arguments: each lane's scheduler sees exactly the
+    reports its sequential run would (the batched engine is bit-exact per
+    lane), and a lane whose sequential loop would have exited — drained
+    and past its last arrival, or at ``max_cycles`` — stops planning and
+    observing at that same cycle (recorded as its ``cycles``), riding
+    inert while slower lanes finish. All lanes share ``cfg``, ``capacity``
+    and ``window_cycles`` (the compiled shape axes — heterogeneous
+    capacities need the sequential path); ``params``/``seeds`` may vary
+    per lane. ``batch_mode`` picks the engine's execution strategy
+    (``"lanes"``/``"vmap"``/``"auto"`` — see
+    :class:`repro.core.SessionBatch`); both modes are bit-exact per lane.
+    ``timings["compiles"]`` counts 1 per distinct
+    ``(topology, capacity, lanes, segments)``.
+    """
+    serving = serving or ServingConfig()
+    lanes = len(request_lists)
+    if lanes < 1:
+        raise ValueError("request_lists must name at least one lane")
+    if pagers is None:
+        pagers = [KVPager(tiered=cfg.tiers > 1,
+                          interleave_log2=cfg.tier_interleave_log2,
+                          cxl_frac_log2=cfg.tier_cxl_frac_log2)
+                  for _ in range(lanes)]
+    elif len(pagers) != lanes:
+        raise ValueError(f"{len(pagers)} pagers for {lanes} lanes")
+    lane_seeds = _per_lane(seed if seeds is None else seeds, lanes, "seeds")
+    batch = SessionBatch.open(cfg, lanes, capacity=capacity, params=params,
+                              batch_mode=batch_mode, timings=timings)
+    scheds = [ContinuousBatchScheduler(serving, pagers[i], request_lists[i],
+                                       queue_limit=cfg.queue_size,
+                                       seed=lane_seeds[i])
+              for i in range(lanes)]
+    last_arrival = [max((r.arrival for r in reqs), default=0)
+                    for reqs in request_lists]
+    lane_max = [(la + 400 * window_cycles if max_cycles is None
+                 else max_cycles) for la in last_arrival]
+    done_cycle: List[Optional[int]] = [None] * lanes
+    while True:
+        t0 = batch.cycle
+        for i in range(lanes):
+            if done_cycle[i] is None and (
+                    t0 >= lane_max[i]
+                    or (scheds[i].idle() and t0 > last_arrival[i])):
+                done_cycle[i] = t0
+        active = [d is None for d in done_cycle]
+        if not any(active):
+            break
+        arrivals = plan_window_batch(scheds, t0, t0 + window_cycles, active)
+        reports = batch.advance(window_cycles, arrivals)
+        observe_batch(scheds, reports, active)
+
+    results = []
+    for i in range(lanes):
+        done = [s for s in scheds[i].finished if s.done_at >= 0]
+        results.append(ServingResult(
+            offered=len(request_lists[i]),
+            completed=len(done),
+            tokens=scheds[i].tokens,
+            cycles=done_cycle[i],
+            admitted_batch=scheds[i].admitted_batch,
+            batch_target=scheds[i].batch_target,
+            queueing=np.asarray([s.joined - s.req.arrival for s in done],
+                                np.int64),
+            service=np.asarray([s.done_at - s.joined for s in done],
+                               np.int64),
+            session=batch.lane_view(i, done_cycle[i]),
+        ))
+    return results

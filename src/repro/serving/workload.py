@@ -112,3 +112,27 @@ def generate_requests(process: str = "poisson", mixture: str = "chat",
     p, d = sample_lengths(mixture, t.size, rng)
     return [Request(rid=i, arrival=int(t[i]), prompt_tokens=int(p[i]),
                     decode_tokens=int(d[i])) for i in range(t.size)]
+
+
+def spawn_seeds(seed: int, lanes: int) -> List[int]:
+    """``lanes`` independent child seeds of ``seed`` (SeedSequence spawn),
+    for per-lane request streams that must not be correlated across the
+    lanes of a batched study. Deterministic per (seed, lanes)."""
+    ss = np.random.SeedSequence(seed)
+    return [int(child.generate_state(1)[0]) for child in ss.spawn(lanes)]
+
+
+def generate_request_batch(scenarios, seed: int = 0, *,
+                           independent_streams: bool = True
+                           ) -> List[List[Request]]:
+    """One request list per lane. ``scenarios`` is a sequence of
+    :func:`generate_requests` kwargs dicts (without ``seed``); with
+    ``independent_streams`` each lane draws from its own
+    :func:`spawn_seeds` child stream, otherwise every lane reuses ``seed``
+    verbatim (the serving study does this so its batched and sequential
+    paths feed identical scenarios)."""
+    scenarios = list(scenarios)
+    seeds = (spawn_seeds(seed, len(scenarios)) if independent_streams
+             else [seed] * len(scenarios))
+    return [generate_requests(**sc, seed=s)
+            for sc, s in zip(scenarios, seeds)]

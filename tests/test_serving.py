@@ -18,6 +18,7 @@ from repro.core import MemSimConfig, simulate_fast, stats
 from repro.perfmodel.effective_bw import (
     cxl_tier_point,
     saturation_knee,
+    serving_row,
     serving_study,
 )
 from repro.serving import (
@@ -26,6 +27,8 @@ from repro.serving import (
     ServingConfig,
     generate_requests,
     run_serving,
+    run_serving_batched,
+    spawn_seeds,
 )
 from repro.serving.workload import ARRIVAL_PROCESSES, MIXTURES
 from repro.traces.io import load_trace, save_session_trace
@@ -224,6 +227,69 @@ def test_saturation_knee_detection():
     assert saturation_knee([1, 2, 4], [10, 20, 40]) is None  # still linear
     assert saturation_knee([1, 2, 4], [10, 19, 22]) == 4.0
     assert saturation_knee([1, 2, 4], [10, 12, 13]) == 2.0
+
+
+def test_all_blocked_lane_flags_nan_not_raise():
+    """Satellite bugfix (ISSUE 10): an idle lane — zero completions for a
+    whole study point — must flag NaN per the _mean_std convention, not
+    raise, and must not report a bogus saturation knee."""
+    # a KV pool too small for the only request's prompt: can_admit never
+    # holds, nothing is ever emitted or completed
+    pager = KVPager(num_blocks=2, block_words=64, words_per_token=16)
+    reqs = [Request(rid=0, arrival=0, prompt_tokens=1000, decode_tokens=4)]
+    res = run_serving(dram_cfg(), reqs, ServingConfig(max_batch=2),
+                      pager=pager, window_cycles=200, capacity=1024,
+                      max_cycles=1_000)
+    assert res.completed == 0 and res.tokens == 0
+    row = serving_row("dram", "chat", 1.0, res)
+    assert row["queueing"]["n"] == 0 and np.isnan(row["queueing"]["p95"])
+    assert np.isnan(row["service"]["p50"])
+    # a run whose loop never opened a window: every trajectory empty
+    res0 = run_serving(dram_cfg(), reqs, ServingConfig(max_batch=2),
+                       window_cycles=200, capacity=1024, max_cycles=0)
+    row0 = serving_row("dram", "chat", 1.0, res0)
+    assert np.isnan(row0["admitted_batch_mean"])
+    assert np.isnan(row0["batch_target_mean"])
+    # an all-idle throughput curve has NO knee (0 -> 0 is no evidence of
+    # saturation), and non-finite points carry no evidence either
+    assert saturation_knee([1, 2, 4], [0.0, 0.0, 0.0]) is None
+    assert saturation_knee([1, 2], [float("nan"), 5.0]) is None
+
+
+def test_run_serving_batched_bit_identical_to_sequential():
+    """The ISSUE 10 tentpole contract at the serving layer: every lane of
+    the batched closed loop — completions, tokens, per-request latencies,
+    the whole AIMD trajectory, the exit cycle, and the underlying session
+    records — equals its sequential run_serving twin."""
+    cfg = dram_cfg()
+    sc = ServingConfig(max_batch=4)
+    lists = [generate_requests(rate_per_kcycle=r, horizon=3_000, seed=s)
+             for r, s in zip((0.5, 2.0, 4.0), spawn_seeds(11, 3))]
+    seq = [run_serving(cfg, reqs, sc, window_cycles=400, capacity=16384)
+           for reqs in lists]
+    timings = {}
+    bat = run_serving_batched(cfg, lists, sc, window_cycles=400,
+                              capacity=16384, timings=timings)
+    for i, (a, b) in enumerate(zip(seq, bat)):
+        assert (a.completed, a.tokens, a.cycles) == \
+               (b.completed, b.tokens, b.cycles), i
+        assert a.admitted_batch == b.admitted_batch, i
+        assert a.batch_target == b.batch_target, i
+        np.testing.assert_array_equal(a.queueing, b.queueing)
+        np.testing.assert_array_equal(a.service, b.service)
+        ra, rb = a.session.result(), b.session.result()
+        for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+            np.testing.assert_array_equal(
+                getattr(ra, f), getattr(rb, f), err_msg=f"lane {i}: {f}")
+    # ONE batched windowed program served every lane and window
+    assert timings["compiles"] <= 1
+
+
+def test_serving_study_batched_matches_sequential_rows():
+    kw = dict(loads=(1.0, 4.0), horizon=3_000, window_cycles=400)
+    rows_b = serving_study(**kw)                     # batch_lanes default
+    rows_s = serving_study(batch_lanes=False, **kw)
+    assert rows_b == rows_s, "lane-batched study rows must be bit-identical"
 
 
 def test_serving_study_smoke():

@@ -1,0 +1,293 @@
+"""Lane-batched windowed sessions: the per-lane exactness + one-compile
+contracts (ISSUE 10 tentpole).
+
+The batch claim extends the session claim: the shared clock's joint-min
+skip and the window cap both only *shrink* the jump, and executing a
+provably inert cycle equals skipping it — so lane ``i`` of a
+:class:`repro.core.SessionBatch` must be bit-identical (records, counters,
+blocked totals) to a standalone :class:`repro.core.SimSession` replaying
+the same arrivals through the same window partition, for EVERY partition
+(window=1, strides cutting refresh/SREF seams and DVFS segment
+boundaries), with ragged per-lane arrival counts (including an empty
+lane), heterogeneous per-lane schedules/queue limits, and on all three
+FSM backends. Plus the compile contract: ONE XLA compile per
+(topology, capacity, lane count, segment count) across all windows and
+batches.
+
+Both execution modes carry the contract: ``"vmap"`` (shared clock,
+joint-min skip — the accelerator path) and ``"lanes"`` (``lax.map`` of
+the single-lane engine, independent per-lane skipping — the CPU default
+via ``"auto"``), so the partition/heterogeneity/compile tests
+parametrize over them.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MemSimConfig, SessionBatch, SimSession
+from repro.core.engine import _sched_i32, lane_schedule
+from repro.traces import BENCHMARKS
+
+BACKEND = os.environ.get("MEMSIM_FSM_BACKEND", "jnp")
+
+_SEAM_KW = dict(tREFI=900, tRFC=120, sref_idle_cycles=60)
+
+_SPEC = [
+    (0, {}),
+    (137, {"tCL": 20, "tRCDRD": 18, "tRCDWR": 19, "tREFI": 700}),
+    (400, {"tCL": 26, "tCCDL": 4, "tWTR": 10, "tREFI": 600,
+           "sref_idle_cycles": 45}),
+    (900, {"tCL": 28, "tRP": 18, "tREFI": 450, "tRFC": 100}),
+]
+
+HORIZON = 1_200
+
+
+def seam_cfg(**kw):
+    return MemSimConfig(queue_size=32, fsm_backend=BACKEND, **_SEAM_KW,
+                        **kw)
+
+
+def trace_arrays(n=24, gap=4):
+    tr = BENCHMARKS["trace_example"](n=n, gap=gap)
+    return (np.asarray(tr.t), np.asarray(tr.addr),
+            np.asarray(tr.is_write), np.asarray(tr.wdata))
+
+
+def lane_payloads():
+    """Ragged per-lane arrivals: full seam trace, a half-length prefix,
+    and an empty lane (arrives nothing, idles through refresh/SREF)."""
+    t, a, w, wd = trace_arrays()
+    half = t.size // 2
+    return [(t, a, w, wd), (t[:half], a[:half], w[:half], wd[:half]), None]
+
+
+def assert_lane_identical(ref, lane, label=""):
+    for f in ("t_admit", "t_dispatch", "t_start", "t_complete", "rdata"):
+        np.testing.assert_array_equal(
+            getattr(ref, f), getattr(lane, f), err_msg=f"{label}: {f}")
+    for k in ref.counters:
+        np.testing.assert_array_equal(
+            np.asarray(ref.counters[k]), np.asarray(lane.counters[k]),
+            err_msg=f"{label}: counter {k}")
+    assert ref.blocked_arrival == lane.blocked_arrival, label
+    assert ref.blocked_dispatch == lane.blocked_dispatch, label
+
+
+def run_pair(cfg, payloads, horizon, window, *, params=None,
+             queue_size=None, capacity=64, timings=None,
+             batch_mode="auto"):
+    """The batched run and its L sequential twins over the same window
+    partition; returns (batch, [session, ...]). Heterogeneous per-lane
+    schedules pad to the common segment count inside the batch, so the
+    sequential twin replays the SAME padded schedule — padding rows are
+    inert by construction, and this keeps the per-segment attribution
+    counters shape-comparable."""
+    lanes = len(payloads)
+    batch = SessionBatch.open(cfg, lanes, capacity=capacity, params=params,
+                              queue_size=queue_size, timings=timings,
+                              batch_mode=batch_mode)
+    if isinstance(params, list):
+        scheds = [_sched_i32(cfg.runtime() if p is None else p)
+                  for p in params]
+        s_max = max(sc.num_segments for sc in scheds)
+        seq_params = [sc.pad_to(s_max) for sc in scheds]
+    else:
+        seq_params = [params] * lanes
+    seqs = []
+    for i, payload in enumerate(payloads):
+        if payload is not None:
+            batch.append(i, payload)
+        q = queue_size[i] if isinstance(queue_size, list) else queue_size
+        s = SimSession.open(cfg, capacity=capacity, params=seq_params[i],
+                            queue_size=q)
+        if payload is not None:
+            s.append(payload)
+        seqs.append(s)
+    batch.run_until(horizon, window)
+    for s in seqs:
+        s.run_until(horizon, window)
+    return batch, seqs
+
+
+# --------------------------------------------------------------------------
+# batched vs sequential bit-exactness
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch_mode", ["lanes", "vmap"])
+@pytest.mark.parametrize("window", [1, 7, 113, HORIZON])
+def test_batched_window_partition_bit_identical(window, batch_mode):
+    """Every window partition — one-cycle windows, a prime stride cutting
+    refresh windows and SREF crossings, the whole-horizon window — with
+    ragged per-lane arrivals including an all-idle lane, in both
+    execution modes."""
+    if window == 1 and os.environ.get("MEMSIM_SMOKE"):
+        window = 3  # 1-cycle windows x1200 dispatches: too slow for smoke
+    batch, seqs = run_pair(seam_cfg(), lane_payloads(), HORIZON, window,
+                           batch_mode=batch_mode)
+    assert batch.cycle == HORIZON
+    for i, s in enumerate(seqs):
+        assert_lane_identical(s.result(), batch.lane_result(i),
+                              f"{batch_mode} window={window} lane={i}")
+
+
+@pytest.mark.parametrize("batch_mode", ["lanes", "vmap"])
+def test_heterogeneous_schedules_and_limits_bit_identical(batch_mode):
+    """Lanes of one batch carry different ParamSchedules (a 4-segment DVFS
+    schedule next to constant-parameter lanes — heterogeneous S pads to
+    the common count) and different runtime queue limits, with windows
+    cutting the DVFS boundaries at 137/400/900."""
+    cfg = seam_cfg()
+    params = [None, lane_schedule(cfg, _SPEC), None]
+    queue_size = [8, 16, 6]
+    batch, seqs = run_pair(cfg, lane_payloads(), HORIZON, 113,
+                           params=params, queue_size=queue_size,
+                           batch_mode=batch_mode)
+    for i, s in enumerate(seqs):
+        assert_lane_identical(s.result(), batch.lane_result(i),
+                              f"{batch_mode} dvfs lane={i}")
+
+
+def test_lanes_mode_reports_per_lane_steps():
+    """"lanes" mode keeps independent per-lane clocks, so even the
+    executed-step metadata matches the standalone session window for
+    window (the vmap mode's shared clock only preserves state, not step
+    counts)."""
+    cfg = seam_cfg()
+    batch = SessionBatch.open(cfg, 2, capacity=64, batch_mode="lanes")
+    ses = SimSession.open(cfg, capacity=64)
+    t, a, w, wd = trace_arrays()
+    batch.append(0, (t, a, w, wd))
+    ses.append((t, a, w, wd))
+    while batch.cycle < HORIZON:
+        reps = batch.advance(113)
+        rep = ses.advance(113)
+        assert reps[0].steps == rep.steps
+
+
+def test_incremental_ragged_appends_bit_identical():
+    """Arrivals revealed mid-run on SOME lanes only (the closed-loop
+    shape: each window a different subset of lanes has new traffic)."""
+    t, a, w, wd = trace_arrays()
+    half = t.size // 2
+    cut = int(t[half]) - 1
+    cfg = seam_cfg()
+
+    batch = SessionBatch.open(cfg, 2, capacity=64)
+    s0 = SimSession.open(cfg, capacity=64)
+    s1 = SimSession.open(cfg, capacity=64)
+    first = (t[:half], a[:half], w[:half], wd[:half])
+    second = (t[half:], a[half:], w[half:], wd[half:])
+    batch.append(0, first)
+    batch.append(1, first)
+    s0.append(first)
+    s1.append(first)
+    batch.run_until(cut, 97)
+    s0.run_until(cut, 97)
+    s1.run_until(cut, 97)
+    batch.append(1, second)  # lane 1 only — lane 0 stays half-fed
+    s1.append(second)
+    batch.run_until(HORIZON, 97)
+    s0.run_until(HORIZON, 97)
+    s1.run_until(HORIZON, 97)
+    assert_lane_identical(s0.result(), batch.lane_result(0), "lane 0")
+    assert_lane_identical(s1.result(), batch.lane_result(1), "lane 1")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "fused"])
+def test_batched_bit_identical_every_backend(backend):
+    """The exactness contract on all three FSM backends (the module
+    default runs the CI matrix backend; this pins the other two too)."""
+    cfg = MemSimConfig(queue_size=32, fsm_backend=backend, **_SEAM_KW)
+    batch, seqs = run_pair(cfg, lane_payloads(), 600, 97,
+                           params=[None, lane_schedule(cfg, _SPEC), None])
+    for i, s in enumerate(seqs):
+        assert_lane_identical(s.result(), batch.lane_result(i),
+                              f"{backend} lane={i}")
+
+
+# --------------------------------------------------------------------------
+# reports and the one-compile contract
+# --------------------------------------------------------------------------
+
+def test_batched_reports_match_single_session_reports():
+    """Every per-window report field a serving scheduler reads must match
+    the standalone session's report, lane by lane, window by window (the
+    batch builds them all from ONE stacked device_get)."""
+    cfg = seam_cfg()
+    payloads = lane_payloads()
+    batch = SessionBatch.open(cfg, len(payloads), capacity=64)
+    seqs = []
+    for i, payload in enumerate(payloads):
+        if payload is not None:
+            batch.append(i, payload)
+        s = SimSession.open(cfg, capacity=64)
+        if payload is not None:
+            s.append(payload)
+        seqs.append(s)
+    for per_window in batch.run_until(HORIZON, 200):
+        for i, s in enumerate(seqs):
+            rep = s.advance(200)
+            got = per_window[i]
+            np.testing.assert_array_equal(rep.completed_ids,
+                                          got.completed_ids)
+            np.testing.assert_array_equal(rep.completed_at, got.completed_at)
+            for f in ("t_start", "t_end", "req_q_len", "resp_q_len",
+                      "admitted", "arrivals_total", "blocked_arrival"):
+                assert getattr(rep, f) == getattr(got, f), (i, f)
+
+
+@pytest.mark.parametrize("batch_mode", ["lanes", "vmap"])
+def test_one_compile_across_windows_and_batches(batch_mode):
+    # capacity=192 is unique to this module, so the global AOT cache
+    # cannot have been warmed by another test's batches of these shapes
+    # (the two modes are distinct jitted programs, so neither warms the
+    # other either)
+    cfg = seam_cfg()
+    timings = {}
+    batch = SessionBatch.open(cfg, 3, capacity=192, timings=timings,
+                              batch_mode=batch_mode)
+    for i, payload in enumerate(lane_payloads()):
+        if payload is not None:
+            batch.append(i, payload)
+    batch.run_until(HORIZON, 113)
+    assert timings["compiles"] == 1, timings
+    # a second batch of the same shapes reuses the compiled program even
+    # with a different window stride
+    b2 = SessionBatch.open(cfg, 3, capacity=192, timings=timings,
+                           batch_mode=batch_mode)
+    b2.run_until(HORIZON, 59)
+    assert timings["compiles"] == 1, timings
+    # a different topology is a fresh program
+    b3 = SessionBatch.open(MemSimConfig(channels=2, queue_size=32,
+                                        fsm_backend=BACKEND, **_SEAM_KW),
+                           3, capacity=192, timings=timings,
+                           batch_mode=batch_mode)
+    b3.run_until(HORIZON, 113)
+    assert timings["compiles"] == 2, timings
+
+
+# --------------------------------------------------------------------------
+# surface contracts
+# --------------------------------------------------------------------------
+
+def test_batch_option_validation():
+    cfg = seam_cfg()
+    with pytest.raises(ValueError, match="lanes"):
+        SessionBatch.open(cfg, 0)
+    with pytest.raises(ValueError, match="batch_mode"):
+        SessionBatch.open(cfg, 2, batch_mode="threads")
+    with pytest.raises(ValueError, match="entries"):
+        SessionBatch.open(cfg, 3, queue_size=[8, 8])
+    with pytest.raises(ValueError, match="queue_size"):
+        SessionBatch.open(cfg, 2, queue_size=[8, 99])
+    batch = SessionBatch.open(cfg, 2, capacity=8)
+    with pytest.raises(ValueError, match="lane"):
+        batch.append(5, (np.asarray([3]), np.asarray([1]), np.asarray([0])))
+    with pytest.raises(ValueError, match="capacity"):
+        batch.append(0, (np.full(9, 30), np.arange(9),
+                         np.zeros(9, np.int64)))
+    with pytest.raises(ValueError, match="entries"):
+        batch.advance(10, [None])
